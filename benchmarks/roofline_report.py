@@ -1,0 +1,69 @@
+"""Assemble the §Roofline table from the dry-run JSON results.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        [--results benchmarks/results/dryrun] [--mesh pod] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+HEADERS = ["arch", "shape", "t_compute", "t_memory", "t_collective",
+           "bottleneck", "mfu_bound", "useful_flop_frac",
+           "compile_s"]
+
+
+def load_results(results_dir: str, mesh: str = "pod") -> list:
+    rows = []
+    for f in sorted(os.listdir(results_dir)):
+        if not f.endswith(f"__{mesh}.json"):
+            continue
+        with open(os.path.join(results_dir, f)) as fh:
+            r = json.load(fh)
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r: dict) -> dict:
+    if r["status"] == "skipped":
+        return {"arch": r["arch"], "shape": r["shape"],
+                "status": f"skipped ({r['reason'][:40]})"}
+    return {
+        "arch": r["arch"], "shape": r["shape"],
+        "t_compute": f"{r['t_compute']:.3e}",
+        "t_memory": f"{r['t_memory']:.3e}",
+        "t_collective": f"{r['t_collective']:.3e}",
+        "bottleneck": r["bottleneck"],
+        "mfu_bound": (f"{r['mfu_bound']:.3f}"
+                      if r.get("mfu_bound") is not None else "-"),
+        "useful_flop_frac": (f"{r['useful_flop_frac']:.3f}"
+                             if r.get("useful_flop_frac") else "-"),
+        "compile_s": r.get("compile_s", "-"),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="benchmarks/results/dryrun")
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+    rows = [fmt_row(r) for r in load_results(args.results, args.mesh)]
+    if args.markdown:
+        cols = ["arch", "shape", "t_compute", "t_memory", "t_collective",
+                "bottleneck", "mfu_bound", "useful_flop_frac"]
+        print("| " + " | ".join(cols) + " |")
+        print("|" + "---|" * len(cols))
+        for r in rows:
+            print("| " + " | ".join(str(r.get(c, "-")) for c in cols)
+                  + " |")
+    else:
+        for r in rows:
+            print(",".join(str(r.get(c, "-")) for c in HEADERS))
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

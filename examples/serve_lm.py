@@ -1,0 +1,22 @@
+"""Batched serving demo: prefill + greedy decode through the KV-cache
+decode path (the same serve_step the multi-pod dry-run lowers at
+decode_32k / long_500k scale).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch gemma3-1b]
+
+gemma3's 5:1 local:global pattern exercises the ring-buffer local caches.
+"""
+import argparse
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    args, _ = ap.parse_known_args()
+    sys.exit(serve_main([
+        "--arch", args.arch, "--reduced",
+        "--batch", "4", "--prompt-len", "24", "--gen", "24",
+    ]))

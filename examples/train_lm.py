@@ -1,0 +1,29 @@
+"""End-to-end training driver: a ~20M-param qwen3-family model trained for
+a few hundred steps on CPU with checkpointing — the same code path the
+production launcher uses at pod scale.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Loss trajectory is printed every 20 steps; on the learnable "cyclic"
+stream CE should fall well below the ln(vocab) random floor.
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args, _ = ap.parse_known_args()
+    sys.exit(train_main([
+        "--arch", "qwen3-0.6b", "--reduced",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128",
+        "--lr", "1e-3",
+        "--ckpt-dir", "/tmp/repro_train_lm",
+        "--ckpt-every", "100",
+        "--log-every", "20",
+        "--data-pattern", "cyclic",
+    ]))

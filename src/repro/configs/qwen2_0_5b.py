@@ -1,0 +1,11 @@
+"""qwen2-0.5b [dense] — GQA with QKV bias, tied embeddings
+[arXiv:2407.10671; hf]."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b", family="dense",
+    n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+    d_ff=4864, vocab_size=151936,
+    qkv_bias=True, tie_embeddings=True,
+    rope_theta=1e6,
+)

@@ -1,0 +1,43 @@
+"""Core library: DPconv — join ordering via fast subset convolution.
+
+Implements the algorithmic contribution of
+
+    "DPconv: Super-Polynomially Faster Join Ordering"
+    (Stoian & Kipf, 2024)
+
+as vectorized JAX programs over the subset lattice:
+
+- ``zeta``        : zeta / Moebius transforms (Yates' algorithm, butterfly and
+                    kron-matmul forms — the latter is the TPU/MXU-native form).
+- ``fsc``         : fast subset convolution in the (+, *) ring (ranked).
+- ``layered``     : layered dynamic programming (paper Sec. 5) — the O(n)-factor
+                    shaving with cached layer-wise zeta transforms.
+- ``dpconv_max``  : Alg. 3 — O(2^n n^3) C_max optimization via binary search +
+                    boolean feasibility FSC.  Includes a beyond-paper
+                    batched-gamma variant.
+- ``dpconv_out``  : exact C_out via the polynomial-embedding technique
+                    (Sec. 3.2/3.3), FFT-based; practical only for small W, as
+                    the paper itself notes.
+- ``approx``      : (1+eps)-approximate C_out via geometric value bucketing
+                    (Sec. 7 in spirit; see DESIGN.md for the deviation note).
+- ``ccap``        : C_cap — DPconv[max] first pass + pruned C_out second pass
+                    (paper Sec. 8).
+- ``baselines``   : DPsize / DPsub (vectorized numpy) for [out] and [max],
+                    including the pruned variants — the paper's competitors.
+- ``dpccp``       : DPccp csg-cmp-pair enumeration (Moerkotte & Neumann 2006).
+- ``jointree``    : Alg. 2 — optimal bushy join tree extraction from the
+                    DP table.
+- ``querygraph``  : query graphs (clique/chain/star/cycle/JOB-like, hyperedges)
+                    and the submultiplicative cardinality generator used in the
+                    paper's evaluation (c(S) <= c(S1) * c(S2)).
+
+Exact counting inside the boolean feasibility FSC requires integers up to
+~2^(2n); we therefore enable x64 here.  All model/runtime code elsewhere in
+the repo uses explicit dtypes and is unaffected.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.querygraph import QueryGraph  # noqa: E402,F401
+from repro.core.jointree import JoinTree  # noqa: E402,F401

@@ -1,0 +1,122 @@
+"""(1+eps)-approximate C_out (paper Sec. 7).
+
+The paper obtains Õ(2^{3n/2}/sqrt(eps)) by citing Stoian's approximate
+min-sum subset convolution [45], itself built on the Bringmann et al.
+scaling framework — which the paper notes is "hard to have an immediate
+practical algorithm" out of (Sec. 11).
+
+We implement the *practical member of the same framework*: layered
+scale-and-round.  Each DP layer's (min,+) subset convolution is
+approximated by
+
+  for each magnitude class m (covering results in (2^{m-1}, 2^m]):
+      quantize admitted values (<= 2^m) with step s_m = eps' 2^{m-1},
+      run the EXACT FFT-embedded FSC on the small-integer exponents
+      (coefficient dimension D = O(1/eps'), independent of W),
+      rescale the min exponent by s_m;
+  take the best class.
+
+Ceil-rounding makes every class an over-estimate, and the class matching
+the true optimum's magnitude over-estimates by <= 2 s_m <= 2 eps' * true,
+so each layer is a (1+2 eps')-approximation; with eps' = eps / (3 (n-1))
+the composed factor (Thm. 7.2) is (1+2eps')^{n-1} <= e^{2eps/3} <= 1+eps
+for eps <= 1.
+
+Running time: O(2^n n^2 * L * D log D) with L = O(log(W n)) classes and
+D = O(n/eps) — unlike exact DPconv[out], *independent of W* except for the
+log factor, which is the property the paper's Sec. 7 result is after.  The
+trade-off versus the cited Õ(2^{3n/2}/sqrt(eps)) bound is documented in
+DESIGN.md §Deviations.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.bitset import popcounts
+from repro.core.zeta import zeta, mobius
+
+
+def approx_out(card: np.ndarray, n: int, eps: float = 0.25,
+               cost: str = "out"):
+    """(1+eps)-approximate C_out (or C_smj) optimum.
+    Returns (value, dp_table).
+
+    Guarantee: true_opt <= value <= (1+eps) * true_opt.
+
+    cost = "smj" exercises the paper's Sec. 3.5 extension: the additively-
+    separable sort-merge term σ = c·log2(c) is *sunk* into each DP entry
+    before the convolution (FSC(DP + σ)), and no own-term is added after.
+    """
+    if eps <= 0:
+        raise ValueError("eps must be positive")
+    size = 1 << n
+    pc = popcounts(n)
+    card = np.asarray(card, np.float64)
+    if cost == "smj":
+        sink = card * np.log2(np.maximum(card, 2.0))
+        own = np.zeros(size)
+    elif cost == "out":
+        sink = np.zeros(size)
+        own = card
+    else:
+        raise ValueError(cost)
+
+    eps_p = eps / (3.0 * max(n - 1, 1))
+    d_slots = int(math.ceil(2.0 / eps_p)) + 2     # exponents per class
+    fft_len = 1
+    while fft_len < 2 * d_slots + 1:
+        fft_len *= 2
+    n_freq = fft_len // 2 + 1
+    freqs = jnp.arange(n_freq, dtype=jnp.float64)
+
+    dp = np.zeros(size, np.float64)               # approximate DP values
+    dp[pc == 0] = np.inf
+    dp[pc >= 2] = np.inf                          # not yet computed
+
+    def ranked_class_conv(k: int, m: int) -> np.ndarray:
+        """Approx min_{T} v[T]+v[S\\T], v = dp + sink, for |S|=k in class m;
+        inf where no admitted split exists."""
+        s_m = eps_p * (2.0 ** (m - 1))
+        lim = 2.0 ** m
+        v = dp + sink
+        admit = v <= lim
+        q = np.ceil(np.where(admit, v, 0.0) / s_m)        # integer exponents
+        q = np.minimum(q, d_slots - 1)
+        phase = np.exp(-2j * np.pi * np.outer(q, np.arange(n_freq))
+                       / fft_len)
+        phase = np.where(admit[:, None], phase, 0.0)
+        acc = jnp.zeros((size, n_freq), jnp.complex128)
+        zf = {}
+        for d in range(1, k):
+            layer = (pc == d) & admit
+            ph = jnp.asarray(np.where(layer[:, None], phase, 0.0))
+            zf[d] = zeta(ph.T).T
+        for d in range(1, (k - 1) // 2 + 1):
+            acc = acc + zf[d] * zf[k - d]
+        acc = acc * 2.0
+        if k % 2 == 0:
+            acc = acc + zf[k // 2] * zf[k // 2]
+        h = mobius(acc.T).T
+        coeffs = np.asarray(jnp.fft.irfft(h, n=fft_len, axis=-1))
+        present = coeffs > 0.5
+        has = present.any(axis=-1)
+        minexp = np.argmax(present, axis=-1)
+        return np.where(has, minexp * s_m, np.inf)
+
+    vmax_layer = (card[pc >= 2].max() if n >= 2 else 1.0) + sink.max()
+    for k in range(2, n + 1):
+        vv = dp + sink
+        finite = vv[np.isfinite(vv) & (vv > 0)]
+        lo_val = max(finite.min() if finite.size else 1.0, 1e-9)
+        hi_val = (finite.max() if finite.size else 1.0) * 2 + vmax_layer * k
+        m_lo = int(math.floor(math.log2(max(lo_val, 1e-9))))
+        m_hi = int(math.ceil(math.log2(hi_val))) + 1
+        best = np.full(size, np.inf)
+        for m in range(m_lo, m_hi + 1):
+            best = np.minimum(best, ranked_class_conv(k, m))
+        sel = pc == k
+        dp[sel] = best[sel] + own[sel]
+    return float(dp[size - 1]), dp

@@ -1,0 +1,71 @@
+"""C_cap — joint optimization of C_out and C_max (paper Sec. 8).
+
+Minimize the sum of intermediate join sizes subject to the largest one
+being (at most) the optimal C_max value:
+
+  pass 1: optimal gamma* = C_max optimum      (DPconv[max] — Alg. 3)
+  pass 2: pruned C_out optimization: any set S with c(S) > gamma* is
+          infeasible (DPsub[out] / DPccp[out] with prune_gamma).
+
+The paper's headline (Fig. 8): with DPconv[max] in pass 1, C_cap
+optimization becomes *faster* than a vanilla C_out optimization for large
+cliques, because pass 1 is O(2^n n^3) and pass 2 enjoys a pruned search
+space.
+
+``gamma_slack`` > 1 implements the Sec. 11 discussion (resource-aware
+trade-off): cap at gamma = slack * gamma* instead of the optimum, trading
+memory headroom for a better C_out.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.querygraph import QueryGraph
+from repro.core.dpconv_max import dpconv_max
+from repro.core.baselines import dpsub, dpsub_max
+from repro.core.dpccp import dpccp
+from repro.core import jointree
+
+
+@dataclasses.dataclass
+class CcapResult:
+    gamma: float            # the cap (= optimal C_max when slack == 1)
+    cout: float             # optimal C_out subject to the cap
+    tree: "jointree.JoinTree | None"
+    passes: dict            # diagnostics
+
+
+def ccap(
+    q: QueryGraph,
+    card: np.ndarray,
+    engine_pass1: str = "dpconv",      # "dpconv" (paper) | "dpsub" (naive)
+    engine_pass2: str = "dpsub",       # "dpsub" | "dpccp"
+    gamma_slack: float = 1.0,
+    extract_tree: bool = True,
+) -> CcapResult:
+    n = q.n
+    diagnostics = {}
+    if engine_pass1 == "dpconv":
+        res = dpconv_max(q, card, extract_tree=False)
+        gamma = res.optimum
+        diagnostics["pass1_fsc_passes"] = res.feasibility_passes
+    elif engine_pass1 == "dpsub":
+        gamma = float(dpsub_max(card, n)[-1])
+    else:
+        raise ValueError(engine_pass1)
+    gamma = gamma * gamma_slack
+
+    if engine_pass2 == "dpsub":
+        dp = dpsub(card, n, mode="out", prune_gamma=gamma)
+    elif engine_pass2 == "dpccp":
+        dp, nccp = dpccp(q, card, mode="out", prune_gamma=gamma)
+        diagnostics["pass2_ccp"] = nccp
+    else:
+        raise ValueError(engine_pass2)
+
+    cout = float(dp[-1])
+    assert np.isfinite(cout), "cap infeasible — gamma below C_max optimum?"
+    tree = jointree.extract_tree_out(dp, card, n) if extract_tree else None
+    return CcapResult(gamma=gamma, cout=cout, tree=tree, passes=diagnostics)

@@ -1,0 +1,77 @@
+"""Unified DPconv façade (Alg. 1 of the paper, instantiated per cost fn).
+
+Single entry point used by the planner, examples and benchmarks:
+
+    result = optimize(q, card, cost="max")       # DPconv[max], Alg. 3
+    result = optimize(q, card, cost="out")       # exact C_out (small W!)
+    result = optimize(q, card, cost="out", method="approx", eps=0.25)
+    result = optimize(q, card, cost="cap")       # C_cap, Sec. 8
+    result = optimize(q, card, cost="smj", method="approx")
+    result = optimize(q, card, cost="out", method="dpsub")   # baseline
+    result = optimize(q, card, cost="out", method="dpccp")   # baseline
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.querygraph import QueryGraph
+from repro.core import baselines, dpccp as dpccp_mod, jointree
+from repro.core.dpconv_max import dpconv_max
+from repro.core.dpconv_out import dpconv_out
+from repro.core.approx import approx_out
+from repro.core.ccap import ccap
+
+
+@dataclasses.dataclass
+class PlanResult:
+    cost: float
+    tree: "jointree.JoinTree | None"
+    meta: dict
+
+
+def optimize(q: QueryGraph, card: np.ndarray, cost: str = "max",
+             method: str = "dpconv", extract_tree: bool = True,
+             **kw) -> PlanResult:
+    n = q.n
+    if cost == "max":
+        if method == "dpconv":
+            r = dpconv_max(q, card, extract_tree=extract_tree, **kw)
+            return PlanResult(r.optimum, r.tree,
+                              {"passes": r.feasibility_passes})
+        if method == "dpsub":
+            dp = baselines.dpsub_max(card, n, **kw)
+            tree = jointree.extract_tree_max(dp, card, n) \
+                if extract_tree else None
+            return PlanResult(float(dp[-1]), tree, {})
+    if cost == "out":
+        if method == "dpconv":
+            out = dpconv_out(card, n, extract_tree=extract_tree)
+            tree = out[2] if extract_tree else None
+            return PlanResult(float(out[0]), tree, {})
+        if method == "approx":
+            val, dp = approx_out(card, n, cost="out", **kw)
+            return PlanResult(val, None, {"dp": dp})
+        if method == "dpsub":
+            dp = baselines.dpsub_out(card, n, **kw)
+            tree = jointree.extract_tree_out(dp, card, n) \
+                if extract_tree else None
+            return PlanResult(float(dp[-1]), tree, {})
+        if method == "dpccp":
+            dp, nccp = dpccp_mod.dpccp(q, card, mode="out", **kw)
+            tree = jointree.extract_tree_out(dp, card, n) \
+                if extract_tree else None
+            return PlanResult(float(dp[-1]), tree, {"ccp": nccp})
+    if cost == "cap":
+        r = ccap(q, card, extract_tree=extract_tree, **kw)
+        return PlanResult(r.cout, r.tree,
+                          {"gamma": r.gamma, **r.passes})
+    if cost == "smj":
+        if method == "approx":
+            val, dp = approx_out(card, n, cost="smj", **kw)
+            return PlanResult(val, None, {"dp": dp})
+        if method == "dpsub":
+            dp = baselines.dpsub(card, n, mode="smj", **kw)
+            return PlanResult(float(dp[-1]), None, {})
+    raise ValueError(f"unsupported (cost={cost}, method={method})")

@@ -1,0 +1,96 @@
+"""DPconv[out] — exact C_out via the polynomial-embedding technique
+(paper Sec. 3.2 / 3.3): O(2^n n^2 · W n log(W n)).
+
+The (min,+) semi-ring has no additive inverses, so FSC cannot run in it
+directly.  The embedding maps value v to the monomial x^v; subset
+convolution then runs in the ordinary (+,·) ring over polynomial values,
+where "+ at the exponent level" realizes the semi-ring ⊗ and "smallest
+exponent with non-zero coefficient" realizes the min.
+
+Implementation notes:
+  * Polynomials live in the Fourier domain throughout: both the lattice
+    zeta transform and the coefficient-axis FFT are linear, so they
+    commute — each ranked slice is stored as rfft(ζ(x^{DP}), axis=-1) and
+    the ranked convolution is a pointwise complex multiply.  This realizes
+    the paper's O(Wn log Wn) τ_out factor via one global FFT size instead
+    of per-pair convolution.
+  * The paper itself notes this algorithm is not practical for large W
+    (Sec. 9.1) — the coefficient dimension is the value range.  It is
+    exact, and we validate it against DPsub[out] on small-W instances; the
+    practical C_out path in this repo is C_cap (Sec. 8) and the (1+eps)
+    approximation (Sec. 7).
+
+Requires integral cardinalities (exponents index coefficient slots).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitset import popcounts
+from repro.core.zeta import zeta, mobius
+from repro.core import jointree
+
+
+def dpconv_out(card: np.ndarray, n: int, extract_tree: bool = False):
+    """Exact C_out optimum via FFT-embedded FSC.  ``card`` must be
+    non-negative integers (small W!).  Returns (optimum, dp_table[, tree])."""
+    size = 1 << n
+    card_i = np.asarray(card).astype(np.int64)
+    if not np.array_equal(card_i, np.asarray(card)):
+        raise ValueError("dpconv_out requires integral cardinalities")
+    pc = popcounts(n)
+    w = int(card_i[pc >= 2].max()) if n >= 2 else 0
+    dmax = w * max(n - 1, 1) + 1          # max possible DP value + 1
+    fft_len = 1
+    while fft_len < 2 * dmax + 1:
+        fft_len *= 2
+
+    pc_j = jnp.asarray(pc, jnp.int32)
+    card_j = jnp.asarray(card_i)
+
+    # Fourier-domain ranked zeta table: ZF[d] = rfft(zeta(x^{DP on layer d}))
+    n_freq = fft_len // 2 + 1
+    ZF = jnp.zeros((n + 1, size, n_freq), jnp.complex128)
+    dp = jnp.zeros(size, jnp.int64)       # DP values (exponents)
+
+    freqs = jnp.arange(n_freq, dtype=jnp.float64)
+
+    def embed_layer(dp_vals, layer_mask):
+        """rfft of x^{dp} on the layer, zeros elsewhere; then lattice zeta.
+        rfft of a one-hot at exponent e is exp(-2πi·f·e/fft_len)."""
+        phase = jnp.exp(-2j * jnp.pi * freqs[None, :]
+                        * dp_vals[:, None].astype(jnp.float64) / fft_len)
+        phase = jnp.where(layer_mask[:, None], phase, 0.0 + 0.0j)
+        return zeta(phase.T).T            # zeta over lattice axis
+
+    ZF = ZF.at[1].set(embed_layer(dp, pc_j == 1))
+
+    for k in range(2, n + 1):
+        acc = jnp.zeros((size, n_freq), jnp.complex128)
+        for d in range(1, (k - 1) // 2 + 1):
+            acc = acc + ZF[d] * ZF[k - d]
+        acc = acc * 2.0
+        if k % 2 == 0:
+            acc = acc + ZF[k // 2] * ZF[k // 2]
+        h = mobius(acc.T).T               # Moebius over lattice axis
+        coeffs = jnp.fft.irfft(h, n=fft_len, axis=-1)   # (size, fft_len)
+        present = coeffs > 0.5
+        # min exponent with nonzero coefficient
+        minexp = jnp.argmax(present, axis=-1)
+        layer = pc_j == k
+        vals = jnp.where(layer, minexp + card_j, 0).astype(jnp.int64)
+        dp = dp + vals
+        if k < n:
+            ZF = ZF.at[k].set(embed_layer(dp, layer))
+
+    dp_np = np.asarray(dp)
+    opt = int(dp_np[size - 1])
+    if extract_tree:
+        dpf = dp_np.astype(np.float64)
+        dpf[pc == 0] = np.inf
+        # sets never optimized (none here — full lattice) stay as-is
+        tree = jointree.extract_tree_out(dpf, card_i.astype(np.float64), n)
+        return opt, dp_np, tree
+    return opt, dp_np

@@ -1,0 +1,233 @@
+"""Layered dynamic programming (paper Sec. 5).
+
+FSC inside a DP recursion contains redundancy; the paper shaves an O(n)
+factor with two observations:
+
+(★)  at layer k only rank slice k of the convolution is consumed, and
+(★★) DP values for |S| < k never change after layer |S| — their zeta
+     transforms can be computed once and cached.
+
+This module implements the *counting / feasibility* instantiation of the
+layered engine — the inner loop of DPconv[max] (Alg. 3): all values are
+{0, 1} indicators, convolved in the (+,·) ring, thresholded back to
+indicators after every layer.  Exactness: with {0,1} layer inputs, every
+intermediate count is <= 2^{2n} < 2^53, exact in float64 up to n = 26.
+
+Implemented optimizations from the paper:
+  - layer-wise cached zeta transforms        (Sec. 5.1)
+  - layer-wise ranked convolution            (Sec. 5.2)
+  - symmetry halving  (f = g = DP)           (Sec. 5.2)
+  - small-layer direct evaluation            (Sec. 6, constant factor)
+  - final-layer shortcut: at k = n only DP(V) is needed, and the Moebius
+    transform evaluated at the single point V is a signed O(2^n) sum —
+    cheaper than a full butterfly.  (beyond-paper, documented in §Perf)
+
+Sec. 5.3 ("avoiding useless multiplications", |S| < max(d, k-d) pruning) is
+a sparse-iteration optimization that does not translate to dense vector
+lanes; see DESIGN.md §Hardware-adaptation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitset import popcounts, layer_indices, submask_table
+from repro.core.zeta import zeta, mobius
+
+
+# --------------------------------------------------------------------------
+# Direct evaluation of small layers (paper Sec. 6, constant-factor opt).
+# For layer k the FSC path costs O(2^n k) multiplies; direct enumeration
+# costs C(n,k) 2^k — far less for small k.  Index tables are static per
+# (n, k) and reused across jit traces.
+# --------------------------------------------------------------------------
+@functools.lru_cache(maxsize=128)
+def _direct_layer_indices(n: int, k: int):
+    """Static gather tables for direct evaluation of layer k.
+
+    Returns (sets, subs, comps): sets (m,) int64 masks with |S| = k;
+    subs/comps (m, 2^k) submask / complement-in-S tables.
+    """
+    sets = layer_indices(n)[k]
+    subs = submask_table(sets, k).T          # (m, 2^k)
+    comps = sets[:, None] & ~subs
+    # NB: keep these as numpy — jnp constants created inside a jit trace
+    # must not be cached across traces (tracer leak).
+    return (sets, subs, comps)
+
+
+def direct_layer_feasible(dp: jnp.ndarray, n: int, k: int) -> jnp.ndarray:
+    """Indicator over layer-k sets: exists a proper split T with
+    dp[T] > 0 and dp[S\\T] > 0.  Returns (m,) float in {0,1} aligned with
+    ``layer_indices(n)[k]``."""
+    _, subs, comps = _direct_layer_indices(n, k)
+    prod = dp[subs] * dp[comps]              # (m, 2^k)
+    # exclude T = empty / T = S: dp[empty] = 0 makes those terms vanish
+    return (jnp.sum(prod, axis=1) > 0.5).astype(dp.dtype)
+
+
+# --------------------------------------------------------------------------
+# The layered counting DP.
+# --------------------------------------------------------------------------
+def layered_feasibility_dp(
+    gate: jnp.ndarray,
+    n: int,
+    direct_layers: int = 4,
+    final_layer_shortcut: bool = True,
+) -> jnp.ndarray:
+    """Boolean DP over the lattice: a set S (|S| >= 2) is *feasible* iff
+    gate[S] and it splits into two disjoint feasible parts.  Singletons are
+    feasible.  Returns the (2^n,) feasibility indicator table (float64).
+
+    ``gate`` may carry leading batch axes (..., 2^n) — used by the
+    batched-gamma DPconv[max] variant; all lattice ops broadcast.
+    """
+    size = 1 << n
+    pc = jnp.asarray(popcounts(n), dtype=jnp.int32)
+    batch = gate.shape[:-1]
+    dtype = jnp.float64
+
+    dp = jnp.zeros(batch + (size,), dtype)
+    singles = (pc == 1).astype(dtype)
+    dp = dp + singles                        # broadcast over batch
+    # cached ranked zeta transforms: Z[d] = zeta(dp restricted to |S| = d)
+    Z = jnp.zeros((n + 1,) + batch + (size,), dtype)
+    Z = Z.at[1].set(zeta(singles * jnp.ones(batch + (size,), dtype)))
+
+    for k in range(2, n + 1):
+        last = (k == n) and final_layer_shortcut
+        if k <= direct_layers:
+            # direct path: gather-based split enumeration (broadcasts over
+            # any leading batch axes of dp)
+            sets, subs, comps = _direct_layer_indices(n, k)
+            prod = dp[..., subs] * dp[..., comps]     # (..., m, 2^k)
+            layer_ind = (jnp.sum(prod, axis=-1) > 0.5).astype(dtype)
+            layer_full = jnp.zeros(batch + (size,), dtype)
+            layer_full = layer_full.at[..., sets].set(layer_ind)
+            layer_full = layer_full * gate
+            # keep only |S| = k (gate may be dense)
+            layer_full = jnp.where(pc == k, layer_full, 0.0)
+        else:
+            # ranked convolution, symmetry-halved: conv_k = Σ_{d=1..k-1}
+            # Z[d] Z[k-d] = 2 Σ_{d<k/2} Z[d] Z[k-d] (+ Z[k/2]^2 if k even)
+            acc = jnp.zeros(batch + (size,), dtype)
+            for d in range(1, (k - 1) // 2 + 1):
+                acc = acc + Z[d] * Z[k - d]
+            acc = acc * 2.0
+            if k % 2 == 0:
+                acc = acc + Z[k // 2] * Z[k // 2]
+            if last:
+                # Moebius at the single point V: Σ_T (-1)^{n-|T|} conv[T]
+                sign = jnp.where((n - pc) % 2 == 0, 1.0, -1.0).astype(dtype)
+                count_v = jnp.sum(acc * sign, axis=-1)
+                feas_v = (count_v > 0.5).astype(dtype) * gate[..., -1]
+                return dp.at[..., -1].set(feas_v)
+            h = mobius(acc)
+            layer_full = jnp.where(pc == k, (h > 0.5).astype(dtype) * gate,
+                                   0.0)
+        dp = dp + layer_full
+        if k < n:
+            Z = Z.at[k].set(zeta(layer_full))
+    return dp
+
+
+# jit wrapper with static shape args
+layered_feasibility_dp_jit = jax.jit(
+    layered_feasibility_dp,
+    static_argnames=("n", "direct_layers", "final_layer_shortcut"),
+)
+
+
+# --------------------------------------------------------------------------
+# Incremental engine with early exit (§Perf iteration).
+#
+# Soundness of the abort: any feasible set of size k splits into parts
+# (a, k-a) whose larger part has size in [ceil(k/2), k-1].  So if every
+# layer in that window is empty, layer k — and inductively everything
+# above it — is empty, and DP(V) is infeasible.  Infeasible gamma probes
+# in Alg. 3's binary search typically die within a few layers, skipping
+# most of the O(2^n n^2) pass.
+# --------------------------------------------------------------------------
+def _one_layer_step(Z, dp, gate, n: int, k: int, direct_layers: int):
+    size = 1 << n
+    pc = jnp.asarray(popcounts(n), dtype=jnp.int32)
+    dtype = dp.dtype
+    if k <= direct_layers:
+        sets, subs, comps = _direct_layer_indices(n, k)
+        prod = dp[..., subs] * dp[..., comps]
+        layer_ind = (jnp.sum(prod, axis=-1) > 0.5).astype(dtype)
+        layer_full = jnp.zeros(dp.shape, dtype)
+        layer_full = layer_full.at[..., sets].set(layer_ind)
+        layer_full = jnp.where(pc == k, layer_full * gate, 0.0)
+    else:
+        acc = jnp.zeros(dp.shape, dtype)
+        for d in range(1, (k - 1) // 2 + 1):
+            acc = acc + Z[d] * Z[k - d]
+        acc = acc * 2.0
+        if k % 2 == 0:
+            acc = acc + Z[k // 2] * Z[k // 2]
+        if k == n:
+            sign = jnp.where((n - pc) % 2 == 0, 1.0, -1.0).astype(dtype)
+            count_v = jnp.sum(acc * sign, axis=-1)
+            feas_v = (count_v > 0.5).astype(dtype) * gate[..., -1]
+            dp = dp.at[..., -1].set(feas_v)
+            return Z, dp, feas_v > 0.5
+        h = mobius(acc)
+        layer_full = jnp.where(pc == k, (h > 0.5).astype(dtype) * gate,
+                               0.0)
+    dp = dp + layer_full
+    if k < n:
+        Z = Z.at[k].set(zeta(layer_full))
+    return Z, dp, jnp.any(layer_full > 0.5)
+
+
+_one_layer_step_jit = jax.jit(
+    _one_layer_step, static_argnames=("n", "k", "direct_layers"),
+    donate_argnums=(0, 1))
+
+
+def layered_feasibility_early_exit(gate: jnp.ndarray, n: int,
+                                   direct_layers: int = 4) -> bool:
+    """Feasibility of the full set V with the dyadic-window early abort.
+    Host-side layer loop (one device sync per layer)."""
+    size = 1 << n
+    pc = jnp.asarray(popcounts(n), dtype=jnp.int32)
+    dp = (pc == 1).astype(jnp.float64)
+    Z = jnp.zeros((n + 1, size), jnp.float64)
+    Z = Z.at[1].set(zeta(dp))
+    nonempty = [True] * 2 + [False] * (n - 1)     # index by layer size
+    for k in range(2, n + 1):
+        lo = (k + 1) // 2
+        if not any(nonempty[lo:k]):
+            return False                          # provably dead above
+        Z, dp, any_new = _one_layer_step_jit(Z, dp, gate, n, k,
+                                             direct_layers)
+        if k == n:
+            return bool(any_new)
+        nonempty[k] = bool(any_new)
+    return bool(dp[-1] > 0.5)
+
+
+# --------------------------------------------------------------------------
+# numpy reference for tests (naive O(3^n) feasibility DP, small n)
+# --------------------------------------------------------------------------
+def feasibility_dp_ref(gate: np.ndarray, n: int) -> np.ndarray:
+    size = 1 << n
+    pc = popcounts(n)
+    dp = np.zeros(size)
+    dp[pc == 1] = 1.0
+    for s in range(size):
+        if pc[s] < 2:
+            continue
+        ok = False
+        t = (s - 1) & s
+        while t:
+            if dp[t] > 0 and dp[s & ~t] > 0:
+                ok = True
+                break
+            t = (t - 1) & s
+        dp[s] = 1.0 if (ok and gate[s] > 0) else 0.0
+    return dp

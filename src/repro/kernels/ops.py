@@ -1,0 +1,44 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; TPU is
+the compilation target).  The wrappers also enforce the documented
+exactness envelopes for counting workloads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.zeta_pallas import zeta_pallas, mobius_pallas
+from repro.kernels.ranked_conv import ranked_conv_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# exactness envelopes (see zeta_pallas docstring / DESIGN.md)
+F32_EXACT_LIMIT = float(1 << 24)
+I32_EXACT_LIMIT = float(1 << 31)
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "interpret"))
+def zeta_op(f: jnp.ndarray, inverse: bool = False,
+            interpret: bool | None = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = _default_interpret()
+    return zeta_pallas(f, inverse=inverse, interpret=interpret)
+
+
+def mobius_op(f: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
+    return zeta_op(f, inverse=True, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def ranked_conv_op(Z: jnp.ndarray, k: int,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = _default_interpret()
+    return ranked_conv_pallas(Z, k, interpret=interpret)

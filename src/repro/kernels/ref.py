@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the semantics the kernels must reproduce bit-exactly (integer
+inputs) / to float tolerance (float inputs):
+
+  zeta_ref     — (ζf)(S) = Σ_{T⊆S} f(T)           over the last axis
+  mobius_ref   — inverse of zeta_ref
+  ranked_conv_ref — layer-k ranked convolution of a ranked zeta table
+                  (paper Eq. 11 with the Sec. 5.2 symmetry halving):
+                  acc = Σ_{d=1}^{k-1} Z[d] * Z[k-d]
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def zeta_ref(f: jnp.ndarray) -> jnp.ndarray:
+    size = f.shape[-1]
+    n = size.bit_length() - 1
+    batch = f.shape[:-1]
+    for j in range(n):
+        g = f.reshape(batch + (size // (2 << j), 2, 1 << j))
+        g = g.at[..., 1, :].add(g[..., 0, :])
+        f = g.reshape(batch + (size,))
+    return f
+
+
+def mobius_ref(f: jnp.ndarray) -> jnp.ndarray:
+    size = f.shape[-1]
+    n = size.bit_length() - 1
+    batch = f.shape[:-1]
+    for j in range(n):
+        g = f.reshape(batch + (size // (2 << j), 2, 1 << j))
+        g = g.at[..., 1, :].add(-g[..., 0, :])
+        f = g.reshape(batch + (size,))
+    return f
+
+
+def ranked_conv_ref(Z: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Z: (n+1, 2^n) ranked zeta table (f = g = DP).  Returns (2^n,)."""
+    acc = jnp.zeros_like(Z[0])
+    for d in range(1, (k - 1) // 2 + 1):
+        acc = acc + Z[d] * Z[k - d]
+    acc = acc * 2
+    if k % 2 == 0:
+        acc = acc + Z[k // 2] * Z[k // 2]
+    return acc

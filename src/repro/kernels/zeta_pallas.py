@@ -1,0 +1,161 @@
+"""Pallas TPU kernels for the subset-lattice zeta / Moebius transform.
+
+TPU-native decomposition of Yates' O(2^n n) butterfly (DESIGN.md
+§Hardware-adaptation):
+
+  view f as (ROWS, LANES) with LANES = 256  (index S = row * LANES + col)
+
+  * low  log2(LANES) bits — one (LANES × LANES) GEMM per row-tile with the
+    kron subset matrix  M[a, b] = [b ⊆ a]  (lower-triangular 0/1): runs on
+    the MXU, float32 path.  The int32 path uses in-register reshape
+    butterflies instead (MXU has no exact int32 product; see exactness
+    envelope below).
+  * middle bits (rows inside a block)  — sublane reshape butterflies in
+    VMEM, lane dimension untouched (stays LANES).
+  * high bits (across row-blocks)      — one pairing pass per bit: grid
+    over block pairs, the bit-set block is aliased in/out and accumulated
+    with its bit-clear partner (out = io ± partner).
+
+Exactness envelope (documented, asserted by ops.py):
+  float32 GEMM path   — exact while values stay < 2^24
+  int32 butterfly path — exact while values stay < 2^31
+  beyond that the f64 XLA path in ``repro.core.zeta`` is used (CPU) —
+  TPU would need two-limb emulation; see DESIGN.md.
+
+All kernels are written for TPU BlockSpec/VMEM tiling and validated with
+``interpret=True`` on CPU against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+LANES = 256
+
+
+@functools.lru_cache(maxsize=8)
+def _subset_matrix(bits: int, inverse: bool) -> np.ndarray:
+    size = 1 << bits
+    a = np.arange(size)[:, None]
+    b = np.arange(size)[None, :]
+    sub = (a & b) == b
+    if not inverse:
+        return sub.astype(np.float32)
+    pc = np.vectorize(lambda x: bin(x).count("1"))(a & ~b)
+    return np.where(sub, (-1.0) ** pc, 0.0).astype(np.float32)
+
+
+# --------------------------------------------------------------- kernel 1
+def _local_kernel(x_ref, m_ref, o_ref, *, row_bits: int, sign: float,
+                  use_matmul: bool):
+    """Zeta/Moebius over the low log2(LANES) + row_bits bits of a block."""
+    x = x_ref[...]                                   # (RB, LANES)
+    s = jnp.array(sign, x.dtype)                     # ±1 in the array dtype
+    if use_matmul:
+        # lane transform on the MXU: y[r, a] = Σ_b M[a, b] x[r, b]
+        x = jax.lax.dot_general(
+            x, m_ref[...],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=x.dtype)
+    else:
+        # lane transform via butterflies (int path)
+        for j in range(LANES.bit_length() - 1):
+            g = x.reshape(x.shape[0], LANES // (2 << j), 2, 1 << j)
+            g = g.at[:, :, 1, :].add(g[:, :, 0, :] * s)
+            x = g.reshape(x.shape[0], LANES)
+    rb = x.shape[0]
+    for j in range(row_bits):                        # sublane butterflies
+        g = x.reshape(rb // (2 << j), 2, 1 << j, LANES)
+        g = g.at[:, 1, :, :].add(g[:, 0, :, :] * s)
+        x = g.reshape(rb, LANES)
+    o_ref[...] = x
+
+
+def _local_pass(f2d: jnp.ndarray, row_block: int, sign: float,
+                inverse: bool, interpret: bool) -> jnp.ndarray:
+    rows = f2d.shape[0]
+    use_matmul = jnp.issubdtype(f2d.dtype, jnp.floating)
+    m = jnp.asarray(_subset_matrix(LANES.bit_length() - 1, inverse),
+                    f2d.dtype if use_matmul else jnp.float32)
+    grid = (rows // row_block,)
+    return pl.pallas_call(
+        functools.partial(_local_kernel,
+                          row_bits=row_block.bit_length() - 1,
+                          sign=sign, use_matmul=bool(use_matmul)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_block, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((LANES, LANES), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_block, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(f2d.shape, f2d.dtype),
+        interpret=interpret,
+    )(f2d, m)
+
+
+# --------------------------------------------------------------- kernel 2
+def _pair_kernel(own_ref, partner_ref, o_ref, *, block_bit: int,
+                 sign: float):
+    i = pl.program_id(0)
+    bit_set = ((i >> block_bit) & 1) == 1
+    coeff = jnp.where(bit_set, jnp.array(sign, own_ref.dtype),
+                      jnp.array(0, own_ref.dtype))
+    o_ref[...] = own_ref[...] + partner_ref[...] * coeff
+
+
+def _pair_pass(f2d: jnp.ndarray, row_block: int, block_bit: int,
+               sign: float, interpret: bool) -> jnp.ndarray:
+    """One butterfly pass over block-index bit ``block_bit``.
+
+    Grid enumerates all blocks; bit-set blocks accumulate their bit-clear
+    partner (out = own + sign * partner), bit-clear blocks copy through.
+    Reads 2x / writes 1x the array — race-free without buffer aliasing.
+    (On real hardware an input_output_aliased variant halves traffic; kept
+    simple here, see DESIGN.md §Perf notes.)
+    """
+    rows = f2d.shape[0]
+    nblocks = rows // row_block
+    return pl.pallas_call(
+        functools.partial(_pair_kernel, block_bit=block_bit, sign=sign),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((row_block, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, LANES),
+                         lambda i: (i ^ (1 << block_bit), 0)),
+        ],
+        out_specs=pl.BlockSpec((row_block, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(f2d.shape, f2d.dtype),
+        interpret=interpret,
+    )(f2d, f2d)
+
+
+# ------------------------------------------------------------ entry point
+def zeta_pallas(f: jnp.ndarray, inverse: bool = False,
+                row_block: int = 8, interpret: bool = True) -> jnp.ndarray:
+    """Zeta (or Moebius, ``inverse=True``) transform of a flat (2^n,) table.
+
+    Requires n >= log2(LANES) + log2(row_block); smaller inputs fall back
+    to the reference path (they are latency-trivial anyway).
+    """
+    size = f.shape[-1]
+    n = size.bit_length() - 1
+    sign = -1.0 if inverse else 1.0
+    min_bits = LANES.bit_length() - 1 + row_block.bit_length() - 1
+    if n < min_bits:
+        from repro.kernels.ref import zeta_ref, mobius_ref
+        return mobius_ref(f) if inverse else zeta_ref(f)
+    rows = size // LANES
+    f2d = f.reshape(rows, LANES)
+    f2d = _local_pass(f2d, row_block, sign, inverse, interpret)
+    n_block_bits = (rows // row_block).bit_length() - 1
+    for jb in range(n_block_bits):
+        f2d = _pair_pass(f2d, row_block, jb, sign, interpret)
+    return f2d.reshape(size)
+
+
+def mobius_pallas(f: jnp.ndarray, **kw) -> jnp.ndarray:
+    return zeta_pallas(f, inverse=True, **kw)

@@ -1,0 +1,188 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init, and the dry-run needs 512 placeholder host devices
+# to build the production meshes.  (Everything else — tests, benches —
+# sees the normal single CPU device.)
+
+"""Multi-pod dry-run driver.
+
+For every (architecture × shape × mesh) cell:
+    with mesh:
+        lowered  = jax.jit(step_fn, in_shardings=...).lower(*input_specs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())       # proves it fits
+        print(compiled.cost_analysis())         # FLOPs/bytes for §Roofline
+plus collective-byte accounting parsed from the post-SPMD HLO.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out benchmarks/results/dryrun
+
+Results are cached as JSON per cell (benchmarks and the roofline report
+read them instead of recompiling).
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell, accum_for
+from repro.launch.hlo_parse import parse_collectives, link_traffic_bytes
+from repro.launch import costmodel
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS per step: 6·N·D train (N = active params for MoE),
+    2·N·tokens for inference — matmul-parameter convention."""
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.seq_len * shape.global_batch
+    return 2.0 * n_act * shape.global_batch          # decode: 1 token/seq
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             verbose: bool = True, opts: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_chips = mesh.size
+    t0 = time.time()
+    fn, args, in_shardings = build_cell(cfg, shape, mesh, opts=opts)
+    try:
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_shardings)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+    except Exception as e:  # a failure here is a bug in the system
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+
+    coll = parse_collectives(hlo)
+    link_bytes = link_traffic_bytes(coll, default_group=16)
+    # NB: XLA cost_analysis is per-partition and counts while-loop (scan)
+    # bodies ONCE — recorded as diagnostics; the roofline terms come from
+    # the validated analytic cost model (launch.costmodel).
+    flops_raw = float(cost.get("flops", 0.0)) if cost else 0.0
+    bytes_raw = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    mf = model_flops(cfg, shape)
+    tp = mesh.shape.get("model", 1)
+    rf = costmodel.roofline_terms(cfg, shape, n_chips=n_chips, tp=tp,
+                                  opts=opts)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok", "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "xla_flops_loops_once": flops_raw,
+        "xla_bytes_loops_once": bytes_raw,
+        "model_flops": mf,
+        "hlo_flops": rf["flops"], "hlo_bytes": rf["hbm_bytes"],
+        "useful_flop_frac": (mf / rf["flops"]) if rf["flops"] else None,
+        "collectives": {k: v for k, v in coll.items()
+                        if not k.startswith("_")},
+        "avg_group": coll.get("_avg_group", 0),
+        "hlo_link_traffic_bytes_loops_once": link_bytes,
+        "coll_bytes": rf["coll_bytes"],
+        "accum": accum_for(cfg, shape),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        # roofline terms in seconds (analytic model, per chip)
+        "t_compute": rf["t_compute"],
+        "t_memory": rf["t_memory"],
+        "t_collective": rf["t_collective"],
+        "roofline_frac": rf["roofline_frac"],
+        "mfu_bound": rf["mfu_bound"],
+        "opts": opts or {},
+    }
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                result[f"mem_{k}"] = int(v)
+    result["bottleneck"] = rf["bottleneck"]
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind}: "
+              f"compile {result['compile_s']}s "
+              f"flops {rf['flops']:.3e} bytes {rf['hbm_bytes']:.3e} "
+              f"coll {rf['coll_bytes']:.3e} -> {result['bottleneck']}"
+              f"-bound frac {rf['roofline_frac']:.2f}", flush=True)
+        if mem is not None:
+            print(f"  memory_analysis: args "
+                  f"{result.get('mem_argument_size_in_bytes', 0)/1e9:.2f}GB"
+                  f" temp {result.get('mem_temp_size_in_bytes', 0)/1e9:.2f}"
+                  f"GB (whole program; /{n_chips} chips)", flush=True)
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="§Perf configuration: zigzag causal attention + "
+                         "dots remat (write to a separate --out dir!)")
+    args = ap.parse_args(argv)
+    opts = ({"attn_scheme": "zigzag", "remat": "dots"}
+            if args.optimized else None)
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                for mesh in ("pod", "multipod"):
+                    cells.append((arch, shape, mesh))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape, args.mesh))
+
+    n_err = 0
+    for arch, shape, mesh in cells:
+        path = os.path.join(args.out, f"{arch}__{shape}__{mesh}.json")
+        if args.skip_existing and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    continue
+        res = run_cell(arch, shape, mesh, opts=opts)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        if res["status"] == "error":
+            n_err += 1
+            print(f"[dryrun] ERROR {arch} x {shape} x {mesh}: "
+                  f"{res['error']}", flush=True)
+    print(f"[dryrun] finished: {len(cells)} cells, {n_err} errors",
+          flush=True)
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

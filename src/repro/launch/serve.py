@@ -1,0 +1,83 @@
+"""Batched serving driver (CPU demo of the serve path).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+        --reduced --batch 4 --prompt-len 32 --gen 32
+
+Static-batch engine with per-request state: each slot holds its own
+position; prompts are consumed via the decode path (prefill == teacher
+forcing), then tokens are sampled greedily.  The production layout is the
+same decode_step the dry-run lowers at (arch × decode shape) scale.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced as make_reduced
+from repro.models import transformer as tfm
+from repro.train.steps import make_decode_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+    rng = np.random.default_rng(args.seed)
+    B = args.batch
+    max_seq = args.prompt_len + args.gen
+
+    params = tfm.init_params(cfg, seed=args.seed)
+    cache = tfm.init_cache(cfg, B, max_seq=max_seq)
+    if cfg.family == "encdec":
+        frames = jnp.asarray(
+            rng.normal(size=(B, cfg.n_frames, cfg.d_model)), cfg.cdtype)
+        enc_out, _ = tfm.encode(params, cfg, frames)
+        cache = tfm.build_cross_cache(params, cfg, enc_out, cache)
+
+    step = jax.jit(make_decode_step(cfg))
+    prompts = rng.integers(0, cfg.vocab_size, (B, args.prompt_len))
+    out_tokens = [[] for _ in range(B)]
+
+    t0 = time.perf_counter()
+    logits = None
+    for i in range(args.prompt_len):            # prefill via decode path
+        tok = jnp.asarray(prompts[:, i], jnp.int32)
+        logits, cache = step(params, cache, tok,
+                             jnp.full((B,), i, jnp.int32))
+    t_prefill = time.perf_counter() - t0
+
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(args.gen):
+        for b in range(B):
+            out_tokens[b].append(int(tok[b]))
+        logits, cache = step(params, cache, tok,
+                             jnp.full((B,), args.prompt_len + i,
+                                      jnp.int32))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t_gen = time.perf_counter() - t0
+
+    print(f"[serve] {cfg.name}: batch {B}, prefill {args.prompt_len} tok "
+          f"in {t_prefill:.2f}s, generated {args.gen} tok/slot in "
+          f"{t_gen:.2f}s ({B * args.gen / max(t_gen, 1e-9):,.1f} tok/s)")
+    for b in range(min(B, 2)):
+        print(f"  slot {b}: {out_tokens[b][:16]} ...")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,135 @@
+"""ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+``build_cell(cfg, shape, mesh)`` returns (step_fn, args_structs,
+in_shardings) — weak-type-correct, shardable, zero device allocation:
+parameter/optimizer/cache structures come from ``jax.eval_shape`` over the
+real init functions, so the dry-run lowers exactly what training/serving
+would run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.models import sharding as shd
+from repro.models import transformer as tfm
+from repro.models.common import ModelConfig
+from repro.optim.adamw import OptConfig
+from repro.train import steps as steps_mod
+
+
+def _struct(tree):
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def accum_for(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Gradient-accumulation (microbatching) schedule: keeps per-chip
+    activation memory bounded for the large configs."""
+    tokens = shape.seq_len * shape.global_batch
+    big = cfg.d_model >= 4096 or cfg.param_count() > 2e10
+    if shape.kind != "train":
+        return 1
+    if big:
+        return 8
+    if tokens > 2 ** 21:
+        return 4
+    return 1
+
+
+def act_sharding_for(cfg: ModelConfig, mesh: Mesh, batch: int):
+    """Layer-boundary activation sharding: batch on data axes, embed on
+    'model' when divisible."""
+    da = shd.data_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in da]))
+    tp = mesh.shape.get("model", 1)
+    b_ax = (da if len(da) > 1 else da[0]) if batch % dp == 0 else None
+    d_ax = "model" if (cfg.d_model % tp == 0 and tp > 1) else None
+    return NamedSharding(mesh, P(b_ax, None, d_ax))
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+               opt_cfg: OptConfig | None = None,
+               accum: int | None = None,
+               loss_chunk: int = 512,
+               opts: dict | None = None):
+    """-> (fn, args tuple of ShapeDtypeStructs, in_shardings tuple).
+
+    opts: {"attn_scheme": ..., "remat": ...} — the §Perf knobs."""
+    opt_cfg = opt_cfg or OptConfig()
+    opts = opts or {}
+    attn_scheme = opts.get("attn_scheme", "simple")
+    remat = opts.get("remat", "full")
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.cdtype
+
+    params_struct = jax.eval_shape(
+        functools.partial(tfm.init_params, cfg, seed=0))
+    params_shard = shd.param_shardings(mesh, params_struct)
+
+    if shape.kind == "train":
+        accum = accum or accum_for(cfg, shape)
+        state_struct = {
+            "params": params_struct,
+            "opt": {"mu": params_struct, "nu": params_struct,
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)},
+        }
+        state_shard = {
+            "params": params_shard,
+            "opt": {"mu": params_shard, "nu": params_shard,
+                    "step": NamedSharding(mesh, P())},
+        }
+        batch_struct: dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        bspec = NamedSharding(mesh, shd.batch_spec(mesh, B))
+        batch_shard = {"tokens": bspec, "labels": bspec}
+        if cfg.family == "encdec":
+            batch_struct["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frames, cfg.d_model), dt)
+            batch_shard["frames"] = NamedSharding(
+                mesh, shd.batch_spec(mesh, B, extra_dims=2))
+        fn = steps_mod.make_train_step(
+            cfg, opt_cfg, accum=accum, loss_chunk=loss_chunk,
+            act_sharding=act_sharding_for(cfg, mesh, B // accum),
+            attn_scheme=attn_scheme, remat=remat)
+        return fn, (state_struct, batch_struct), (state_shard, batch_shard)
+
+    if shape.kind == "prefill":
+        fn = steps_mod.make_prefill_step(cfg, attn_scheme=attn_scheme)
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        tspec = NamedSharding(mesh, shd.batch_spec(mesh, B))
+        if cfg.family == "encdec":
+            fr = jax.ShapeDtypeStruct((B, cfg.n_frames, cfg.d_model), dt)
+            fspec = NamedSharding(mesh, shd.batch_spec(mesh, B,
+                                                       extra_dims=2))
+            return (fn, (params_struct, tok, fr),
+                    (params_shard, tspec, fspec))
+        return fn, (params_struct, tok), (params_shard, tspec)
+
+    # decode: one new token against a KV cache of seq_len
+    cache_struct = jax.eval_shape(
+        functools.partial(tfm.init_cache, cfg, B, S))
+    cache_shard = _named(mesh, shd.cache_specs(mesh, cache_struct, B))
+    fn = steps_mod.make_decode_step(cfg)
+    tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    da = shd.data_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in da]))
+    tspec = NamedSharding(
+        mesh, P(da if len(da) > 1 else da[0]) if B % dp == 0 else P(None))
+    return (fn, (params_struct, cache_struct, tok, pos),
+            (params_shard, cache_shard, tspec, tspec))

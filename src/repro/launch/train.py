@@ -1,0 +1,139 @@
+"""Fault-tolerant training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt \
+        --ckpt-every 10 [--fail-at-step 23] [--resume]
+
+Fault tolerance demonstrated end-to-end on CPU (and structured for pods):
+  * checkpoint every k steps (atomic, async-capable) + --resume picks up
+    from the latest complete checkpoint;
+  * --fail-at-step simulates a node failure mid-run; a relaunch with
+    --resume reproduces the exact same loss trajectory (deterministic
+    data keyed by step — restart-safe pipeline);
+  * straggler watchdog: logs any step slower than ``straggler_factor`` ×
+    the running median (on a pod this feeds the preemption/hot-swap
+    controller; here it is measurement + log).
+Elastic scaling: checkpoints reshard on load (see repro.checkpoint.ckpt),
+so relaunching with a different mesh/device count just works.
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced as make_reduced
+from repro.data.synthetic import DataConfig, batch_at
+from repro.launch.mesh import make_host_mesh
+from repro.models import sharding as shd
+from repro.optim.adamw import OptConfig
+from repro.train.steps import init_train_state, make_train_step
+from repro.checkpoint import ckpt as ckpt_lib
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at-step", type=int, default=-1)
+    ap.add_argument("--straggler-factor", type=float, default=3.0)
+    ap.add_argument("--data-mesh", type=int, default=0,
+                    help="data axis size (0 = all devices)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--data-pattern", default="random",
+                    choices=["random", "cyclic"])
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+    ndev = len(jax.devices())
+    dsize = args.data_mesh or ndev
+    mesh = make_host_mesh(data=dsize, model=ndev // dsize)
+
+    opt_cfg = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                        total_steps=args.steps,
+                        grad_dtype=args.grad_dtype)
+    state = init_train_state(
+        cfg, opt_cfg, seed=args.seed,
+        error_feedback_state=(args.grad_dtype == "bfloat16"))
+    state_shardings = {
+        "params": shd.param_shardings(mesh, state["params"]),
+        "opt": {"mu": shd.param_shardings(mesh, state["opt"]["mu"]),
+                "nu": shd.param_shardings(mesh, state["opt"]["nu"]),
+                "step": NamedSharding(mesh, P())},
+    }
+    if "residual" in state:
+        state_shardings["residual"] = shd.param_shardings(
+            mesh, state["residual"])
+    state = jax.device_put(state, state_shardings)
+
+    start_step = 0
+    if args.resume and args.ckpt_dir:
+        try:
+            state, start_step = ckpt_lib.load(state, args.ckpt_dir,
+                                              shardings=state_shardings)
+            print(f"[train] resumed from step {start_step}")
+        except FileNotFoundError:
+            print("[train] no checkpoint found — fresh start")
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch, seed=args.seed,
+                      pattern=args.data_pattern)
+    bspec = NamedSharding(mesh, shd.batch_spec(mesh, args.batch))
+    step_fn = make_train_step(cfg, opt_cfg, accum=args.accum,
+                              loss_chunk=min(2048, args.batch * args.seq))
+    step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    times: list = []
+    with mesh:
+        for step in range(start_step, args.steps):
+            if step == args.fail_at_step:
+                print(f"[train] SIMULATED NODE FAILURE at step {step}",
+                      flush=True)
+                sys.exit(42)
+            batch = batch_at(dcfg, step)
+            batch = {k: jax.device_put(v, bspec)
+                     for k, v in batch.items()}
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            times.append(dt)
+            if len(times) > 5:
+                med = statistics.median(times[1:])
+                if dt > args.straggler_factor * med:
+                    print(f"[train] STRAGGLER step {step}: {dt:.2f}s "
+                          f"(median {med:.2f}s)", flush=True)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                tok_s = args.batch * args.seq / dt
+                print(f"[train] step {step:5d} loss {loss:.4f} "
+                      f"ce {float(metrics['ce']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"{tok_s:,.0f} tok/s", flush=True)
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                ckpt_lib.save(state, args.ckpt_dir, step + 1)
+    if args.ckpt_dir:
+        ckpt_lib.save(state, args.ckpt_dir, args.steps)
+    print("[train] done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,353 @@
+"""GQA attention: chunked (flash-style) train/prefill path + decode path.
+
+TPU adaptation notes (DESIGN.md):
+  * Long-context prefill cannot materialize (S × T) score matrices; we use
+    the lazy-softmax block algorithm (running max / denominator) as nested
+    lax.scan over query/key blocks — the pure-XLA equivalent of a TPU
+    flash/splash kernel, with f32 accumulators and bf16 operands.
+  * Sliding-window layers iterate only the kv blocks inside the window
+    (static trip count) — sub-quadratic compute AND cache.
+  * Causal global layers iterate kb <= qb with a where-mask inside a
+    static-length scan; the ~2x block waste of the naive schedule is a
+    recorded §Perf hillclimb (balanced "zigzag" pairing).
+  * Decode keeps a ring-buffer cache of length ``window`` for local layers
+    and full length for global layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, rms_norm, rope, \
+    split_keys
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ params
+def init_attention(cfg: ModelConfig, key, cross: bool = False) -> dict:
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = split_keys(key, ["wq", "wk", "wv", "wo"])
+    p = {
+        "wq": dense_init(ks["wq"], D, H * hd),
+        "wk": dense_init(ks["wk"], D, K * hd),
+        "wv": dense_init(ks["wv"], D, K * hd),
+        "wo": dense_init(ks["wo"], H * hd, D, scale=1.0 / (H * hd) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((K * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((K * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                 x_kv: jnp.ndarray | None = None):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,T,K,hd)."""
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = x.dtype
+    xkv = x if x_kv is None else x_kv
+    q = x @ p["wq"].astype(dt)
+    k = xkv @ p["wk"].astype(dt)
+    v = xkv @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(q.shape[:-1] + (H, hd))
+    k = k.reshape(k.shape[:-1] + (K, hd))
+    v = v.reshape(v.shape[:-1] + (K, hd))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+# ------------------------------------------------- chunked lazy-softmax core
+class _Acc(NamedTuple):
+    m: jnp.ndarray      # (B, K, G, QB) running max (f32)
+    l: jnp.ndarray      # (B, K, G, QB) running denom (f32)
+    o: jnp.ndarray      # (B, K, G, QB, hd) running numerator (f32)
+
+
+def _block_step(acc: _Acc, q, kb, vb, mask, scale):
+    """q: (B,K,G,QB,hd); kb/vb: (B,KB,K,hd); mask: (B,1,1,QB,KB) bool."""
+    s = jnp.einsum("bkgqh,btkh->bkgqt", q.astype(jnp.float32),
+                   kb.astype(jnp.float32)) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(acc.m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(acc.m - m_new)
+    l_new = acc.l * corr + p.sum(axis=-1)
+    o_new = acc.o * corr[..., None] + jnp.einsum(
+        "bkgqt,btkh->bkgqh", p, vb.astype(jnp.float32))
+    return _Acc(m_new, l_new, o_new)
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, *, causal: bool,
+                      window: int, q_block: int = 512,
+                      k_block: int = 512,
+                      scheme: str = "simple") -> jnp.ndarray:
+    """q: (B,S,H,hd), k/v: (B,T,K,hd), positions (B,S)/(B,T).
+
+    Returns (B, S, H, hd).  window > 0 limits attention to keys with
+    q_pos - k_pos < window (and >= 0 if causal).
+
+    scheme="zigzag" (causal global layers only): pair query block i with
+    block nq-1-i; each pair needs exactly nq+1 kv-block visits, so the
+    lower-triangle work is covered with ~half the block-steps of the
+    simple schedule (which iterates all nk blocks and masks the future).
+    See EXPERIMENTS.md §Perf.
+    """
+    B, S0, H, hd = q.shape
+    T0, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / (hd ** 0.5)
+    q_block = min(q_block, S0)
+    k_block = min(k_block, T0)
+    # pad sequence axes to block multiples; padded keys get position -1
+    # and are masked out, padded query rows are sliced off at the end
+    S = ((S0 + q_block - 1) // q_block) * q_block
+    T = ((T0 + k_block - 1) // k_block) * k_block
+    if S != S0:
+        q = jnp.pad(q, ((0, 0), (0, S - S0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, S - S0)))
+    if T != T0:
+        k = jnp.pad(k, ((0, 0), (0, T - T0), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, T - T0), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, T - T0)),
+                        constant_values=-1)
+    nq, nk = S // q_block, T // k_block
+    qg = q.reshape(B, nq, q_block, K, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    # (nq, B, K, G, QB, hd)
+    kg = k.reshape(B, nk, k_block, K, hd).transpose(1, 0, 2, 3, 4)
+    vg = v.reshape(B, nk, k_block, K, hd).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(B, nq, q_block).transpose(1, 0, 2)   # (nq, B, QB)
+    kp = k_pos.reshape(B, nk, k_block).transpose(1, 0, 2)   # (nk, B, KB)
+
+    if window > 0:
+        w_blocks = (window + k_block - 1) // k_block + 1
+        w_blocks = min(w_blocks, nk)
+    else:
+        w_blocks = nk
+
+    if (scheme == "zigzag" and causal and window <= 0 and S == T
+            and nq % 2 == 0 and nq == nk and nq >= 2):
+        return _zigzag_causal(qg, kg, vg, qp, kp, B, K, G, hd, q_block,
+                              nq, scale, q.dtype)[:, :S0]
+
+    def per_qblock(carry, xs):
+        qi, qb_data, qp_b = xs          # scalar, (B,K,G,QB,hd), (B,QB)
+        acc0 = _Acc(
+            jnp.full((B, K, G, q_block), NEG_INF, jnp.float32),
+            jnp.zeros((B, K, G, q_block), jnp.float32),
+            jnp.zeros((B, K, G, q_block, hd), jnp.float32),
+        )
+
+        def per_kblock(acc, off):
+            # map static offset -> kv block index (windowed: trailing blks)
+            if window > 0 and causal:
+                raw_idx = qi - (w_blocks - 1) + off
+            else:
+                raw_idx = off
+            kb_idx = jnp.clip(raw_idx, 0, nk - 1)
+            kb = jax.lax.dynamic_index_in_dim(kg, kb_idx, 0, False)
+            vb = jax.lax.dynamic_index_in_dim(vg, kb_idx, 0, False)
+            kpb = jax.lax.dynamic_index_in_dim(kp, kb_idx, 0, False)
+            rel = qp_b[:, :, None] - kpb[:, None, :]        # (B, QB, KB)
+            mask = kpb[:, None, :] >= 0                     # padded keys
+            # clipped (out-of-range) offsets must not recount block 0
+            mask &= (raw_idx == kb_idx)
+            if causal:
+                mask &= rel >= 0
+            if window > 0:
+                mask &= rel < window
+            # blocks wholly in the future contribute nothing (simple
+            # schedule; the zigzag pairing removes this waste — §Perf)
+            if causal and window <= 0:
+                mask &= (kb_idx <= qi)
+            mask = mask[:, None, None, :, :]
+            return _block_step(acc, qb_data, kb, vb, mask, scale), None
+
+        n_steps = w_blocks if (window > 0 and causal) else nk
+        acc, _ = jax.lax.scan(per_kblock, acc0,
+                              jnp.arange(n_steps, dtype=jnp.int32))
+        out = acc.o / jnp.maximum(acc.l, 1e-30)[..., None]
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(
+        per_qblock, None,
+        (jnp.arange(nq, dtype=jnp.int32), qg, qp))
+    # outs: (nq, B, K, G, QB, hd) -> (B, S, H, hd), drop query padding
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, hd)
+    return out[:, :S0]
+
+
+def _zigzag_causal(qg, kg, vg, qp, kp, B, K, G, hd, q_block, nq, scale,
+                   dtype):
+    """Balanced causal schedule: pair (i, nq-1-i) shares one kv sweep of
+    exactly nq+1 block-visits — no masked-future block waste."""
+    npairs = nq // 2
+    lo_ids = jnp.arange(npairs, dtype=jnp.int32)
+    hi_ids = nq - 1 - lo_ids
+
+    def per_pair(carry, xs):
+        i, q_lo, q_hi, qp_lo, qp_hi = xs
+
+        def init():
+            return _Acc(
+                jnp.full((B, K, G, q_block), NEG_INF, jnp.float32),
+                jnp.zeros((B, K, G, q_block), jnp.float32),
+                jnp.zeros((B, K, G, q_block, hd), jnp.float32))
+
+        def step(accs, t):
+            acc_lo, acc_hi = accs
+            use_lo = t <= i
+            kb_idx = jnp.where(use_lo, jnp.minimum(t, i),
+                               jnp.maximum(t - (i + 1), 0))
+            kb = jax.lax.dynamic_index_in_dim(kg, kb_idx, 0, False)
+            vb = jax.lax.dynamic_index_in_dim(vg, kb_idx, 0, False)
+            kpb = jax.lax.dynamic_index_in_dim(kp, kb_idx, 0, False)
+            q_d = jnp.where(use_lo, q_lo, q_hi)
+            qp_d = jnp.where(use_lo, qp_lo, qp_hi)
+            rel = qp_d[:, :, None] - kpb[:, None, :]
+            mask = (rel >= 0) & (kpb[:, None, :] >= 0)
+            mask = mask[:, None, None, :, :]
+            acc_sel = jax.tree.map(
+                lambda a, b: jnp.where(use_lo, a, b), acc_lo, acc_hi)
+            new = _block_step(acc_sel, q_d, kb, vb, mask, scale)
+            acc_lo = jax.tree.map(
+                lambda n, a: jnp.where(use_lo, n, a), new, acc_lo)
+            acc_hi = jax.tree.map(
+                lambda n, a: jnp.where(use_lo, a, n), new, acc_hi)
+            return (acc_lo, acc_hi), None
+
+        (acc_lo, acc_hi), _ = jax.lax.scan(
+            step, (init(), init()), jnp.arange(nq + 1, dtype=jnp.int32))
+        out_lo = (acc_lo.o / jnp.maximum(acc_lo.l, 1e-30)[..., None]
+                  ).astype(dtype)
+        out_hi = (acc_hi.o / jnp.maximum(acc_hi.l, 1e-30)[..., None]
+                  ).astype(dtype)
+        return carry, (out_lo, out_hi)
+
+    _, (outs_lo, outs_hi) = jax.lax.scan(
+        per_pair, None,
+        (lo_ids, qg[:npairs], qg[npairs:][::-1],
+         qp[:npairs], qp[npairs:][::-1]))
+    # reassemble original q-block order: [lo_0..lo_{p-1}, hi reversed]
+    outs = jnp.concatenate([outs_lo, outs_hi[::-1]], axis=0)
+    S = nq * q_block
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, K * G, hd)
+
+
+# ------------------------------------------------------------ full forward
+def attn_forward(p: dict, x: jnp.ndarray, positions: jnp.ndarray,
+                 cfg: ModelConfig, *, window: int, causal: bool = True,
+                 enc_out: jnp.ndarray | None = None,
+                 enc_pos: jnp.ndarray | None = None,
+                 theta: float | None = None, scheme: str = "simple"):
+    """Returns (out (B,S,D), (k, v)) — k/v returned for cache building."""
+    theta = theta if theta is not None else cfg.rope_theta
+    q, k, v = _project_qkv(p, x, cfg, x_kv=enc_out)
+    if enc_out is None:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+        k_pos = positions
+    else:
+        # cross-attention: no rope (whisper-style), encoder positions
+        k_pos = enc_pos
+    o = chunked_attention(q, k, v, positions, k_pos,
+                          causal=causal and enc_out is None, window=window,
+                          scheme=scheme)
+    B, S = x.shape[:2]
+    out = o.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"].astype(x.dtype)
+    return out, (k, v)
+
+
+# ----------------------------------------------------------------- decode
+def _kv_quantize(x, dtype):
+    """x: (B, K, hd) -> (int8 values, per-(B,K) scales)."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                 -127, 127).astype(dtype)
+    return q, s
+
+
+def attn_decode(p: dict, cache_k, cache_v, x1: jnp.ndarray,
+                pos: jnp.ndarray, cfg: ModelConfig, *, window: int,
+                theta: float | None = None, k_scale=None, v_scale=None):
+    """Single-token decode.  x1: (B, 1, D); pos: (B,) current position.
+    cache_k/v: (B, C, K, hd) with C = window (ring) or max seq (global).
+    With int8 caches, k_scale/v_scale are (B, C, K) per-entry scales.
+    Returns (out (B,1,D), cache_k', cache_v'[, k_scale', v_scale'])."""
+    theta = theta if theta is not None else cfg.rope_theta
+    B, C, K, hd = cache_k.shape
+    H = cfg.n_heads
+    G = H // K
+    quant = cache_k.dtype == jnp.int8
+    q, k, v = _project_qkv(p, x1, cfg)
+    q = rope(q, pos[:, None], theta)
+    k = rope(k, pos[:, None], theta)
+    slot = (pos % C) if window > 0 else pos              # (B,)
+    bidx = jnp.arange(B)
+    if quant:
+        kq, ks = _kv_quantize(k[:, 0], cache_k.dtype)
+        vq, vs = _kv_quantize(v[:, 0], cache_v.dtype)
+        cache_k = cache_k.at[bidx, slot].set(kq)
+        cache_v = cache_v.at[bidx, slot].set(vq)
+        k_scale = k_scale.at[bidx, slot].set(ks)
+        v_scale = v_scale.at[bidx, slot].set(vs)
+    else:
+        cache_k = cache_k.at[bidx, slot].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[bidx, slot].set(v[:, 0].astype(cache_v.dtype))
+    # key positions: ring holds pos - age; global holds absolute index
+    if window > 0:
+        idx = jnp.arange(C)[None, :]
+        kpos = jnp.where(
+            idx <= slot[:, None], pos[:, None] - (slot[:, None] - idx),
+            pos[:, None] - (slot[:, None] + C - idx))
+        valid = (kpos >= 0) & (pos[:, None] - kpos < window)
+    else:
+        kpos = jnp.arange(C)[None, :] * jnp.ones((B, 1), jnp.int32)
+        valid = kpos <= pos[:, None]
+    qf = q.reshape(B, 1, K, G, hd).astype(jnp.float32)
+    kf = cache_k.astype(jnp.float32)
+    vf = cache_v.astype(jnp.float32)
+    if quant:
+        kf = kf * k_scale[..., None]
+        vf = vf * v_scale[..., None]
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qf, kf) / (hd ** 0.5)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", w, vf)
+    out = o.reshape(B, 1, H * hd).astype(x1.dtype) @ p["wo"].astype(x1.dtype)
+    if quant:
+        return out, cache_k, cache_v, k_scale, v_scale
+    return out, cache_k, cache_v
+
+
+def cross_attn_decode(p: dict, enc_k, enc_v, x1: jnp.ndarray,
+                      cfg: ModelConfig):
+    """Decoder cross-attention against fixed encoder kv (B, T, K, hd)."""
+    B = x1.shape[0]
+    K, hd, H = cfg.n_kv_heads, cfg.hd, cfg.n_heads
+    G = H // K
+    dt = x1.dtype
+    q = (x1 @ p["wq"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+    q = q.reshape(B, 1, K, G, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+    s = jnp.einsum("bqkgh,btkh->bkgqt", q.astype(jnp.float32),
+                   enc_k.astype(jnp.float32)) / (hd ** 0.5)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", w, enc_v.astype(jnp.float32))
+    return o.reshape(B, 1, H * hd).astype(dt) @ p["wo"].astype(dt)

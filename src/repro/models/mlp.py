@@ -1,0 +1,108 @@
+"""SwiGLU MLP and capacity-based Mixture-of-Experts.
+
+MoE dispatch is the grouped GShard/Switch scheme, TPU-adapted:
+  * groups = sequences (token groups stay on their data shard — no
+    cross-device cumsum),
+  * per-group expert capacity = S * top_k / E * capacity_factor; overflow
+    tokens are dropped (standard capacity semantics),
+  * scatter into a (B, E, cap, D) buffer + batched expert einsum + gather
+    back.  Compute is top_k * capacity_factor * dense-equivalent FLOPs —
+    the honest active-parameter cost (no dense all-experts evaluation).
+  * expert axis is sharded on the 'model' mesh axis (expert parallelism);
+    the scatter/gather across the expert axis is where GSPMD inserts the
+    all-to-all — visible in the dry-run collective bytes.
+
+Router aux (load-balance) loss is returned to the caller (Switch-style
+f·P product, coefficient applied by the train step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, split_keys
+
+
+def init_mlp(cfg: ModelConfig, key) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, ["wg", "wu", "wd"])
+    return {
+        "wg": dense_init(ks["wg"], D, F),
+        "wu": dense_init(ks["wu"], D, F),
+        "wd": dense_init(ks["wd"], F, D),
+    }
+
+
+def mlp_forward(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wu"].astype(dt))
+    return h @ p["wd"].astype(dt)
+
+
+def init_moe(cfg: ModelConfig, key) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = split_keys(key, ["router", "wg", "wu", "wd", "shared"])
+
+    def experts(k, d_in, d_out):
+        return (jax.random.normal(k, (E, d_in, d_out), jnp.float32)
+                / (d_in ** 0.5))
+
+    p = {
+        "router": dense_init(ks["router"], D, E),
+        "wg": experts(ks["wg"], D, F),
+        "wu": experts(ks["wu"], D, F),
+        "wd": experts(ks["wd"], F, D),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(cfg, ks["shared"])
+    return p
+
+
+def moe_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    dt = x.dtype
+    cap = max(int(S * k / E * cfg.capacity_factor), 4)
+    cap = min(cap, S)
+
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)   # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                        # (B,S,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert, group-local cumsum
+    oh = jax.nn.one_hot(eidx, E, dtype=jnp.int32)               # (B,S,k,E)
+    flat = oh.reshape(B, S * k, E)
+    pos_all = jnp.cumsum(flat, axis=1) - flat                   # pos before
+    pos = (pos_all * flat).sum(-1).reshape(B, S, k)             # (B,S,k)
+    keep = pos < cap
+
+    # load-balance aux: Switch f·P (fraction routed × mean prob)
+    f_e = (oh.sum(axis=2) > 0).astype(jnp.float32).mean(axis=(0, 1))
+    p_e = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(f_e * p_e)
+
+    bidx = jnp.arange(B)[:, None]
+    buf = jnp.zeros((B, E, cap, D), dt)
+    for j in range(k):                                          # k scatters
+        contrib = jnp.where(keep[:, :, j, None], x, 0).astype(dt)
+        slot = jnp.where(keep[:, :, j], pos[:, :, j], cap - 1)
+        buf = buf.at[bidx, eidx[:, :, j], slot].add(contrib)
+
+    # batched expert swiglu: (B,E,cap,D) x (E,D,F)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf,
+                               p["wg"].astype(dt))) * \
+        jnp.einsum("becd,edf->becf", buf, p["wu"].astype(dt))
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wd"].astype(dt))
+
+    y = jnp.zeros_like(x)
+    for j in range(k):
+        gathered = out_buf[bidx, eidx[:, :, j],
+                           jnp.where(keep[:, :, j], pos[:, :, j], cap - 1)]
+        y = y + jnp.where(keep[:, :, j, None],
+                          gathered * gate[:, :, j, None].astype(dt), 0)
+
+    if cfg.n_shared_experts:
+        y = y + mlp_forward(p["shared"], x)
+    return y, aux

@@ -1,0 +1,190 @@
+"""Path-based sharding rules: FSDP over ('pod','data'), TP/EP over 'model'.
+
+Every parameter leaf is matched by path against RULES, yielding logical
+axes per dimension; logical axes map to mesh axes with a divisibility
+fallback to replication.  The same machinery shards optimizer state
+(mirrors params), KV/SSM caches and step inputs.
+
+Strategy (see DESIGN.md):
+  * parameters + optimizer state: fully sharded (ZeRO-3/FSDP) across the
+    data axes AND tensor-parallel across 'model' — GSPMD inserts the
+    per-layer all-gathers in forward/backward and reduce-scatters for
+    gradients.
+  * activations: batch on data axes; heads/experts on 'model'.
+  * decode caches: batch on data axes when divisible, else (long_500k,
+    batch=1) sequence-sharded KV on 'data' — distributed sequence-parallel
+    attention, GSPMD reduces the partial softmax terms.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# (path regex, logical axes per trailing dim — leading (repeats,) axes of
+# stacked segment leaves are padded with None automatically)
+RULES = [
+    (r"embed$", ("tp", "fsdp")),
+    (r"unembed$", ("fsdp", "tp")),
+    (r"(wq|wk|wv)$", ("fsdp", "tp")),
+    (r"wo$", ("tp", "fsdp")),
+    (r"(bq|bk|bv)$", ("tp",)),
+    (r"router$", ("fsdp", None)),
+    # dense mlp (2D; 3D expert tensors are special-cased to EP in
+    # _logical_for_leaf)
+    (r"(wg|wu)$", ("fsdp", "tp")),
+    (r"wd$", ("tp", "fsdp")),
+    (r"in_proj$", ("fsdp", "tp")),
+    (r"conv_w$", (None, "tp")),
+    (r"conv_b$", ("tp",)),
+    (r"out_proj$", ("tp", "fsdp")),
+    (r"(A_log|dt_bias|D)$", (None,)),
+    (r"(ln\w*|norm|final_norm|q_norm|k_norm)$", (None,)),
+]
+
+LOGICAL_TO_MESH = {
+    "fsdp": ("pod", "data"),
+    "dp": ("pod", "data"),
+    "tp": ("model",),
+    "ep": ("model",),
+}
+
+
+def _mesh_axes_for(mesh: Mesh, logical):
+    if logical is None:
+        return None
+    axes = tuple(a for a in LOGICAL_TO_MESH[logical]
+                 if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def spec_for(mesh: Mesh, shape, logical_axes) -> P:
+    """Logical axes -> PartitionSpec with divisibility fallback."""
+    ndim = len(shape)
+    # pad leading dims (stacked repeats) with None
+    logical = (None,) * (ndim - len(logical_axes)) + tuple(logical_axes)
+    out = []
+    for dim, lg in zip(shape, logical):
+        axes = _mesh_axes_for(mesh, lg)
+        if axes is None or dim % _axis_size(mesh, axes) != 0:
+            out.append(None)
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _logical_for_leaf(path_s: str, ndim: int):
+    leaf_name = path_s.rsplit("/", 1)[-1]
+    # MoE expert tensors: trailing 3 dims are (E, d_in, d_out).  Leading
+    # stacked-repeat axes may make ndim 4 — spec_for pads those with None.
+    if leaf_name in ("wg", "wu", "wd") and ndim >= 3:
+        if leaf_name == "wd":
+            return ("ep", None, "fsdp")
+        return ("ep", "fsdp", None)
+    for pat, axes in RULES:
+        if re.search(pat, leaf_name):
+            return axes
+    return tuple([None] * min(ndim, 1))
+
+
+def param_specs(mesh: Mesh, params) -> dict:
+    """PartitionSpec pytree for a param (or optimizer-state) pytree."""
+    def one(path, leaf):
+        ps = _path_str(path)
+        logical = _logical_for_leaf(ps, leaf.ndim)
+        return spec_for(mesh, leaf.shape, logical)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(mesh: Mesh, params) -> dict:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(mesh, params))
+
+
+# ------------------------------------------------------------ activations
+def data_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    da = data_axes(mesh)
+    if batch % _axis_size(mesh, da) == 0:
+        return P(da if len(da) > 1 else da[0], *([None] * extra_dims))
+    return P(*([None] * (1 + extra_dims)))
+
+
+def cache_specs(mesh: Mesh, cache, batch: int) -> dict:
+    """Sharding for a decode cache pytree.
+
+    kv leaves: (R, B, C, K, hd); ssm state: (R, B, H, N, P);
+    conv: (R, B, W, Ch).  Batch on data axes when divisible, else the
+    sequence/cache axis; heads on 'model' when divisible.
+    """
+    da = data_axes(mesh)
+    dp = _axis_size(mesh, da)
+    da_spec = da if len(da) > 1 else da[0]
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def one(path, leaf):
+        name = _path_str(path).rsplit("/", 1)[-1]
+        s = [None] * leaf.ndim
+        if name.endswith("_scale"):
+            # int8 KV per-entry scales: (R, B, C, K) — follow the cache
+            R, B, C, K = leaf.shape
+            if B % dp == 0:
+                s[1] = da_spec
+            elif C % dp == 0:
+                s[2] = da_spec
+            if K % tp == 0 and tp > 1:
+                s[3] = "model"
+        elif name in ("k", "v", "ck", "cv", "shared_k", "shared_v"):
+            R, B, C, K, hd = leaf.shape
+            if B % dp == 0:
+                s[1] = da_spec
+            elif C % dp == 0:
+                s[2] = da_spec               # sequence-sharded KV
+            if K % tp == 0 and tp > 1:
+                s[3] = "model"
+            elif s[2] is None and C % tp == 0 and tp > 1:
+                s[2] = "model"
+        elif name == "state":
+            R, B, H, N, Pp = leaf.shape
+            if B % dp == 0:
+                s[1] = da_spec
+            if H % tp == 0 and tp > 1:
+                s[2] = "model"
+        elif name == "conv":
+            R, B, W, Ch = leaf.shape
+            if B % dp == 0:
+                s[1] = da_spec
+            if Ch % tp == 0 and tp > 1:
+                s[3] = "model"
+        return P(*s)
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def to_shardings(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,163 @@
+"""Mamba-2 (SSD — state-space duality) layer: chunked train path + O(1)
+decode step.  arXiv:2405.21060.
+
+Chunked SSD: sequence split into chunks of Q tokens; quadratic attention-
+like compute inside chunks (MXU-friendly (Q x Q) blocks), linear state
+passing between chunks via lax.scan.  Decode carries (conv_state,
+ssm_state) — constant memory per token, the property that makes SSM archs
+eligible for the long_500k shape.
+
+Single B/C group (G = 1), heads H = d_inner / head_dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, rms_norm, \
+    split_keys
+
+
+def init_ssm(cfg: ModelConfig, key) -> dict:
+    D, Di, N, H, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_conv_width)
+    conv_ch = Di + 2 * N
+    ks = split_keys(key, ["in_proj", "conv", "out_proj", "A", "dt"])
+    return {
+        "in_proj": dense_init(ks["in_proj"], D, 2 * Di + 2 * N + H),
+        "conv_w": (jax.random.normal(ks["conv"], (W, conv_ch), jnp.float32)
+                   / W ** 0.5),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),          # a = -exp(A_log)
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),   # softplus ~ 0.12
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.zeros((Di,), jnp.float32),
+        "out_proj": dense_init(ks["out_proj"], Di, D),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Depthwise causal conv.  x: (B, L, C); w: (W, C)."""
+    W = w.shape[0]
+    out = jax.lax.conv_general_dilated(
+        x, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding=[(W - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b.astype(x.dtype)
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    Di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dt_x = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(dt_x, [Di, 2 * Di + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def ssm_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, L, D) -> (B, L, D).  L must be a multiple of ssm_chunk."""
+    B, L0, D = x.shape
+    Di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, L0)
+    L = ((L0 + Q - 1) // Q) * Q          # pad to a chunk multiple; padded
+    Cn = L // Q                          # tail tokens are causally inert
+    dt_c = x.dtype
+
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    if L != L0:
+        pad = [(0, 0), (0, L - L0), (0, 0)]
+        xbc = jnp.pad(xbc, pad)
+        dt = jnp.pad(dt, pad)
+    xs, Bv, Cv = jnp.split(xbc, [Di, Di + N], axis=-1)
+    xs = xs.reshape(B, L, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"])                   # (B,L,H) f32
+    a = -jnp.exp(p["A_log"])                               # (H,)
+    dA = dt * a                                            # (B,L,H)
+
+    # chunk views
+    xs = xs.reshape(B, Cn, Q, H, P)
+    Bc = Bv.reshape(B, Cn, Q, N)
+    Cc = Cv.reshape(B, Cn, Q, N)
+    dtc = dt.reshape(B, Cn, Q, H)
+    dAc = dA.reshape(B, Cn, Q, H)
+    cum = jnp.cumsum(dAc, axis=2)                          # (B,Cn,Q,H)
+
+    X = (xs.astype(jnp.float32) * dtc[..., None])          # dt-weighted x
+
+    # intra-chunk (quadratic in Q)
+    cb = jnp.einsum("bcqn,bckn->bcqk", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,Cn,Q,K,H)
+    iq = jnp.arange(Q)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", cb, decay, X)
+
+    # chunk states
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum)               # (B,Cn,Q,H)
+    S_c = jnp.einsum("bckn,bckh,bckhp->bchnp", Bc.astype(jnp.float32),
+                     w_end, X)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,Cn,H)
+
+    def scan_body(s_prev, inp):
+        s_c, dec = inp                                     # (B,H,N,P),(B,H)
+        s_new = s_prev * dec[..., None, None] + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, S_prevs = jax.lax.scan(
+        scan_body, s0,
+        (S_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    S_prev = S_prevs.transpose(1, 0, 2, 3, 4)              # (B,Cn,H,N,P)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cc.astype(jnp.float32), jnp.exp(cum), S_prev)
+
+    y = (y_intra + y_inter).reshape(B, L, H, P)
+    y = y + p["D"][None, None, :, None] * xs.reshape(B, L, H, P).astype(
+        jnp.float32)
+    y = y.reshape(B, L, Di)[:, :L0].astype(dt_c)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["out_proj"].astype(dt_c)
+
+
+# ---------------------------------------------------------------- decode
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    Di, N, H, P, W = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                      cfg.ssm_head_dim, cfg.ssm_conv_width)
+    return {
+        "conv": jnp.zeros((batch, W - 1, Di + 2 * N), dtype),
+        "state": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def ssm_decode(p: dict, cache: dict, x1: jnp.ndarray,
+               cfg: ModelConfig):
+    """x1: (B, 1, D).  Returns (y (B,1,D), cache')."""
+    B = x1.shape[0]
+    Di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+    dt_c = x1.dtype
+    z, xbc, dt = _split_proj(p, x1, cfg)
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)   # (B, W, C)
+    conv_out = (hist * p["conv_w"].astype(dt_c)[None]).sum(axis=1,
+                keepdims=True) + p["conv_b"].astype(dt_c)
+    xbc1 = jax.nn.silu(conv_out)                           # (B,1,C)
+    xs, Bv, Cv = jnp.split(xbc1, [Di, Di + N], axis=-1)
+    xs = xs.reshape(B, H, P).astype(jnp.float32)
+    Bv = Bv.reshape(B, N).astype(jnp.float32)
+    Cv = Cv.reshape(B, N).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt1 * a)                                 # (B,H)
+    X = xs * dt1[..., None]                                # (B,H,P)
+    s_new = cache["state"] * dec[..., None, None] + \
+        jnp.einsum("bn,bhp->bhnp", Bv, X)
+    y = jnp.einsum("bn,bhnp->bhp", Cv, s_new) + p["D"][None, :, None] * xs
+    y = y.reshape(B, 1, Di).astype(dt_c)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    y = y @ p["out_proj"].astype(dt_c)
+    return y, {"conv": hist[:, 1:], "state": s_new}

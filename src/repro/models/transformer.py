@@ -1,0 +1,457 @@
+"""Model assembly for every assigned architecture family.
+
+Layer-plan segmentation: the layer stack is grouped into *segments* of
+identical repeating patterns, e.g. gemma3's 5-local:1-global becomes
+``[(4 repeats, [L,L,L,L,L,G]), (1 repeat, [L,L])]``.  Each segment scans
+over its repeats (small HLO, long stacks), while the slots inside a repeat
+are unrolled — so every slot's window/theta/kind is STATIC, letting the
+sliding-window attention iterate only in-window kv blocks and local decode
+caches be ring buffers of window length.
+
+Params are nested dicts; leaves of segment slots carry a leading
+(repeats,) axis.  See ``repro.models.sharding`` for the path-based
+sharding rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import (ModelConfig, dense_init, rms_norm,
+                                 sinusoidal_positions, sinusoidal_at,
+                                 split_keys)
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import ssm as ssm_mod
+
+
+# ------------------------------------------------------------- layer plan
+@dataclasses.dataclass(frozen=True)
+class Slot:
+    kind: str                  # "attn" | "ssm"
+    window: int = 0            # 0 = global
+    theta: float = 1e4
+    moe: bool = False
+    shared_attn: bool = False  # hybrid: apply shared block after this slot
+    cross: bool = False        # enc-dec decoder slot
+
+
+def layer_plan(cfg: ModelConfig) -> list:
+    """Returns [(repeats, [Slot, ...]), ...] covering cfg.n_layers."""
+    if cfg.family in ("ssm", "hybrid"):
+        period = cfg.hybrid_attn_every if cfg.family == "hybrid" else 0
+        if period:
+            slots = [Slot("ssm")] * (period - 1) + \
+                [Slot("ssm", shared_attn=True)]
+            full, rem = divmod(cfg.n_layers, period)
+            plan = [(full, slots)]
+            if rem:
+                plan.append((1, [Slot("ssm")] * rem))
+            return plan
+        return [(cfg.n_layers, [Slot("ssm")])]
+
+    if cfg.window_size > 0 and cfg.global_every > 0:
+        period = cfg.global_every
+        local = Slot("attn", window=cfg.window_size,
+                     theta=cfg.rope_theta_local, moe=bool(cfg.n_experts))
+        glob = Slot("attn", window=0, theta=cfg.rope_theta,
+                    moe=bool(cfg.n_experts))
+        slots = [local] * (period - 1) + [glob]
+        full, rem = divmod(cfg.n_layers, period)
+        plan = [(full, slots)]
+        if rem:
+            plan.append((1, [local] * rem))
+        return plan
+
+    slot = Slot("attn", window=cfg.window_size, theta=cfg.rope_theta,
+                moe=bool(cfg.n_experts), cross=(cfg.family == "encdec"))
+    return [(cfg.n_layers, [slot])]
+
+
+def enc_plan(cfg: ModelConfig) -> list:
+    return [(cfg.n_enc_layers, [Slot("attn", window=0,
+                                     theta=cfg.rope_theta)])]
+
+
+# ------------------------------------------------------------------- init
+def _init_slot(cfg: ModelConfig, slot: Slot, key) -> dict:
+    ks = split_keys(key, ["attn", "mlp", "cross"])
+    D = cfg.d_model
+    if slot.kind == "ssm":
+        return {"ln": jnp.zeros((D,), jnp.float32),
+                "ssm": ssm_mod.init_ssm(cfg, ks["attn"])}
+    p = {"ln1": jnp.zeros((D,), jnp.float32),
+         "attn": attn_mod.init_attention(cfg, ks["attn"]),
+         "ln2": jnp.zeros((D,), jnp.float32)}
+    if slot.cross:
+        p["ln_x"] = jnp.zeros((D,), jnp.float32)
+        p["cross"] = attn_mod.init_attention(cfg, ks["cross"], cross=True)
+    if slot.moe:
+        p["mlp"] = mlp_mod.init_moe(cfg, ks["mlp"])
+    else:
+        p["mlp"] = mlp_mod.init_mlp(cfg, ks["mlp"])
+    return p
+
+
+def _init_segment(cfg: ModelConfig, repeats: int, slots: list, key) -> dict:
+    seg = {}
+    for si, slot in enumerate(slots):
+        slot_keys = jax.random.split(jax.random.fold_in(key, si), repeats)
+        seg[f"slot{si}"] = jax.vmap(
+            lambda k, cfg=cfg, slot=slot: _init_slot(cfg, slot, k)
+        )(slot_keys)
+    return seg
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    ks = split_keys(key, ["embed", "unembed", "layers", "shared", "enc"])
+    V, D = cfg.padded_vocab, cfg.d_model
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(ks["embed"], (V, D), jnp.float32)
+                  * 0.02),
+        "final_norm": jnp.zeros((D,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks["unembed"], D, V)
+    params["segments"] = [
+        _init_segment(cfg, r, slots, jax.random.fold_in(ks["layers"], i))
+        for i, (r, slots) in enumerate(layer_plan(cfg))
+    ]
+    if cfg.family == "hybrid":
+        kk = split_keys(ks["shared"], ["a", "m"])
+        params["shared_block"] = {
+            "ln1": jnp.zeros((D,), jnp.float32),
+            "attn": attn_mod.init_attention(cfg, kk["a"]),
+            "ln2": jnp.zeros((D,), jnp.float32),
+            "mlp": mlp_mod.init_mlp(cfg, kk["m"]),
+        }
+    if cfg.family == "encdec":
+        params["encoder"] = {
+            "segments": [
+                _init_segment(cfg, r, slots,
+                              jax.random.fold_in(ks["enc"], 100 + i))
+                for i, (r, slots) in enumerate(enc_plan(cfg))
+            ],
+            "final_norm": jnp.zeros((D,), jnp.float32),
+        }
+    return params
+
+
+# ---------------------------------------------------------------- forward
+def _apply_slot(sp: dict, slot: Slot, x, positions, cfg, shared,
+                enc_out=None, enc_pos=None, attn_scheme: str = "simple"):
+    """One sub-layer application (training/prefill path)."""
+    aux = jnp.zeros((), jnp.float32)
+    if slot.kind == "ssm":
+        x = x + ssm_mod.ssm_forward(sp["ssm"], rms_norm(x, sp["ln"]), cfg)
+    else:
+        h, _ = attn_mod.attn_forward(
+            sp["attn"], rms_norm(x, sp["ln1"]), positions, cfg,
+            window=slot.window, theta=slot.theta, scheme=attn_scheme)
+        x = x + h
+        if slot.cross and enc_out is not None:
+            hx, _ = attn_mod.attn_forward(
+                sp["cross"], rms_norm(x, sp["ln_x"]), positions, cfg,
+                window=0, enc_out=enc_out, enc_pos=enc_pos)
+            x = x + hx
+        if slot.moe:
+            h, aux = mlp_mod.moe_forward(sp["mlp"], rms_norm(x, sp["ln2"]),
+                                         cfg)
+        else:
+            h = mlp_mod.mlp_forward(sp["mlp"], rms_norm(x, sp["ln2"]))
+        x = x + h
+    if slot.shared_attn and shared is not None:
+        h, _ = attn_mod.attn_forward(
+            shared["attn"], rms_norm(x, shared["ln1"]), positions, cfg,
+            window=0, theta=cfg.rope_theta, scheme=attn_scheme)
+        x = x + h
+        x = x + mlp_mod.mlp_forward(shared["mlp"],
+                                    rms_norm(x, shared["ln2"]))
+    return x, aux
+
+
+def _run_stack(segments_params: list, plan: list, x, positions, cfg,
+               shared=None, enc_out=None, enc_pos=None,
+               remat: bool = True, act_sharding=None,
+               unroll: bool = False, attn_scheme: str = "simple"):
+    aux_total = jnp.zeros((), jnp.float32)
+    for seg_p, (repeats, slots) in zip(segments_params, plan):
+        def body(carry, layer_p, slots=slots):
+            h, aux = carry, jnp.zeros((), jnp.float32)
+            if act_sharding is not None:
+                # pin layer-boundary activations (batch on data axes,
+                # embed on 'model') — bounds the per-chip residual stream
+                # saved across the remat scan
+                h = jax.lax.with_sharding_constraint(h, act_sharding)
+            for si, slot in enumerate(slots):
+                h, a = _apply_slot(layer_p[f"slot{si}"], slot, h,
+                                   positions, cfg, shared, enc_out,
+                                   enc_pos, attn_scheme=attn_scheme)
+                aux = aux + a
+            return h, aux
+        # remat: True/"full" = recompute everything; "dots" = save matmul
+        # outputs (less recompute, more memory); False/"none" = no remat
+        if remat in (True, "full"):
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        elif remat == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        # unroll=True removes the while loop — used by the cost-model
+        # validation tests (XLA cost_analysis ignores loop trip counts)
+        x, auxs = jax.lax.scan(body, x, seg_p,
+                               unroll=repeats if unroll else 1)
+        aux_total = aux_total + auxs.sum()
+    return x, aux_total
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jnp.ndarray):
+    """Whisper-style encoder over stub frame embeddings (B, T, D)."""
+    B, T, D = frames.shape
+    pos_tab = jnp.asarray(sinusoidal_positions(T, D), frames.dtype)
+    x = frames + pos_tab[None]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
+                                 (B, T))
+    x, _ = _run_stack(params["encoder"]["segments"], enc_plan(cfg), x,
+                      positions, cfg)
+    return rms_norm(x, params["encoder"]["final_norm"]), positions
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            frames: jnp.ndarray | None = None, remat: bool = True,
+            return_hidden: bool = False, act_sharding=None,
+            unroll: bool = False, attn_scheme: str = "simple"):
+    """Training / prefill forward.  tokens: (B, S) int32.
+    Returns (logits (B, S, V) — or final hidden (B, S, D) with
+    ``return_hidden`` for chunked-loss callers — and aux_loss scalar)."""
+    B, S = tokens.shape
+    dt = cfg.cdtype
+    x = params["embed"].astype(dt)[tokens]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+    enc_out = enc_pos = None
+    if cfg.family == "encdec":
+        assert frames is not None, "encdec needs stub frame embeddings"
+        enc_out, enc_pos = encode(params, cfg, frames.astype(dt))
+        pos_tab = jnp.asarray(sinusoidal_positions(S, cfg.d_model), dt)
+        x = x + pos_tab[None]
+    x, aux = _run_stack(params["segments"], layer_plan(cfg), x, positions,
+                        cfg, shared=params.get("shared_block"),
+                        enc_out=enc_out, enc_pos=enc_pos, remat=remat,
+                        act_sharding=act_sharding, unroll=unroll,
+                        attn_scheme=attn_scheme)
+    x = rms_norm(x, params["final_norm"])
+    if return_hidden:
+        return x, aux
+    return x @ unembed_matrix(params, cfg), aux
+
+
+def unembed_matrix(params: dict, cfg: ModelConfig) -> jnp.ndarray:
+    dt = cfg.cdtype
+    return (params["embed"].T if cfg.tie_embeddings
+            else params["unembed"]).astype(dt)
+
+
+# ----------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               enc_len: int | None = None) -> dict:
+    """KV/SSM cache pytree mirroring the segment structure.
+
+    ``cfg.kv_cache_dtype == "int8"`` stores self-attention caches as int8
+    with per-entry scales — halves the decode memory-roofline term (§Perf
+    iteration 4)."""
+    dt = cfg.cdtype
+    quant = cfg.kv_cache_dtype == "int8"
+    kv_dt = jnp.int8 if quant else dt
+    K, hd = cfg.n_kv_heads, cfg.hd
+    cache: dict[str, Any] = {"segments": []}
+    for repeats, slots in layer_plan(cfg):
+        seg = {}
+        for si, slot in enumerate(slots):
+            if slot.kind == "ssm":
+                c = ssm_mod.ssm_init_cache(cfg, batch, dt)
+                c = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None],
+                                               (repeats,) + a.shape), c)
+            else:
+                C = min(slot.window, max_seq) if slot.window else max_seq
+                c = {"k": jnp.zeros((repeats, batch, C, K, hd), kv_dt),
+                     "v": jnp.zeros((repeats, batch, C, K, hd), kv_dt)}
+                if quant:
+                    c["k_scale"] = jnp.zeros((repeats, batch, C, K),
+                                             jnp.float32)
+                    c["v_scale"] = jnp.zeros((repeats, batch, C, K),
+                                             jnp.float32)
+                if slot.cross:
+                    T = enc_len or cfg.n_frames
+                    c["ck"] = jnp.zeros((repeats, batch, T, K, hd), dt)
+                    c["cv"] = jnp.zeros((repeats, batch, T, K, hd), dt)
+            if slot.shared_attn:
+                c["shared_k"] = jnp.zeros((repeats, batch, max_seq, K, hd),
+                                          kv_dt)
+                c["shared_v"] = jnp.zeros((repeats, batch, max_seq, K, hd),
+                                          kv_dt)
+                if quant:
+                    c["shared_k_scale"] = jnp.zeros(
+                        (repeats, batch, max_seq, K), jnp.float32)
+                    c["shared_v_scale"] = jnp.zeros(
+                        (repeats, batch, max_seq, K), jnp.float32)
+            seg[f"slot{si}"] = c
+        cache["segments"].append(seg)
+    return cache
+
+
+def _decode_slot(sp: dict, cache_slot: dict, slot: Slot, x, pos, cfg,
+                 shared):
+    new_cache = dict(cache_slot)
+    if slot.kind == "ssm":
+        h, c = ssm_mod.ssm_decode(
+            sp["ssm"], {"conv": cache_slot["conv"],
+                        "state": cache_slot["state"]},
+            rms_norm(x, sp["ln"]), cfg)
+        x = x + h
+        new_cache.update(c)
+    else:
+        res = attn_mod.attn_decode(
+            sp["attn"], cache_slot["k"], cache_slot["v"],
+            rms_norm(x, sp["ln1"]), pos, cfg, window=slot.window,
+            theta=slot.theta, k_scale=cache_slot.get("k_scale"),
+            v_scale=cache_slot.get("v_scale"))
+        if len(res) == 5:
+            h, ck, cv, ks, vs = res
+            new_cache["k_scale"], new_cache["v_scale"] = ks, vs
+        else:
+            h, ck, cv = res
+        x = x + h
+        new_cache["k"], new_cache["v"] = ck, cv
+        if slot.cross:
+            x = x + attn_mod.cross_attn_decode(
+                sp["cross"], cache_slot["ck"], cache_slot["cv"],
+                rms_norm(x, sp["ln_x"]), cfg)
+        if slot.moe:
+            # decode: dense per-token expert mix (B tokens, no capacity)
+            h, _ = _moe_decode(sp["mlp"], rms_norm(x, sp["ln2"]), cfg)
+        else:
+            h = mlp_mod.mlp_forward(sp["mlp"], rms_norm(x, sp["ln2"]))
+        x = x + h
+    if slot.shared_attn and shared is not None:
+        res = attn_mod.attn_decode(
+            shared["attn"], cache_slot["shared_k"], cache_slot["shared_v"],
+            rms_norm(x, shared["ln1"]), pos, cfg, window=0,
+            theta=cfg.rope_theta,
+            k_scale=cache_slot.get("shared_k_scale"),
+            v_scale=cache_slot.get("shared_v_scale"))
+        if len(res) == 5:
+            h, ck, cv, ks, vs = res
+            new_cache["shared_k_scale"] = ks
+            new_cache["shared_v_scale"] = vs
+        else:
+            h, ck, cv = res
+        x = x + h
+        new_cache["shared_k"], new_cache["shared_v"] = ck, cv
+        x = x + mlp_mod.mlp_forward(shared["mlp"],
+                                    rms_norm(x, shared["ln2"]))
+    return x, new_cache
+
+
+def _moe_decode(p: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """Single-token MoE decode via one-hot activation dispatch.
+
+    §Perf note: the obvious formulation — gather expert weights per token
+    (``p["wg"][eidx]``) — moves (B, k, D, F) WEIGHT bytes across the
+    sharded expert axis: ~11 GB/layer of all-reduce for llama4-scout at
+    B=128 (measured in the dry-run HLO; see EXPERIMENTS.md §Perf
+    iteration 1).  Dispatching activations instead moves (B, E_hit, D)
+    ACTIVATION bytes (~MBs).  Dense one-hot dispatch over E is exact for
+    decode (no capacity drops) and costs 2·B·E·D·F flops only in the
+    *sharded* expert dim — each chip computes its local experts.
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    dt = x.dtype
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                 # (B,1,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # combine weights per expert: (B, E), zero for unrouted experts
+    comb = jnp.zeros((B, E), jnp.float32)
+    bidx = jnp.arange(B)[:, None]
+    comb = comb.at[bidx, eidx[:, 0, :]].add(gate[:, 0, :])
+    xe = x[:, 0, :]                                      # (B, D)
+    # all experts applied to all tokens, weighted — E is 'model'-sharded,
+    # so each chip runs its E/tp local experts over the tiny (B, D) batch
+    h = jax.nn.silu(jnp.einsum("bd,edf->ebf", xe, p["wg"].astype(dt))) * \
+        jnp.einsum("bd,edf->ebf", xe, p["wu"].astype(dt))
+    ye = jnp.einsum("ebf,efd->ebd", h, p["wd"].astype(dt))
+    y = jnp.einsum("ebd,be->bd", ye, comb.astype(dt))[:, None, :]
+    if cfg.n_shared_experts:
+        y = y + mlp_mod.mlp_forward(p["shared"], x)
+    return y, jnp.zeros((), jnp.float32)
+
+
+def build_cross_cache(params: dict, cfg: ModelConfig,
+                      enc_out: jnp.ndarray, cache: dict) -> dict:
+    """Fill the decoder cross-attention k/v from encoder output (serving
+    prefill for enc-dec models)."""
+    K, hd = cfg.n_kv_heads, cfg.hd
+    dt = enc_out.dtype
+    new_cache = {"segments": []}
+    for seg_p, seg_c, (repeats, slots) in zip(
+            params["segments"], cache["segments"], layer_plan(cfg)):
+        seg_new = dict(seg_c)
+        for si, slot in enumerate(slots):
+            if not slot.cross:
+                continue
+            def kv_of(cp):
+                k = (enc_out @ cp["wk"].astype(dt))
+                v = (enc_out @ cp["wv"].astype(dt))
+                if cfg.qkv_bias:
+                    k = k + cp["bk"].astype(dt)
+                    v = v + cp["bv"].astype(dt)
+                k = k.reshape(k.shape[:-1] + (K, hd))
+                v = v.reshape(v.shape[:-1] + (K, hd))
+                if cfg.qk_norm:
+                    k = rms_norm(k, cp["k_norm"])
+                return k, v
+            ck, cv = jax.vmap(kv_of)(seg_p[f"slot{si}"]["cross"])
+            slot_c = dict(seg_c[f"slot{si}"])
+            slot_c["ck"], slot_c["cv"] = ck.astype(dt), cv.astype(dt)
+            seg_new[f"slot{si}"] = slot_c
+        new_cache["segments"].append(seg_new)
+    return new_cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                token: jnp.ndarray, pos: jnp.ndarray):
+    """token: (B,) int32; pos: (B,) int32.  Returns (logits (B,V), cache')."""
+    dt = cfg.cdtype
+    B = token.shape[0]
+    x = params["embed"].astype(dt)[token][:, None, :]       # (B,1,D)
+    if cfg.family == "encdec":
+        x = x + sinusoidal_at(pos, cfg.d_model).astype(dt)[:, None, :]
+    shared = params.get("shared_block")
+    new_cache: dict[str, Any] = {"segments": []}
+    for seg_p, seg_c, (repeats, slots) in zip(
+            params["segments"], cache["segments"], layer_plan(cfg)):
+        def body(carry, xs, slots=slots):
+            h = carry
+            layer_p, layer_c = xs
+            out_c = {}
+            for si, slot in enumerate(slots):
+                h, nc = _decode_slot(layer_p[f"slot{si}"],
+                                     layer_c[f"slot{si}"], slot, h, pos,
+                                     cfg, shared)
+                out_c[f"slot{si}"] = nc
+            return h, out_c
+        x, seg_c_new = jax.lax.scan(body, x, (seg_p, seg_c))
+        new_cache["segments"].append(seg_c_new)
+    x = rms_norm(x, params["final_norm"])
+    logits = (x @ unembed_matrix(params, cfg))[:, 0, :]
+    return logits, new_cache

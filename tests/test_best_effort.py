@@ -1,0 +1,75 @@
+"""Best-effort algorithms (paper Sec. 10): GOO greedy, IKKBZ, left-deep
+DP — cross-validated against the exact algorithms."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.querygraph import (QueryGraph, chain, star, random_sparse,
+                                   make_cardinalities)
+from repro.core.best_effort import goo, ikkbz, dpsub_leftdeep
+from repro.core.baselines import dpsub_out
+
+
+def _random_tree(n, rng):
+    edges = [(int(rng.integers(0, i)), i) for i in range(1, n)]
+    return QueryGraph(n, tuple(sorted(tuple(sorted(e)) for e in edges)))
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=25, deadline=None)
+def test_ikkbz_optimal_leftdeep_on_trees(seed):
+    """IKKBZ == exact left-deep DP on tree graphs under the UNCLIPPED
+    independence model (clipping breaks the ASI property IKKBZ needs —
+    see the module docstring)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 9))
+    q = _random_tree(n, rng)
+    card, base, sel = make_cardinalities(
+        q, seed=seed % 1000, base_range=(1e2, 1e4),
+        selectivity_range=(1e-2, 1.0), cap=1e30, return_model=True)
+    dp = dpsub_leftdeep(q, card)
+    seq, tree = ikkbz(q, base, sel, card)
+    assert sorted(seq) == list(range(n))
+    assert tree.validate()
+    assert np.isclose(tree.cost_out(card), dp[-1], rtol=1e-9)
+
+
+def test_ikkbz_rejects_cyclic():
+    q = QueryGraph(3, ((0, 1), (1, 2), (0, 2)))
+    card, base, sel = make_cardinalities(q, seed=0, return_model=True)
+    with pytest.raises(ValueError):
+        ikkbz(q, base, sel, card)
+
+
+def test_leftdeep_dp_above_bushy():
+    """Left-deep optimum >= bushy optimum (the left-deep space is a
+    subset)."""
+    for seed in range(5):
+        q = random_sparse(8, 3, seed=seed)
+        card = make_cardinalities(q, seed=seed)
+        ld = dpsub_leftdeep(q, card)[-1]
+        bushy = dpsub_out(card, 8)[-1]
+        assert ld >= bushy - 1e-9
+
+
+@pytest.mark.parametrize("maker", [chain, star, random_sparse])
+def test_goo_valid_and_suboptimal(maker):
+    n = 8
+    q = maker(n) if maker is not random_sparse else maker(n, 3, seed=1)
+    card = make_cardinalities(q, seed=2)
+    t = goo(q, card)
+    assert t.validate()
+    opt = dpsub_out(card, n)[-1]
+    assert t.cost_out(card) >= opt - 1e-9
+
+
+def test_goo_gap_exists_somewhere():
+    """The greedy gap that motivates exact algorithms: on some instance
+    GOO pays strictly more than the optimum."""
+    worst = 1.0
+    for seed in range(20):
+        q = random_sparse(8, 3, seed=seed)
+        card = make_cardinalities(q, seed=seed)
+        ratio = goo(q, card).cost_out(card) / dpsub_out(card, 8)[-1]
+        worst = max(worst, ratio)
+    assert worst > 1.01, worst

@@ -1,0 +1,102 @@
+"""Gold integration test: sequential decode (KV/SSM caches, ring buffers,
+rope at positions) reproduces the training forward logits exactly
+(teacher forcing), for every architecture family."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.models import transformer as T
+
+# MoE archs need no-drop capacity for exact equivalence (the train path
+# drops tokens at capacity; decode is exact per-token routing)
+CASES = [
+    ("qwen2-0.5b", {}),
+    ("qwen3-0.6b", {}),
+    ("gemma3-1b", {}),              # exercises local ring caches
+    ("gemma3-4b", {}),
+    ("mamba2-130m", {}),            # ssm state + conv cache
+    ("zamba2-1.2b", {}),            # hybrid shared-attn caches
+    ("chameleon-34b", {}),
+    ("whisper-large-v3", {}),       # cross-attn cache
+    ("olmoe-1b-7b", {"capacity_factor": 16.0}),
+    ("llama4-scout-17b-a16e", {"capacity_factor": 16.0}),
+]
+
+
+@pytest.mark.parametrize("arch,overrides", CASES)
+def test_decode_equals_forward(arch, overrides):
+    cfg = reduced(get_config(arch))
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    params = T.init_params(cfg, seed=0)
+    rng = np.random.default_rng(0)
+    B, S = 2, 40                      # not a block multiple: padding path
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    frames = None
+    if cfg.family == "encdec":
+        frames = jnp.asarray(
+            rng.normal(size=(B, cfg.n_frames, cfg.d_model)), cfg.cdtype)
+    ref, _ = T.forward(params, cfg, tok, frames=frames, remat=False)
+    cache = T.init_cache(cfg, B, max_seq=S)
+    if cfg.family == "encdec":
+        enc_out, _ = T.encode(params, cfg, frames)
+        cache = T.build_cross_cache(params, cfg, enc_out, cache)
+    step = jax.jit(lambda c, t, p: T.decode_step(params, cfg, c, t, p))
+    worst = 0.0
+    for i in range(S):
+        lg, cache = step(cache, tok[:, i], jnp.full((B,), i, jnp.int32))
+        scale = np.abs(np.asarray(ref[:, i, :], np.float32)).max() + 1e-6
+        err = np.abs(np.asarray(ref[:, i, :], np.float32)
+                     - np.asarray(lg, np.float32)).max() / scale
+        worst = max(worst, float(err))
+    assert worst < 2e-3, (arch, worst)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "zamba2-1.2b"])
+def test_int8_kv_cache_decode(arch):
+    """§Perf iteration 4: int8 KV caches stay within serving tolerance of
+    the bf16 forward."""
+    cfg = dataclasses.replace(reduced(get_config(arch)),
+                              kv_cache_dtype="int8")
+    params = T.init_params(cfg, seed=0)
+    rng = np.random.default_rng(0)
+    B, S = 2, 32
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    ref, _ = T.forward(params, cfg, tok, remat=False)
+    cache = T.init_cache(cfg, B, max_seq=S)
+    # int8 leaves present
+    leaves = jax.tree.leaves(cache)
+    assert any(a.dtype == jnp.int8 for a in leaves)
+    step = jax.jit(lambda c, t, p: T.decode_step(params, cfg, c, t, p))
+    worst = 0.0
+    for i in range(S):
+        lg, cache = step(cache, tok[:, i], jnp.full((B,), i, jnp.int32))
+        scale = np.abs(np.asarray(ref[:, i, :], np.float32)).max() + 1e-6
+        err = np.abs(np.asarray(ref[:, i, :], np.float32)
+                     - np.asarray(lg, np.float32)).max() / scale
+        worst = max(worst, float(err))
+    assert worst < 5e-2, (arch, worst)
+
+
+def test_remat_does_not_change_forward():
+    cfg = reduced(get_config("qwen3-0.6b"))
+    params = T.init_params(cfg, seed=0)
+    tok = jnp.asarray(np.arange(64, dtype=np.int32)[None] % cfg.vocab_size)
+    a, _ = T.forward(params, cfg, tok, remat=False)
+    b, _ = T.forward(params, cfg, tok, remat=True)
+    assert np.allclose(np.asarray(a, np.float32),
+                       np.asarray(b, np.float32), atol=1e-5)
+
+
+def test_unroll_does_not_change_forward():
+    cfg = reduced(get_config("gemma3-1b"))
+    params = T.init_params(cfg, seed=0)
+    tok = jnp.asarray(np.arange(64, dtype=np.int32)[None] % cfg.vocab_size)
+    a, _ = T.forward(params, cfg, tok, remat=False)
+    b, _ = T.forward(params, cfg, tok, remat=False, unroll=True)
+    assert np.allclose(np.asarray(a, np.float32),
+                       np.asarray(b, np.float32), atol=1e-5)

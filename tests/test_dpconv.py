@@ -1,0 +1,250 @@
+"""DPconv[max] (Alg. 3), exact C_out, approximation, C_cap, baselines."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.querygraph import (clique, chain, star, cycle,
+                                   random_sparse, make_cardinalities)
+from repro.core.bitset import popcounts
+from repro.core.dpconv_max import dpconv_max, dpconv_max_ref
+from repro.core.dpconv_out import dpconv_out
+from repro.core.approx import approx_out
+from repro.core.ccap import ccap
+from repro.core.baselines import (dpsub, dpsub_out, dpsub_max, dpsize,
+                                  dpsub_with_tree)
+from repro.core.dpccp import dpccp, dpccp_with_tree, \
+    enumerate_csg_cmp_pairs
+from repro.core.dpconv import optimize
+from repro.core import jointree
+
+
+# ------------------------------------------------------------- DPconv[max]
+@pytest.mark.parametrize("maker", [clique, chain, star, cycle])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_dpconv_max_matches_oracle(maker, seed):
+    n = 7
+    q = maker(n)
+    card = make_cardinalities(q, seed=seed)
+    res = dpconv_max(q, card)
+    assert res.optimum == dpconv_max_ref(card, n)
+    assert res.tree.validate()
+    assert res.tree.cost_max(card) == res.optimum
+
+
+@pytest.mark.parametrize("gamma_batch", [2, 4, 8])
+def test_dpconv_max_batched_gamma(gamma_batch):
+    q = clique(8)
+    card = make_cardinalities(q, seed=3)
+    ref = dpconv_max_ref(card, 8)
+    res = dpconv_max(q, card, gamma_batch=gamma_batch, extract_tree=False)
+    assert res.optimum == ref
+    # (G+1)-ary search should use fewer FSC passes than binary search
+    res_bin = dpconv_max(q, card, extract_tree=False)
+    assert res.feasibility_passes <= res_bin.feasibility_passes
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_dpconv_max_arbitrary_cardinalities(seed):
+    """Alg. 3 needs no submultiplicativity — any positive c works."""
+    n = 6
+    rng = np.random.default_rng(seed)
+    card = rng.integers(1, 1000, 1 << n).astype(np.float64)
+    q = clique(n)
+    res = dpconv_max(q, card, extract_tree=True)
+    assert res.optimum == dpconv_max_ref(card, n)
+    assert res.tree.cost_max(card) == res.optimum
+
+
+def test_direct_layers_consistent():
+    q = clique(9)
+    card = make_cardinalities(q, seed=7)
+    a = dpconv_max(q, card, direct_layers=0, extract_tree=False).optimum
+    b = dpconv_max(q, card, direct_layers=4, extract_tree=False).optimum
+    c = dpconv_max(q, card, direct_layers=9, extract_tree=False).optimum
+    assert a == b == c
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_early_exit_consistent(seed):
+    """§Perf early-exit probes (dyadic-window abort) are exact."""
+    n = 8
+    q = clique(n)
+    card = make_cardinalities(q, seed=seed)
+    a = dpconv_max(q, card, extract_tree=False, early_exit=True).optimum
+    assert a == dpconv_max_ref(card, n)
+
+
+# ---------------------------------------------------------------- baselines
+def test_dpsub_equals_dpsize():
+    rng = np.random.default_rng(0)
+    for n in (4, 6):
+        card = rng.integers(1, 50, 1 << n).astype(np.float64)
+        for mode in ("out", "max"):
+            assert np.allclose(dpsub(card, n, mode=mode),
+                               dpsize(card, n, mode=mode))
+
+
+def test_dpsub_trees():
+    q = clique(6)
+    card = make_cardinalities(q, seed=5)
+    for mode in ("out", "max"):
+        dp, tree = dpsub_with_tree(card, 6, mode=mode)
+        assert tree.validate()
+        cost = tree.cost_out(card) if mode == "out" else \
+            tree.cost_max(card)
+        assert np.isclose(cost, dp[-1])
+
+
+def test_dpsub_smj_monotone():
+    """C_smj >= 0 and equals tree-recomputed cost."""
+    q = clique(5)
+    card = make_cardinalities(q, seed=2, cap=1e4)
+    dp = dpsub(card, 5, mode="smj")
+    assert np.isfinite(dp[-1]) and dp[-1] > 0
+
+
+# ------------------------------------------------------------------- DPccp
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_dpccp_matches_connected_dpsub(seed):
+    n = 7
+    q = random_sparse(n, 3, seed=seed)
+    card = make_cardinalities(q, seed=seed)
+    conn = q.connected_mask()
+    dp_ccp, nccp = dpccp(q, card, mode="out")
+    dp_sub = dpsub_out(card, n, connected=conn)
+    m = np.isfinite(dp_sub)
+    assert np.allclose(dp_ccp[m], dp_sub[m])
+    _, tree = dpccp_with_tree(q, card, mode="out")
+    assert tree.validate()
+
+
+def _brute_ccp(q):
+    """Unordered connected-subgraph / connected-complement pairs."""
+    n = q.n
+    conn = q.connected_mask()
+    cnt = 0
+    for s1 in range(1, 1 << n):
+        if not conn[s1]:
+            continue
+        rest = ((1 << n) - 1) & ~s1
+        s2 = rest
+        while s2:
+            if conn[s2] and s2 > s1 and q.can_join(s1, s2):
+                cnt += 1
+            s2 = (s2 - 1) & rest
+    return cnt
+
+
+@pytest.mark.parametrize("maker,n", [(chain, 5), (chain, 7), (star, 5),
+                                     (cycle, 6), (clique, 5)])
+def test_dpccp_ccp_count_matches_bruteforce(maker, n):
+    q = maker(n)
+    pairs = enumerate_csg_cmp_pairs(q)
+    uniq = {(min(a, b), max(a, b)) for a, b in pairs}
+    assert len(uniq) == _brute_ccp(q), (maker.__name__, n)
+    # the enumeration emits each unordered ccp exactly once
+    assert len(pairs) == len(uniq)
+
+
+def test_dpccp_beats_clique_count_on_sparse():
+    q = chain(8)
+    pairs = enumerate_csg_cmp_pairs(q)
+    q2 = clique(8)
+    pairs2 = enumerate_csg_cmp_pairs(q2)
+    assert len(pairs) < len(pairs2) / 10
+
+
+# ----------------------------------------------------------------- C_out
+@pytest.mark.parametrize("n", [3, 5, 7])
+def test_dpconv_out_exact(n):
+    rng = np.random.default_rng(n)
+    card = rng.integers(1, 25, 1 << n).astype(np.float64)
+    opt, dp = dpconv_out(card, n)
+    ref = dpsub_out(card, n)
+    assert opt == ref[-1]
+    pc = popcounts(n)
+    assert np.allclose(dp[pc >= 1], ref[pc >= 1])
+
+
+def test_dpconv_out_tree():
+    rng = np.random.default_rng(4)
+    n = 6
+    card = rng.integers(1, 20, 1 << n).astype(np.float64)
+    opt, dp, tree = dpconv_out(card, n, extract_tree=True)
+    assert tree.validate()
+    assert tree.cost_out(card) == opt
+
+
+# ----------------------------------------------------------- approximation
+@pytest.mark.parametrize("eps", [0.05, 0.25, 1.0])
+def test_approx_guarantee(eps):
+    n = 6
+    q = clique(n)
+    for seed in range(3):
+        card = make_cardinalities(q, seed=seed, cap=1e5)
+        true_opt = dpsub_out(card, n)[-1]
+        val, _ = approx_out(card, n, eps=eps)
+        assert true_opt - 1e-6 <= val <= (1 + eps) * true_opt
+
+
+def test_approx_smj_guarantee():
+    n = 5
+    q = clique(n)
+    card = make_cardinalities(q, seed=1, cap=1e4)
+    true_opt = dpsub(card, n, mode="smj")[-1]
+    val, _ = approx_out(card, n, eps=0.3, cost="smj")
+    assert true_opt - 1e-6 <= val <= 1.3 * true_opt
+
+
+@given(st.integers(0, 10 ** 6), st.floats(0.02, 2.0))
+@settings(max_examples=15, deadline=None)
+def test_approx_guarantee_property(seed, eps):
+    n = 5
+    rng = np.random.default_rng(seed)
+    card = rng.integers(1, 10 ** 4, 1 << n).astype(np.float64)
+    true_opt = dpsub_out(card, n)[-1]
+    val, _ = approx_out(card, n, eps=eps)
+    assert true_opt * (1 - 1e-9) <= val <= (1 + eps) * true_opt
+
+
+# ------------------------------------------------------------------ C_cap
+def test_ccap_invariants():
+    n = 7
+    q = clique(n)
+    card = make_cardinalities(q, seed=9)
+    res = ccap(q, card)
+    gmax = dpsub_max(card, n)[-1]
+    vanilla = dpsub_out(card, n)[-1]
+    assert np.isclose(res.gamma, gmax)
+    assert res.cout >= vanilla - 1e-9          # capped can't beat vanilla
+    assert res.tree.cost_max(card) <= res.gamma + 1e-9
+    assert np.isclose(res.tree.cost_out(card), res.cout)
+    # both pass-1 engines agree
+    res2 = ccap(q, card, engine_pass1="dpsub", extract_tree=False)
+    assert np.isclose(res2.cout, res.cout)
+
+
+def test_ccap_slack_tradeoff():
+    """Larger cap slack -> C_out can only improve (Sec. 11 trade-off)."""
+    n = 6
+    q = clique(n)
+    card = make_cardinalities(q, seed=11)
+    prev = None
+    for slack in (1.0, 2.0, 10.0):
+        r = ccap(q, card, gamma_slack=slack, extract_tree=False)
+        if prev is not None:
+            assert r.cout <= prev + 1e-9
+        prev = r.cout
+
+
+# ----------------------------------------------------------------- facade
+def test_optimize_facade():
+    q = clique(6)
+    card = make_cardinalities(q, seed=0)
+    r1 = optimize(q, card, cost="max")
+    r2 = optimize(q, card, cost="max", method="dpsub")
+    assert r1.cost == r2.cost
+    r3 = optimize(q, card, cost="cap", extract_tree=False)
+    assert r3.cost >= optimize(q, card, cost="out",
+                               method="dpsub").cost - 1e-9

@@ -1,0 +1,109 @@
+"""Sharding rules + dry-run smoke (subprocess: needs 512 host devices).
+
+The full 80-cell sweep runs via ``python -m repro.launch.dryrun --all``;
+these tests prove the machinery works end-to-end inside pytest, on two
+representative small cells, plus unit-level checks of the sharding rules
+and HLO collective parser that don't need the big device count.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+
+
+@pytest.mark.parametrize("cell", [
+    ("qwen3-0.6b", "train_4k", "pod"),
+    ("mamba2-130m", "decode_32k", "multipod"),
+])
+def test_dryrun_cell_subprocess(cell, tmp_path):
+    arch, shape, mesh = cell
+    out = str(tmp_path)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", out],
+        env=ENV, cwd=REPO, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stdout + r.stderr
+    with open(os.path.join(out, f"{arch}__{shape}__{mesh}.json")) as f:
+        res = json.load(f)
+    assert res["status"] == "ok"
+    assert res["n_chips"] == (512 if mesh == "multipod" else 256)
+    assert res["hlo_flops"] > 0
+    assert res["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_sweep_results_complete():
+    """The committed sweep results cover all 10 archs x 4 shapes x 2
+    meshes with zero errors (deliverable e)."""
+    d = os.path.join(REPO, "benchmarks", "results", "dryrun")
+    if not os.path.isdir(d) or len(os.listdir(d)) < 80:
+        pytest.skip("full sweep results not present")
+    statuses = {}
+    for f in os.listdir(d):
+        with open(os.path.join(d, f)) as fh:
+            r = json.load(fh)
+        statuses[f] = r["status"]
+    assert len(statuses) == 80
+    assert all(s in ("ok", "skipped") for s in statuses.values()), {
+        k: v for k, v in statuses.items() if v == "error"}
+    n_skip = sum(1 for s in statuses.values() if s == "skipped")
+    assert n_skip == 10   # long_500k x 5 full-attention archs x 2 meshes
+
+
+# -------------------------------------------------- unit-level (1 device)
+def test_param_sharding_rules_shapes():
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.models import transformer as T
+    from repro.models import sharding as shd
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    params = jax.eval_shape(lambda: T.init_params(cfg, seed=0))
+    specs = shd.param_specs(mesh, params)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    # every leaf got a PartitionSpec of matching rank
+    pflat = jax.tree_util.tree_flatten_with_path(params)[0]
+    assert len(flat) == len(pflat)
+    for (pa, spec), (pb, leaf) in zip(flat, pflat):
+        assert len(spec) <= leaf.ndim + 1
+
+
+def test_hlo_collective_parser():
+    from repro.launch.hlo_parse import parse_collectives, \
+        link_traffic_bytes
+    hlo = """
+  %ag = bf16[8,1024]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[256]{0} all-reduce(%x), replica_groups=[16,16]<=[256]
+  %rs.1 = bf16[2,512]{1,0} reduce-scatter(%y), replica_groups={{0,1}}
+  %cp = f32[4]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %agd = bf16[8,8]{1,0} all-gather-done(%h)
+"""
+    st = parse_collectives(hlo)
+    assert st["all-gather"]["count"] == 1
+    assert st["all-gather"]["bytes"] == 8 * 1024 * 2
+    assert st["all-reduce"]["bytes"] == 256 * 4
+    assert st["reduce-scatter"]["bytes"] == 2 * 512 * 2
+    assert st["collective-permute"]["count"] == 1
+    assert "all-gather-done" not in st
+    assert link_traffic_bytes(st, 4) > 0
+
+
+def test_production_mesh_shapes():
+    """Mesh axes/order per spec (uses the 512-device subprocess)."""
+    code = (
+        "import os; "
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count"
+        "=512'; import jax; "
+        "from repro.launch.mesh import make_production_mesh; "
+        "m1=make_production_mesh(); m2=make_production_mesh(multi_pod=True);"
+        "assert m1.axis_names==('data','model') and m1.shape['data']==16;"
+        "assert m2.axis_names==('pod','data','model') and "
+        "m2.shape['pod']==2; print('ok')")
+    r = subprocess.run([sys.executable, "-c", code], env=ENV, cwd=REPO,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0 and "ok" in r.stdout, r.stderr

@@ -1,0 +1,86 @@
+"""Zeta/Moebius transforms and fast subset convolution vs naive oracles."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitset import popcounts, submasks
+from repro.core.zeta import (zeta, mobius, zeta_matmul, mobius_matmul,
+                             zeta_np, mobius_np)
+from repro.core.fsc import subset_convolve, subset_convolve_ref, rank_split
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 6, 8])
+def test_zeta_matches_naive(n):
+    rng = np.random.default_rng(n)
+    f = rng.integers(-10, 10, 1 << n).astype(np.float64)
+    assert np.allclose(np.asarray(zeta(jnp.asarray(f))), zeta_np(f))
+    assert np.allclose(np.asarray(mobius(jnp.asarray(f))), mobius_np(f))
+
+
+@pytest.mark.parametrize("n", [2, 5, 9])
+@pytest.mark.parametrize("fn", ["butterfly", "matmul"])
+def test_roundtrip(n, fn):
+    rng = np.random.default_rng(n)
+    f = jnp.asarray(rng.normal(size=1 << n))
+    if fn == "butterfly":
+        rt = mobius(zeta(f))
+    else:
+        rt = mobius_matmul(zeta_matmul(f))
+    assert np.allclose(np.asarray(rt), np.asarray(f), atol=1e-9)
+
+
+@pytest.mark.parametrize("n", [4, 7, 10])
+def test_matmul_form_equals_butterfly(n):
+    rng = np.random.default_rng(n)
+    f = jnp.asarray(rng.integers(0, 100, 1 << n).astype(np.float64))
+    assert np.array_equal(np.asarray(zeta(f)), np.asarray(zeta_matmul(f)))
+
+
+def test_batched_axes():
+    rng = np.random.default_rng(0)
+    f = jnp.asarray(rng.normal(size=(3, 5, 64)))
+    out = zeta(f)
+    for i in range(3):
+        for j in range(5):
+            assert np.allclose(np.asarray(out[i, j]),
+                               np.asarray(zeta(f[i, j])))
+
+
+@given(st.integers(1, 7), st.integers(0, 2 ** 31))
+@settings(max_examples=30, deadline=None)
+def test_zeta_mobius_inverse_property(n, seed):
+    rng = np.random.default_rng(seed)
+    f = jnp.asarray(rng.integers(-50, 50, 1 << n).astype(np.float64))
+    assert np.array_equal(np.asarray(mobius(zeta(f))), np.asarray(f))
+    assert np.array_equal(np.asarray(zeta(mobius(f))), np.asarray(f))
+
+
+@given(st.integers(1, 6), st.integers(0, 2 ** 31))
+@settings(max_examples=25, deadline=None)
+def test_fsc_matches_naive_property(n, seed):
+    rng = np.random.default_rng(seed)
+    f = rng.integers(0, 9, 1 << n).astype(np.float64)
+    g = rng.integers(0, 9, 1 << n).astype(np.float64)
+    pc = jnp.asarray(popcounts(n))
+    h = subset_convolve(jnp.asarray(f), jnp.asarray(g), pc)
+    assert np.array_equal(np.asarray(h), subset_convolve_ref(f, g))
+
+
+def test_rank_split_partition():
+    n = 5
+    rng = np.random.default_rng(1)
+    f = jnp.asarray(rng.normal(size=1 << n))
+    pc = jnp.asarray(popcounts(n))
+    rs = rank_split(f, pc)
+    # each position appears in exactly its popcount slice
+    assert np.allclose(np.asarray(rs.sum(0)), np.asarray(f))
+    for r in range(n + 1):
+        sl = np.asarray(rs[r])
+        mask = np.asarray(pc) == r
+        assert np.all(sl[~mask] == 0)
+
+
+def test_submasks():
+    assert sorted(submasks(0b101).tolist()) == [0, 1, 4, 5]
+    assert len(submasks(0b1111)) == 16
