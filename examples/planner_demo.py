@@ -8,6 +8,10 @@
 2. Data-pipeline join planning: C_cap orders the metadata joins of a
    training-mixture assembly so peak worker memory is optimal and shuffle
    traffic is minimal under that cap — then actually executes the joins.
+3. The plan-serving subsystem (``repro.service``): both of the above run
+   through a ``PlanServer`` — canonicalization, LRU plan cache, admission
+   router, batched DPconv[max] — and a small mixed workload is served to
+   show cache hits (including relabeled repeats) and routing decisions.
 """
 import numpy as np
 import jax.numpy as jnp
@@ -16,6 +20,9 @@ from repro.planner.einsum_path import (Contraction, plan_contraction,
                                        greedy_plan, cardinalities,
                                        execute_plan)
 from repro.planner.datajoin import Table, JoinSpec, plan_joins, execute
+from repro.service import PlanServer, WorkloadSpec, make_workload
+
+server = PlanServer(max_batch=8, cache_capacity=1024)
 
 # --- 1. a star-ish tensor network where the greedy
 #        smallest-intermediate-first heuristic pays 2.1x the optimal
@@ -26,13 +33,19 @@ c = Contraction(
            "g": 151})
 card = cardinalities(c)
 res_out = plan_contraction(c, cost="out", method="dpsub")
-res_max = plan_contraction(c, cost="max")
+res_max = plan_contraction(c, cost="max", server=server)
 gtree, gpeak, gtotal = greedy_plan(c)
 print("einsum ab,bc,ad,be,ef,eg->a:")
 print(f"  DPconv total intermediate volume: {res_out.cost:,.0f} elements")
 print(f"  greedy  total intermediate volume: {gtotal:,.0f} "
       f"({gtotal / res_out.cost:.2f}x worse)")
 print(f"  peak: DPconv[max] {res_max.cost:,.0f} vs greedy {gpeak:,.0f}")
+print(f"  [service] routed via {res_max.route.method} "
+      f"({res_max.route.reason})")
+# planning the SAME contraction again is a plan-cache hit
+res_again = plan_contraction(c, cost="max", server=server)
+print(f"  [service] replanning: cache_hit={res_again.cache_hit}, "
+      f"same cost={res_again.cost == res_max.cost}")
 rng = np.random.default_rng(0)
 tensors = [jnp.asarray(rng.normal(size=tuple(c.sizes[i] for i in op)))
            for op in c.operands]
@@ -51,8 +64,38 @@ joins = [JoinSpec(0, 1, "doc", 1 / 500_000),
          JoinSpec(1, 2, "src", 1 / 2_000),
          JoinSpec(1, 3, "doc", 1 / 490_000),
          JoinSpec(1, 4, "doc", 1 / 470_000)]
-plan, card = plan_joins(tables, joins, cost="cap")
-print("pipeline join plan (C_cap):")
+plan, card = plan_joins(tables, joins, cost="cap", server=server)
+print("pipeline join plan (C_cap, via the plan server):")
 print(f"  tree: {plan.tree}")
 print(f"  peak intermediate rows (optimal): {plan.meta['gamma']:,.0f}")
 print(f"  total intermediate rows under that cap: {plan.cost:,.0f}")
+# the same pipeline with the tables registered in another order is the
+# same query up to relabeling -> the canonical cache key still hits
+shuffle = [3, 0, 4, 2, 1]
+tables2 = [tables[i] for i in shuffle]
+inv = {old: new for new, old in enumerate(shuffle)}
+joins2 = [JoinSpec(inv[j.left], inv[j.right], j.col, j.selectivity)
+          for j in joins]
+plan2, _ = plan_joins(tables2, joins2, cost="cap", server=server)
+print(f"  re-planned with shuffled table order: "
+      f"cache_hit={plan2.cache_hit}, cost match="
+      f"{plan2.cost == plan.cost}\n")
+
+# --- 3. serving a mixed workload
+print("plan server on a mixed workload "
+      "(40 requests, Zipf repeats, relabelings):")
+reqs = make_workload(WorkloadSpec(n_requests=40, seed=1, n_range=(5, 9),
+                                  pool_size=8, budget_frac=0.05))
+# first pass pays jit tracing + cold cache; the second shows the steady
+# state a production plan server lives in
+_, _ = server.serve(reqs, closed_loop=True)
+served0, wall0 = server.stats.served, server.stats.wall_s
+responses, stats = server.serve(reqs, closed_loop=True)
+warm_rate = (stats.served - served0) / (stats.wall_s - wall0)
+cs = server.cache.stats
+print(f"  served {stats.served} plans total; steady-state "
+      f"{warm_rate:,.0f} plans/s")
+print(f"  cache: {cs.hits} hits / {cs.misses} misses "
+      f"(hit rate {cs.hit_rate:.0%}, {cs.relabel_hits} via relabeling)")
+print(f"  routes: {server.router.decisions}")
+print(f"  latency: {stats.latency.summary()}")

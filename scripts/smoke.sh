@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Fast regression gate for the serving path: tier-1 tests + the quick
+# serve benchmark (CPU, Pallas kernels in interpret mode).
+#
+#     scripts/smoke.sh            # full tier-1 + quick serve bench
+#     SMOKE_SKIP_TESTS=1 scripts/smoke.sh   # bench only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ -z "${SMOKE_SKIP_TESTS:-}" ]]; then
+  python -m pytest -x -q
+fi
+
+python benchmarks/serve_bench.py --quick
+echo "smoke: OK"

@@ -95,7 +95,12 @@ def dpccp(q: QueryGraph, card: np.ndarray, mode: str = "out",
         if mode == "max":
             val = max(card[u], dp[s1], dp[s2])
         else:
-            val = card[u] + dp[s1] + dp[s2]
+            # (dp[s1] + dp[s2]) first: addition commutes exactly in IEEE,
+            # so the result is invariant to which side the enumeration
+            # calls s1 — relabeled (isomorphic) instances then produce
+            # bit-identical DP values, which the plan-serving cache's
+            # exact-parity guarantee relies on.
+            val = (dp[s1] + dp[s2]) + card[u]
         if prune_gamma is not None and card[u] > prune_gamma:
             val = _INF
         if val < dp[u]:

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.core.querygraph import QueryGraph
 from repro.core import baselines, dpccp as dpccp_mod, jointree
-from repro.core.dpconv_max import dpconv_max
+from repro.core.dpconv_max import dpconv_max, dpconv_max_batch
 from repro.core.dpconv_out import dpconv_out
 from repro.core.approx import approx_out
 from repro.core.ccap import ccap
@@ -75,3 +75,31 @@ def optimize(q: QueryGraph, card: np.ndarray, cost: str = "max",
             dp = baselines.dpsub(card, n, mode="smj", **kw)
             return PlanResult(float(dp[-1]), None, {})
     raise ValueError(f"unsupported (cost={cost}, method={method})")
+
+
+def optimize_batch(qs, cards, cost: str = "max", method: str = "dpconv",
+                   extract_tree: bool = True, dp_fn=None,
+                   **kw) -> "list[PlanResult]":
+    """Batched façade: plan B queries at once.
+
+    For ``(cost="max", method="dpconv")`` with same-``n`` queries the DP
+    table construction is stacked on a leading batch axis and every
+    feasibility sweep serves the whole batch (``dpconv_max_batch``) —
+    results are bit-identical to B single ``optimize`` calls.  Every other
+    (cost, method) pair, and mixed-``n`` batches, fall back to a per-query
+    loop.  ``repro.service.batch`` sits on top of this and does the
+    same-``n`` grouping.
+    """
+    qs = list(qs)
+    cards = [np.asarray(c) for c in cards]
+    ns = {q.n for q in qs}
+    if (cost == "max" and method == "dpconv" and len(qs) > 1
+            and len(ns) == 1):
+        rs = dpconv_max_batch(np.stack(cards), qs[0].n,
+                              extract_tree=extract_tree, dp_fn=dp_fn, **kw)
+        return [PlanResult(r.optimum, r.tree,
+                           {"passes": r.feasibility_passes,
+                            "batched": True}) for r in rs]
+    return [optimize(q, c, cost=cost, method=method,
+                     extract_tree=extract_tree, **kw)
+            for q, c in zip(qs, cards)]

@@ -139,6 +139,80 @@ def dpconv_max(
     return CmaxResult(optimum=opt, tree=tree, feasibility_passes=passes)
 
 
+# --------------------------------------------------------- batched queries
+def dpconv_max_batch(
+    cards: np.ndarray,
+    n: int,
+    direct_layers: int = 4,
+    extract_tree: bool = True,
+    dp_fn=None,
+) -> "list[CmaxResult]":
+    """Solve B same-``n`` DPconv[max] instances in lockstep.
+
+    ``cards`` is (B, 2^n): one dense cardinality table per query.  All B
+    binary searches advance together — each round stacks the per-query
+    pivot thresholds into a (B,) gamma vector, builds a (B, 2^n) gate and
+    runs ONE batched feasibility pass (``layered_feasibility_dp`` already
+    broadcasts over leading axes), so the whole batch costs one lattice
+    sweep per round instead of B.  This is the serving-path entry point
+    (``repro.service.batch``); single-query ``dpconv_max`` is the special
+    case B = 1.
+
+    Parity: each query's candidate array and pivot sequence are exactly
+    those of single-query ``dpconv_max`` (queries that converge early keep
+    probing their current feasible pivot, which cannot change their
+    bracket), so the returned optima are bit-identical to B independent
+    ``dpconv_max`` calls.
+
+    ``dp_fn(gate, final_layer_shortcut)`` overrides the feasibility-pass
+    backend (e.g. the Pallas int32 tier); default is the jitted f64
+    layered DP.  ``feasibility_passes`` counts *batched* passes.
+    """
+    cards = np.asarray(cards, np.float64)
+    B, size = cards.shape
+    assert size == 1 << n
+    pc_np = popcounts(n)
+    pc = jnp.asarray(pc_np, dtype=jnp.int32)
+    cj = jnp.asarray(cards)
+
+    if dp_fn is None:
+        def dp_fn(gate, shortcut):
+            return layered_feasibility_dp_jit(gate, n, direct_layers,
+                                              shortcut)
+
+    def gate_of(gammas: np.ndarray) -> jnp.ndarray:
+        g = (cj <= jnp.asarray(gammas, jnp.float64)[:, None])
+        return jnp.where(pc >= 2, g.astype(jnp.float64), 1.0)
+
+    cands = []
+    for b in range(B):
+        cand = np.unique(cards[b][pc_np >= 2])
+        cands.append(cand[cand >= cards[b][size - 1]])
+    lo = np.zeros(B, np.int64)
+    hi = np.array([len(c) - 1 for c in cands], np.int64)
+    passes = 0
+    while np.any(lo < hi):
+        active = lo < hi
+        mid = np.where(active, (lo + hi) // 2, hi)
+        gammas = np.array([cands[b][mid[b]] for b in range(B)])
+        dp = dp_fn(gate_of(gammas), True)
+        ok = np.asarray(dp[..., -1] > 0.5).reshape(-1)
+        passes += 1
+        hi = np.where(active & ok, mid, hi)
+        lo = np.where(active & ~ok, mid + 1, lo)
+
+    opts = np.array([cands[b][hi[b]] for b in range(B)])
+    trees: list = [None] * B
+    if extract_tree:
+        dp = dp_fn(gate_of(opts), False)
+        passes += 1
+        dpn = np.asarray(dp, np.float64).reshape(B, size)
+        trees = [jointree.extract_tree_feasibility(dpn[b], cards[b], n)
+                 for b in range(B)]
+    return [CmaxResult(optimum=float(opts[b]), tree=trees[b],
+                       feasibility_passes=passes) for b in range(B)]
+
+
 # ------------------------------------------------------------------ oracle
 def dpconv_max_ref(card: np.ndarray, n: int) -> float:
     """O(3^n) reference: DPsub-style (min,max) DP.  Test oracle."""

@@ -77,25 +77,35 @@ def layered_feasibility_dp(
     n: int,
     direct_layers: int = 4,
     final_layer_shortcut: bool = True,
+    zeta_fn=zeta,
+    mobius_fn=mobius,
 ) -> jnp.ndarray:
     """Boolean DP over the lattice: a set S (|S| >= 2) is *feasible* iff
     gate[S] and it splits into two disjoint feasible parts.  Singletons are
-    feasible.  Returns the (2^n,) feasibility indicator table (float64).
+    feasible.  Returns the (2^n,) feasibility indicator table (gate dtype).
 
     ``gate`` may carry leading batch axes (..., 2^n) — used by the
-    batched-gamma DPconv[max] variant; all lattice ops broadcast.
+    batched-gamma DPconv[max] variant and by the plan-serving batched
+    solver (``repro.service.batch``), which stacks same-``n`` queries on a
+    leading axis; all lattice ops broadcast.
+
+    ``zeta_fn`` / ``mobius_fn`` select the transform backend: the default
+    XLA butterflies, or the Pallas kernels (``repro.kernels.ops``) for the
+    large-``n`` serving tier.  The DP runs in the gate's dtype — float64
+    for the exact-counting default (counts < 2^{2n} exact to n = 26),
+    int32 for the Pallas butterfly path (exact to n = 15).
     """
     size = 1 << n
     pc = jnp.asarray(popcounts(n), dtype=jnp.int32)
     batch = gate.shape[:-1]
-    dtype = jnp.float64
+    dtype = gate.dtype
 
     dp = jnp.zeros(batch + (size,), dtype)
     singles = (pc == 1).astype(dtype)
     dp = dp + singles                        # broadcast over batch
     # cached ranked zeta transforms: Z[d] = zeta(dp restricted to |S| = d)
     Z = jnp.zeros((n + 1,) + batch + (size,), dtype)
-    Z = Z.at[1].set(zeta(singles * jnp.ones(batch + (size,), dtype)))
+    Z = Z.at[1].set(zeta_fn(singles * jnp.ones(batch + (size,), dtype)))
 
     for k in range(2, n + 1):
         last = (k == n) and final_layer_shortcut
@@ -109,35 +119,39 @@ def layered_feasibility_dp(
             layer_full = layer_full.at[..., sets].set(layer_ind)
             layer_full = layer_full * gate
             # keep only |S| = k (gate may be dense)
-            layer_full = jnp.where(pc == k, layer_full, 0.0)
+            layer_full = jnp.where(pc == k, layer_full, jnp.array(0, dtype))
         else:
             # ranked convolution, symmetry-halved: conv_k = Σ_{d=1..k-1}
             # Z[d] Z[k-d] = 2 Σ_{d<k/2} Z[d] Z[k-d] (+ Z[k/2]^2 if k even)
             acc = jnp.zeros(batch + (size,), dtype)
             for d in range(1, (k - 1) // 2 + 1):
                 acc = acc + Z[d] * Z[k - d]
-            acc = acc * 2.0
+            acc = acc + acc        # *2, without promoting int32 to f64
             if k % 2 == 0:
                 acc = acc + Z[k // 2] * Z[k // 2]
             if last:
                 # Moebius at the single point V: Σ_T (-1)^{n-|T|} conv[T]
-                sign = jnp.where((n - pc) % 2 == 0, 1.0, -1.0).astype(dtype)
-                count_v = jnp.sum(acc * sign, axis=-1)
+                # — a direct signed sum whose partial sums exceed the count
+                # bound, so reduce in f64 regardless of the DP dtype.
+                sign = jnp.where((n - pc) % 2 == 0, 1.0, -1.0)
+                count_v = jnp.sum(acc.astype(jnp.float64) * sign, axis=-1)
                 feas_v = (count_v > 0.5).astype(dtype) * gate[..., -1]
                 return dp.at[..., -1].set(feas_v)
-            h = mobius(acc)
+            h = mobius_fn(acc)
             layer_full = jnp.where(pc == k, (h > 0.5).astype(dtype) * gate,
-                                   0.0)
+                                   jnp.array(0, dtype))
         dp = dp + layer_full
         if k < n:
-            Z = Z.at[k].set(zeta(layer_full))
+            Z = Z.at[k].set(zeta_fn(layer_full))
     return dp
 
 
-# jit wrapper with static shape args
+# jit wrapper with static shape args (transform backends are static too —
+# they are module-level callables, hashed by identity)
 layered_feasibility_dp_jit = jax.jit(
     layered_feasibility_dp,
-    static_argnames=("n", "direct_layers", "final_layer_shortcut"),
+    static_argnames=("n", "direct_layers", "final_layer_shortcut",
+                     "zeta_fn", "mobius_fn"),
 )
 
 

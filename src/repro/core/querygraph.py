@@ -144,6 +144,20 @@ def cycle(n: int) -> QueryGraph:
     return QueryGraph(n, tuple(sorted(tuple(sorted(e)) for e in edges)))
 
 
+def grid(rows: int, cols: int) -> QueryGraph:
+    """rows × cols grid graph; relation index of cell (r, c) is r*cols+c.
+    Cyclic/clustered OLAP-style topology between chain and clique."""
+    edges = []
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            if c + 1 < cols:
+                edges.append((i, i + 1))
+            if r + 1 < rows:
+                edges.append((i, i + cols))
+    return QueryGraph(rows * cols, tuple(sorted(edges)))
+
+
 def random_sparse(n: int, extra_edges: int, seed: int = 0) -> QueryGraph:
     """JOB-like sparse graph: a random spanning tree plus ``extra_edges``."""
     rng = np.random.default_rng(seed)
@@ -159,6 +173,46 @@ def random_sparse(n: int, extra_edges: int, seed: int = 0) -> QueryGraph:
     for e in all_pairs[:extra_edges]:
         edges.add(e)
     return QueryGraph(n, tuple(sorted(edges)))
+
+
+# -------------------------------------------------------------- relabeling
+def permute_mask(mask: int, perm: Sequence[int]) -> int:
+    """Apply a relation relabeling to a bitmask: bit i moves to perm[i]."""
+    out = 0
+    m = int(mask)
+    i = 0
+    while m:
+        if m & 1:
+            out |= 1 << perm[i]
+        m >>= 1
+        i += 1
+    return out
+
+
+def relabel(q: QueryGraph, perm: Sequence[int]) -> QueryGraph:
+    """The isomorphic query graph with relation i renamed to perm[i]."""
+    edges = tuple(sorted(tuple(sorted((perm[u], perm[v])))
+                         for u, v in q.edges))
+    hyper = tuple(sorted((permute_mask(a, perm), permute_mask(b, perm))
+                         for a, b in q.hyperedges))
+    return QueryGraph(q.n, edges, hyper)
+
+
+def permute_card(card: np.ndarray, n: int, perm: Sequence[int]) -> np.ndarray:
+    """Cardinality table of the relabeled query: out[perm(S)] = card[S].
+
+    Pure gather — values are moved, never recomputed, so two tables that
+    differ only by a relabeling stay byte-identical after canonicalization
+    (this is what makes the plan-cache key exact).
+    """
+    size = 1 << n
+    S = np.arange(size, dtype=np.int64)
+    Sp = np.zeros(size, dtype=np.int64)
+    for i in range(n):
+        Sp |= ((S >> i) & 1) << int(perm[i])
+    out = np.empty_like(np.asarray(card))
+    out[Sp] = np.asarray(card)
+    return out
 
 
 # ------------------------------------------------------------ cardinalities

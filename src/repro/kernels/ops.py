@@ -36,6 +36,28 @@ def mobius_op(f: jnp.ndarray, interpret: bool | None = None) -> jnp.ndarray:
     return zeta_op(f, inverse=True, interpret=interpret)
 
 
+# ------------------------------------------------------- batched wrappers
+# The plan-serving batched solver (repro.service.batch) stacks B same-n
+# feasibility tables as (B, 2^n) and transforms them in ONE kernel launch:
+# zeta_pallas folds leading axes into the kernel row dimension, so the
+# whole batch shares a grid instead of paying B launches.  Counting
+# workloads must use the int32 path (exact < 2^31, i.e. n <= 15 for the
+# 2^{2n} feasibility counts); the f32 MXU path is for value workloads
+# within the 2^24 envelope.
+def zeta_batch_op(f: jnp.ndarray, inverse: bool = False,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Batched zeta/Moebius over the last axis of a (..., 2^n) stack."""
+    if f.ndim < 2:
+        raise ValueError("zeta_batch_op expects a leading batch axis; "
+                         "use zeta_op for flat tables")
+    return zeta_op(f, inverse=inverse, interpret=interpret)
+
+
+def mobius_batch_op(f: jnp.ndarray,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    return zeta_batch_op(f, inverse=True, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def ranked_conv_op(Z: jnp.ndarray, k: int,
                    interpret: bool | None = None) -> jnp.ndarray:

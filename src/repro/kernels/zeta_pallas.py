@@ -136,25 +136,38 @@ def _pair_pass(f2d: jnp.ndarray, row_block: int, block_bit: int,
 # ------------------------------------------------------------ entry point
 def zeta_pallas(f: jnp.ndarray, inverse: bool = False,
                 row_block: int = 8, interpret: bool = True) -> jnp.ndarray:
-    """Zeta (or Moebius, ``inverse=True``) transform of a flat (2^n,) table.
+    """Zeta (or Moebius, ``inverse=True``) transform over the LAST axis.
+
+    Leading axes are a batch dimension (the plan-serving batched solver
+    stacks same-``n`` queries): the batch is folded into the kernel row
+    dimension, so one grid launch covers the whole stack.  This is exact
+    batching, not a host loop — per-element lattices occupy disjoint,
+    power-of-two-aligned row ranges, every local-pass block lies inside
+    one element, and the pair-pass partner index ``i ^ (1 << bit)`` only
+    touches bits below ``log2(rows_per_element / row_block)``, so butterflies
+    never cross elements.
 
     Requires n >= log2(LANES) + log2(row_block); smaller inputs fall back
     to the reference path (they are latency-trivial anyway).
     """
     size = f.shape[-1]
+    batch = f.shape[:-1]
     n = size.bit_length() - 1
     sign = -1.0 if inverse else 1.0
     min_bits = LANES.bit_length() - 1 + row_block.bit_length() - 1
     if n < min_bits:
         from repro.kernels.ref import zeta_ref, mobius_ref
         return mobius_ref(f) if inverse else zeta_ref(f)
-    rows = size // LANES
-    f2d = f.reshape(rows, LANES)
+    rows = size // LANES                       # rows per batch element
+    nbatch = 1
+    for b in batch:
+        nbatch *= b
+    f2d = f.reshape(nbatch * rows, LANES)
     f2d = _local_pass(f2d, row_block, sign, inverse, interpret)
     n_block_bits = (rows // row_block).bit_length() - 1
-    for jb in range(n_block_bits):
+    for jb in range(n_block_bits):             # per-element bits only
         f2d = _pair_pass(f2d, row_block, jb, sign, interpret)
-    return f2d.reshape(size)
+    return f2d.reshape(batch + (size,))
 
 
 def mobius_pallas(f: jnp.ndarray, **kw) -> jnp.ndarray:

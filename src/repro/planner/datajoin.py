@@ -14,6 +14,7 @@ the joins on numpy record arrays for the tests/demo.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -38,7 +39,16 @@ class JoinSpec:
 
 
 def build_graph(tables: list, joins: list) -> tuple:
-    """-> (QueryGraph, card table) for the pipeline's join problem."""
+    """-> (QueryGraph, card table) for the pipeline's join problem.
+
+    The log contributions of each subset are summed with ``math.fsum``,
+    which is exactly rounded and therefore order-invariant, so the table
+    is *label-order invariant*: registering the same pipeline with tables
+    in a different order yields a byte-exact permutation of the same
+    cardinalities — which is what lets the plan server's
+    isomorphism-invariant cache key (repro.service.canon) recognize it as
+    the same query.
+    """
     n = len(tables)
     edges = tuple(sorted({(min(j.left, j.right), max(j.left, j.right))
                           for j in joins}))
@@ -47,16 +57,24 @@ def build_graph(tables: list, joins: list) -> tuple:
     card = np.ones(size, np.float64)
     logs = np.log([max(t.n_rows, 1) for t in tables])
     for mask in range(1, size):
-        lv = sum(logs[i] for i in range(n) if (mask >> i) & 1)
-        for j in joins:
-            if (mask >> j.left) & 1 and (mask >> j.right) & 1:
-                lv += np.log(max(j.selectivity, 1e-300))
+        contrib = [float(logs[i]) for i in range(n) if (mask >> i) & 1]
+        contrib += [float(np.log(max(j.selectivity, 1e-300)))
+                    for j in joins
+                    if (mask >> j.left) & 1 and (mask >> j.right) & 1]
+        lv = math.fsum(contrib)
         card[mask] = float(np.exp(max(lv, 0.0)))
     return q, card
 
 
-def plan_joins(tables: list, joins: list, cost: str = "cap"):
+def plan_joins(tables: list, joins: list, cost: str = "cap", server=None):
+    """Plan the pipeline's joins.  With ``server`` the request runs
+    through the plan-serving path (cache + router + batched solver, see
+    ``repro.service``); re-planning the same pipeline — or the same
+    pipeline with tables listed in a different order — is then a cache
+    hit."""
     q, card = build_graph(tables, joins)
+    if server is not None:
+        return server.plan_one(q, card, cost=cost), card
     return optimize(q, card, cost=cost), card
 
 

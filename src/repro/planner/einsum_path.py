@@ -78,9 +78,27 @@ def query_graph(c: Contraction) -> QueryGraph:
 
 
 def plan_contraction(c: Contraction, cost: str = "max",
-                     method: str = "dpconv", **kw) -> PlanResult:
+                     method: str = "dpconv", server=None,
+                     **kw) -> PlanResult:
+    """Plan the contraction order.
+
+    With ``server`` (a ``repro.service.PlanServer``) the request goes
+    through the serving path — canonicalization, plan cache, admission
+    router, batched solver — instead of a direct single-query solve; the
+    returned response is duck-compatible with ``PlanResult``
+    (``cost`` / ``tree`` / ``meta``).  Repeated or relabeled contractions
+    then hit the cache, and ``method`` is chosen by the router.
+    """
     q = query_graph(c)
     card = cardinalities(c)
+    if server is not None:
+        budget = kw.pop("latency_budget", None)
+        if kw:
+            raise ValueError(
+                f"solver kwargs {sorted(kw)} are not supported on the "
+                "serving path (the router chooses the method and its "
+                "parameters); drop them or plan without server=")
+        return server.plan_one(q, card, cost=cost, latency_budget=budget)
     return optimize(q, card, cost=cost, method=method, **kw)
 
 

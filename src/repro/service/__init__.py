@@ -1,0 +1,65 @@
+"""``repro.service`` — the plan-serving subsystem.
+
+The core library (``repro.core``) answers "find the optimal join order of
+ONE query"; this package answers "serve plan requests at production rate".
+It sits between the algorithm layer and the consumers (``repro.planner``,
+examples, benchmarks):
+
+::
+
+            requests (QueryGraph, card, cost, budget, arrival)
+                                 |
+     +---------------------------v----------------------------+
+     |  server.PlanServer        micro-batching request loop  |
+     |                           throughput / latency stats   |
+     |   +----------+   +-----------+   +------------------+  |
+     |   | canon    |-->| cache     |-->| router            | |
+     |   | WL canon |   | LRU,      |   | (n, density, cost,| |
+     |   | labeling |   | relabel-  |   |  budget) ->       | |
+     |   | + key    |   | aware hits|   | method + lane     | |
+     |   +----------+   +-----------+   +---------+--------+  |
+     |                                            |           |
+     |                 +--------------------------+---+       |
+     |                 |  batch.BatchedSolver         |       |
+     |                 |  same-n stacking, (B, 2^n)   |       |
+     |                 |  lattice sweeps, Pallas tier |       |
+     |                 +------------------------------+       |
+     +--------------------------------------------------------+
+                                 |
+          repro.core  (dpconv_max_batch / optimize / layered DP)
+          repro.kernels (batched zeta/Moebius Pallas kernels)
+
+* ``canon``    — isomorphism-invariant canonicalization: WL refinement +
+  capped individualization gives a canonical relabeling; the cache key
+  hashes the exact permuted cardinality bytes, so key equality <=> the
+  requests are relabelings of each other.  Also: topology-class
+  signatures for the router.
+* ``cache``    — LRU plan cache in canonical label space with
+  hit/miss/eviction/relabel-hit stats; cached join trees are replayed
+  through the request's inverse permutation.
+* ``batch``    — batched solving: same-``n`` requests stack their
+  feasibility gates to (B, 2^n) and share every DP lattice sweep
+  (``core.dpconv_max_batch`` runs the binary searches in lockstep);
+  mid-size lattices route the transforms through the batched Pallas
+  kernels (int32, exact to n = 15), the rest use XLA f64 butterflies.
+  Costs are bit-identical to single-query ``optimize``.
+* ``router``   — admission policy: (n, edge density, cost fn, latency
+  budget) -> (method, lane, params), with an EWMA latency model and
+  deadline degradation exact -> approx -> GOO.
+* ``server``   — the micro-batching loop tying it together, plus
+  throughput counters and latency histograms.
+* ``workload`` — request-stream generator (topology × cardinality-regime
+  templates, Zipf repeats, random relabelings, Poisson arrivals).
+
+Benchmark: ``benchmarks/serve_bench.py`` (``--quick`` for the CI gate in
+``scripts/smoke.sh``).  Demo: ``examples/planner_demo.py``.
+"""
+from repro.service.batch import BatchedSolver, BatchPolicy  # noqa: F401
+from repro.service.cache import CachedPlan, CacheStats, PlanCache  # noqa: F401
+from repro.service.canon import (CanonicalForm, canonicalize,  # noqa: F401
+                                 relabel_tree, topology_signature)
+from repro.service.router import Route, Router, RouterConfig  # noqa: F401
+from repro.service.server import (LatencyHistogram, PlanRequest,  # noqa: F401
+                                  PlanResponse, PlanServer, ServeStats)
+from repro.service.workload import (WorkloadSpec, make_query,  # noqa: F401
+                                    make_workload)

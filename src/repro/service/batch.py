@@ -1,0 +1,147 @@
+"""Batched plan solving: stack same-``n`` queries, sweep the lattice once.
+
+The DPconv[max] inner loop is a dense computation over the (2^n,) subset
+lattice; with B queries of the same ``n`` the feasibility gates stack to
+(B, 2^n) and every layered-DP sweep (zeta transforms, ranked convolution,
+Moebius) broadcasts over the batch axis — one traced program serves the
+whole micro-batch (``dpconv_max_batch`` in core runs the B binary searches
+in lockstep on top of that).  This module adds the serving-side concerns:
+
+* grouping a mixed micro-batch by ``n`` and restoring request order;
+* shape bucketing: each same-``n`` group is split into descending
+  power-of-two chunks (11 -> [8, 2, 1] with cap 16), so jit re-traces
+  O(log max_batch) batch shapes per ``n`` and no work is wasted on
+  padding rows; size-1 chunks take the single-query path;
+* the backend tier: mid-size lattices (``pallas_min_n <= n <=
+  pallas_max_n``) run their transforms through the Pallas TPU kernels
+  (``repro.kernels.ops``) on an int32 DP — exact for feasibility counts
+  < 2^31, i.e. n <= 15 — while smaller/larger ``n`` stay on the XLA f64
+  butterflies (exact to n = 26).  On this CPU container the Pallas tier
+  runs in interpret mode; on TPU it is the MXU/VPU path.
+
+Parity: whatever the tier, results are bit-identical in cost to
+single-query ``repro.core.dpconv.optimize`` — the candidate arrays and
+binary-search pivots are the same, and feasibility is exact integer
+counting in both dtypes (asserted by tests/test_service_batch.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dpconv import PlanResult, optimize, optimize_batch
+from repro.core.layered import layered_feasibility_dp_jit
+from repro.kernels.ops import mobius_batch_op, zeta_batch_op
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    max_batch: int = 16
+    pallas_min_n: int = 12      # Pallas int32 tier lower bound
+    pallas_max_n: int = 15      # exactness bound: 2^{2n} < 2^31
+    backend: str = "auto"       # "auto" | "xla" | "pallas"
+    # "auto" engages the Pallas tier only on real TPU hardware — off-TPU
+    # the kernels run in interpret mode (a correctness harness, orders of
+    # magnitude slower than XLA); "pallas" forces it anywhere (tests).
+
+
+def _pow2_chunks(b: int, cap: int):
+    """Decompose b into descending power-of-two chunk sizes <= cap, so
+    jit only ever sees O(log cap) batch shapes per ``n`` and no padding
+    work is wasted (5 -> [4, 1], 11 -> [8, 2, 1] with cap 8).  A
+    non-power-of-two cap is clamped down so the contract holds for any
+    BatchPolicy.max_batch."""
+    cap = 1 << (cap.bit_length() - 1)
+    out = []
+    while b:
+        c = min(1 << (b.bit_length() - 1), cap)
+        out.append(c)
+        b -= c
+    return out
+
+
+def pallas_dp_fn(n: int, direct_layers: int = 4):
+    """Feasibility-pass backend running zeta/Moebius on the Pallas kernels.
+
+    The gate is cast to int32 (feasibility is {0,1}-counting; exact while
+    counts < 2^31, enforced by BatchPolicy.pallas_max_n) and the layered
+    DP runs with the batched kernel wrappers as its transform backend.
+    """
+    def dp_fn(gate: jnp.ndarray, final_layer_shortcut: bool) -> jnp.ndarray:
+        g = gate.astype(jnp.int32)
+        dp = layered_feasibility_dp_jit(
+            g, n, direct_layers, final_layer_shortcut,
+            zeta_fn=zeta_batch_op, mobius_fn=mobius_batch_op)
+        return dp.astype(jnp.float64)
+    return dp_fn
+
+
+class BatchedSolver:
+    """Groups micro-batch items by ``n`` and dispatches the batched DP."""
+
+    def __init__(self, policy: "BatchPolicy | None" = None):
+        self.policy = policy or BatchPolicy()
+        self.batches_run = 0
+        self.queries_batched = 0
+        # (n, queries, seconds) per chunk of the last solve() call — the
+        # server feeds these to the router's latency model per-``n``
+        # (one mixed micro-batch spans several n's; a single aggregate
+        # observation would misattribute the big-n cost to items[0]'s n)
+        self.last_timings: list = []
+
+    def _use_pallas(self, n: int) -> bool:
+        p = self.policy
+        if p.backend == "pallas":
+            # even when forced, never exceed the int32 exactness bound —
+            # beyond it overflowed counts would silently corrupt plans
+            return n <= p.pallas_max_n
+        if p.backend == "auto":
+            import jax
+            return (jax.default_backend() == "tpu"
+                    and p.pallas_min_n <= n <= p.pallas_max_n)
+        return False
+
+    def _dp_fn(self, n: int):
+        if self._use_pallas(n):
+            return pallas_dp_fn(n)
+        return None                      # core default: XLA f64 layered DP
+
+    def solve(self, items: list, extract_tree: bool = True) -> list:
+        """``items``: list of (q, card) pairs, all cost="max"/DPconv.
+        Returns PlanResults aligned with the input order."""
+        import time
+
+        by_n: dict = {}
+        for idx, (q, card) in enumerate(items):
+            by_n.setdefault(q.n, []).append((idx, q, card))
+        out: list = [None] * len(items)
+        self.last_timings = []
+        for n, group in sorted(by_n.items()):
+            backend = "pallas" if self._use_pallas(n) else "xla"
+            lo = 0
+            for chunk in _pow2_chunks(len(group), self.policy.max_batch):
+                part = group[lo:lo + chunk]
+                lo += chunk
+                idxs = [g[0] for g in part]
+                qs = [g[1] for g in part]
+                cards = [np.asarray(g[2], np.float64) for g in part]
+                t0 = time.perf_counter()
+                if chunk == 1:
+                    res = optimize(qs[0], cards[0], cost="max",
+                                   extract_tree=extract_tree)
+                    res.meta["batched"] = False
+                    out[idxs[0]] = res
+                else:
+                    results = optimize_batch(qs, cards, cost="max",
+                                             extract_tree=extract_tree,
+                                             dp_fn=self._dp_fn(n))
+                    self.batches_run += 1
+                    self.queries_batched += chunk
+                    for idx, res in zip(idxs, results):
+                        res.meta["backend"] = backend
+                        out[idx] = res
+                self.last_timings.append(
+                    (n, chunk, time.perf_counter() - t0))
+        return out

@@ -1,0 +1,211 @@
+"""Isomorphism-invariant canonicalization of ``(QueryGraph, card)``.
+
+The plan cache must recognize that two requests are *the same query up to
+relation renaming*: production workloads re-issue the same join templates
+with tables bound in different orders, and a cache keyed on the raw
+``(edges, card)`` bytes would miss all of them.
+
+``canonicalize`` computes a canonical relabeling ``perm`` (request label
+``i`` -> canonical label ``perm[i]``) via color refinement:
+
+1. initial vertex colors from (degree, quantized log base cardinality);
+2. Weisfeiler-Lehman refinement with edge colors taken from the quantized
+   log pair cardinality ``c({u, v})`` — this folds the selectivity model
+   into the partition, so random-cardinality instances almost always
+   refine to discrete colors in one or two rounds;
+3. if ties remain, individualization-refinement: branch on the members of
+   the first non-singleton class, recurse, and keep the lexicographically
+   smallest canonical byte string.  The branch count is capped
+   (``branch_cap``); classes that survive refinement with *equal
+   cardinality tables* are automorphic in practice, so every leaf yields
+   the same bytes and exploring one suffices.  If the cap ever bites on a
+   non-automorphic tie the key degrades to "deterministic but not fully
+   canonical" — the cache may miss, it can never wrongly hit, because the
+   final key hashes the exact permuted cardinality bytes.
+
+The canonical form carries the *exact* float64 cardinality table permuted
+by ``perm`` (values are moved, never recomputed), so the SHA-256 key is
+byte-exact: key equality implies the two instances are relabelings of one
+another, and a cached canonical-space plan can be replayed by relabeling
+its join tree back through the inverse permutation (``relabel_tree``).
+
+``topology_signature`` additionally buckets the graph into a coarse
+topology class (chain/star/cycle/clique/grid-like/tree/sparse/dense) —
+the admission router keys its policy and its latency model on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+
+import numpy as np
+
+from repro.core.jointree import JoinTree
+from repro.core.querygraph import (QueryGraph, permute_card, permute_mask,
+                                   relabel)
+
+# log-space quantization for refinement colors: coarse enough to absorb
+# float noise, fine enough to separate genuinely different cardinalities
+_QUANT = 1e6
+
+
+@dataclasses.dataclass(frozen=True)
+class CanonicalForm:
+    key: str                # SHA-256 hex digest of the canonical bytes
+    perm: tuple             # perm[i] = canonical label of request relation i
+    signature: str          # coarse topology-class signature
+    q: QueryGraph           # canonical-label query graph
+    card: np.ndarray        # canonical-label cardinality table
+
+    @property
+    def inverse_perm(self) -> tuple:
+        inv = [0] * len(self.perm)
+        for i, p in enumerate(self.perm):
+            inv[p] = i
+        return tuple(inv)
+
+
+def _qlog(x: float) -> int:
+    return int(round(math.log(max(float(x), 1e-300)) * _QUANT))
+
+
+def _compress(colors: list) -> list:
+    """Map arbitrary hashable colors to dense ints, order-preserving."""
+    lut = {c: i for i, c in enumerate(sorted(set(colors)))}
+    return [lut[c] for c in colors]
+
+
+def _refine(q: QueryGraph, card: np.ndarray, colors: list) -> list:
+    """WL refinement to a fixpoint, edge-colored by pair cardinalities."""
+    n = q.n
+    nbrs: list = [[] for _ in range(n)]
+    for u, v in q.edges:
+        w = _qlog(card[(1 << u) | (1 << v)])
+        nbrs[u].append((v, w))
+        nbrs[v].append((u, w))
+    for a, b in q.hyperedges:
+        # hyperedge features must be label-invariant: use side sizes and
+        # quantized cardinalities, never the raw bitmasks (which change
+        # under relabeling and would break key invariance)
+        w = _qlog(card[a | b])
+        fa = (bin(a).count("1"), _qlog(card[a]))
+        fb = (bin(b).count("1"), _qlog(card[b]))
+        for i in range(n):
+            if (a >> i) & 1:
+                nbrs[i].append((-1, (fa, fb, w)))
+            if (b >> i) & 1:
+                nbrs[i].append((-2, (fb, fa, w)))
+    for _ in range(n):
+        sigs = [(colors[i],
+                 tuple(sorted((colors[j] if j >= 0 else j, w)
+                              for j, w in nbrs[i])))
+                for i in range(n)]
+        new = _compress(sigs)
+        if new == colors:
+            break
+        colors = new
+    return colors
+
+
+def _canonical_bytes(q: QueryGraph, card: np.ndarray, perm) -> bytes:
+    qc = relabel(q, perm)
+    cc = permute_card(card, q.n, perm)
+    head = (f"n={q.n};e={qc.edges};h={qc.hyperedges};"
+            .encode())
+    return head + np.ascontiguousarray(cc, np.float64).tobytes()
+
+
+def canonical_perm(q: QueryGraph, card: np.ndarray,
+                   branch_cap: int = 64) -> tuple:
+    """Canonical relabeling via refinement + capped individualization."""
+    n = q.n
+    deg = [bin(int(a)).count("1") for a in q.adjacency()]
+    init = [(deg[i], _qlog(card[1 << i])) for i in range(n)]
+    colors = _refine(q, card, _compress(init))
+
+    best: list = [None, None]          # [bytes, perm]
+    leaves = [0]
+
+    def finish(colors: list):
+        order = sorted(range(n), key=lambda i: colors[i])
+        perm = [0] * n
+        for rank, i in enumerate(order):
+            perm[i] = rank
+        byt = _canonical_bytes(q, card, perm)
+        if best[0] is None or byt < best[0]:
+            best[0], best[1] = byt, tuple(perm)
+
+    def rec(colors: list):
+        if leaves[0] >= branch_cap and best[0] is not None:
+            return
+        if len(set(colors)) == n:
+            leaves[0] += 1
+            finish(colors)
+            return
+        # first non-singleton class (smallest color value)
+        counts: dict = {}
+        for c in colors:
+            counts[c] = counts.get(c, 0) + 1
+        target = min(c for c, k in counts.items() if k > 1)
+        members = [i for i in range(n) if colors[i] == target]
+        for v in members:
+            if leaves[0] >= branch_cap and best[0] is not None:
+                return
+            forked = [c * 2 for c in colors]
+            forked[v] -= 1                     # v precedes its old class
+            rec(_refine(q, card, _compress(forked)))
+
+    rec(colors)
+    return best[1]
+
+
+def topology_signature(q: QueryGraph) -> str:
+    """Coarse topology class — the router's policy/latency-model key."""
+    n, m = q.n, len(q.edges)
+    degs = sorted(bin(int(a)).count("1") for a in q.adjacency())
+    connected = q.is_connected(q.full_mask) if n else False
+    if q.hyperedges:
+        cls = "hyper"
+    elif n >= 2 and m == n * (n - 1) // 2:
+        cls = "clique"
+    elif m == n - 1 and connected and degs[-1] == max(n - 1, 1) and n > 2:
+        cls = "star"
+    elif m == n - 1 and connected and degs[-1] <= 2:
+        cls = "chain"
+    elif m == n and all(d == 2 for d in degs):
+        cls = "cycle"
+    elif m == n - 1 and connected:
+        cls = "tree"
+    else:
+        density = 2.0 * m / (n * (n - 1)) if n > 1 else 0.0
+        cls = "sparse" if density <= 0.5 else "dense"
+    return f"n={n}|m={m}|{cls}"
+
+
+def canonicalize(q: QueryGraph, card: np.ndarray,
+                 branch_cap: int = 64) -> CanonicalForm:
+    perm = canonical_perm(q, card, branch_cap=branch_cap)
+    qc = relabel(q, perm)
+    cc = permute_card(card, q.n, perm)
+    byt = _canonical_bytes(q, card, perm)
+    return CanonicalForm(
+        key=hashlib.sha256(byt).hexdigest(),
+        perm=perm,
+        signature=topology_signature(q),
+        q=qc,
+        card=cc,
+    )
+
+
+def relabel_tree(tree: "JoinTree | None", perm) -> "JoinTree | None":
+    """Map a join tree's relation labels through ``perm`` (bit i -> perm[i]).
+
+    With ``CanonicalForm.inverse_perm`` this replays a cached
+    canonical-space plan in the request's labeling.
+    """
+    if tree is None:
+        return None
+    return JoinTree(permute_mask(tree.mask, perm),
+                    relabel_tree(tree.left, perm),
+                    relabel_tree(tree.right, perm))

@@ -1,0 +1,166 @@
+"""Admission policy: pick the planning algorithm per request.
+
+The repo implements a whole portfolio — DPconv[max], DPsub, DPccp, the
+(1+eps) approximation, C_cap, and greedy best-effort — with wildly
+different cost/optimality envelopes.  The router turns a request's
+``(n, edge density, cost fn, latency budget)`` into a ``Route``:
+
+* ``cost="max"``  -> DPconv[max] on the *batch* lane (the whole point of
+  the serving subsystem: same-``n`` requests share lattice sweeps), except
+  tiny ``n`` where the numpy DPsub beats jit dispatch overhead.
+* ``cost="out"``  -> exact DPsub for dense/small graphs; DPccp for sparse
+  graphs (the classic no-cross-product production choice — its search
+  space excludes cross joins, which is the semantics sparse workloads
+  want); the (1+eps) approximation once exact blows the budget or ``n``
+  grows past ``exact_out_max_n``.
+* ``cost="cap"``  -> the two-pass C_cap pipeline (single lane).
+* ``cost="smj"``  -> DPsub with the sunk sort-merge term; approx fallback.
+
+Deadlines: the router keeps a per-(method, n-bucket) EWMA latency model
+seeded with rough work-count priors and updated by ``observe`` after every
+solve.  If the chosen method's estimate exceeds the request's
+``latency_budget`` it degrades along ``exact -> approx -> GOO``; GOO
+(greedy operator ordering) is the terminal best-effort answer — O(n^3)
+and always admissible.  Routes carry a ``reason`` string so responses can
+be audited (tests assert on it).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.querygraph import QueryGraph
+
+# methods the single/batch lanes know how to execute
+_METHODS = ("dpconv", "dpsub", "dpccp", "approx", "goo")
+
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    cost: str
+    method: str
+    lane: str                  # "batch" | "single"
+    params: tuple = ()         # sorted (key, value) pairs, cache-key stable
+    reason: str = ""
+
+    @property
+    def cache_params(self) -> tuple:
+        return self.params
+
+    def kw(self) -> dict:
+        return dict(self.params)
+
+
+@dataclasses.dataclass
+class RouterConfig:
+    small_n: int = 5            # below: numpy DPsub beats jit dispatch
+    exact_out_max_n: int = 13   # exact C_out DPsub admission ceiling
+    sparse_density: float = 0.5  # <=: route C_out to DPccp
+    approx_eps: float = 0.25
+    ewma_alpha: float = 0.3
+
+
+# rough work-count priors (seconds per unit measured lazily); the absolute
+# scale only matters until the first observation lands in the EWMA
+_PRIOR_COEFF = {
+    "dpconv": 5e-8,
+    "dpsub": 2e-9,
+    "dpccp": 5e-9,
+    "approx": 2e-7,
+    "goo": 1e-7,
+}
+
+
+def _work(method: str, n: int) -> float:
+    if method == "dpconv":
+        return float(2 ** n) * n * n
+    if method == "dpsub":
+        return float(3 ** n)
+    if method == "dpccp":
+        return float(3 ** n)        # worst case; sparse graphs far below
+    if method == "approx":
+        return float(2 ** n) * n ** 3
+    if method == "goo":
+        return float(n ** 3)
+    raise ValueError(method)
+
+
+class Router:
+    def __init__(self, config: "RouterConfig | None" = None):
+        self.config = config or RouterConfig()
+        self._coeff: dict = dict(_PRIOR_COEFF)
+        self.decisions: dict = {}     # method -> served count (see record)
+
+    def record(self, route: Route) -> None:
+        """Count a route that actually served a response."""
+        self.decisions[route.method] = \
+            self.decisions.get(route.method, 0) + 1
+
+    # ------------------------------------------------------ latency model
+    def estimate(self, method: str, n: int) -> float:
+        return self._coeff[method] * _work(method, n)
+
+    def observe(self, method: str, n: int, seconds: float) -> None:
+        """EWMA-update the per-method latency coefficient."""
+        if method not in self._coeff or seconds <= 0:
+            return
+        a = self.config.ewma_alpha
+        obs = seconds / _work(method, n)
+        self._coeff[method] = (1 - a) * self._coeff[method] + a * obs
+
+    # ----------------------------------------------------------- policy
+    def _admit(self, method: str, n: int,
+               budget: "float | None") -> bool:
+        return budget is None or self.estimate(method, n) <= budget
+
+    def route(self, q: QueryGraph, cost: str,
+              latency_budget: "float | None" = None) -> Route:
+        cfg = self.config
+        n = q.n
+        m = len(q.edges)
+        density = 2.0 * m / (n * (n - 1)) if n > 1 else 1.0
+
+        def mk(method, lane, params=(), reason=""):
+            # NB: ``decisions`` is updated by the server for the route a
+            # response actually used (route() may be called twice per
+            # budgeted request: primary probe + budgeted re-route)
+            return Route(cost, method, lane, tuple(params), reason)
+
+        def degrade(primary, lane, params=(), reason=""):
+            if self._admit(primary, n, latency_budget):
+                return mk(primary, lane, params, reason)
+            if cost in ("out", "smj") and primary != "approx" \
+                    and self._admit("approx", n, latency_budget):
+                return mk("approx", "single",
+                          (("eps", cfg.approx_eps),),
+                          "deadline: degraded to (1+eps) approx")
+            return mk("goo", "single", (),
+                      "deadline: degraded to greedy best-effort")
+
+        if cost == "max":
+            if n <= cfg.small_n:
+                return degrade("dpsub", "single", (),
+                               f"n={n} <= small_n: numpy DPsub")
+            return degrade("dpconv", "batch", (),
+                           "DPconv[max] batched lane")
+        if cost == "out":
+            if density <= cfg.sparse_density \
+                    and q.is_connected(q.full_mask):
+                return degrade("dpccp", "single", (),
+                               f"sparse (density={density:.2f}): DPccp")
+            if n <= cfg.exact_out_max_n:
+                return degrade("dpsub", "single", (),
+                               "dense C_out within exact ceiling")
+            return degrade("approx", "single",
+                           (("eps", cfg.approx_eps),),
+                           f"n={n} > exact ceiling: (1+eps) approx")
+        if cost == "cap":
+            return degrade("dpconv", "single", (),
+                           "C_cap two-pass pipeline")
+        if cost == "smj":
+            if n <= cfg.exact_out_max_n:
+                return degrade("dpsub", "single", (),
+                               "sunk sort-merge DPsub")
+            return degrade("approx", "single",
+                           (("eps", cfg.approx_eps),),
+                           "smj approx")
+        raise ValueError(f"unknown cost function {cost!r}")

@@ -1,0 +1,296 @@
+"""The plan server: micro-batched, cached, policy-routed join ordering.
+
+Request lifecycle (see the package docstring for the architecture sketch):
+
+1. **canonicalize** — the request's ``(QueryGraph, card)`` is relabeled to
+   canonical form; isomorphic requests collapse to one cache identity.
+2. **route** — the admission policy picks (method, lane, params) from
+   ``(n, density, cost fn, latency budget)``.
+3. **cache** — lookup on ``(canonical key, cost, method, params)``; a hit
+   replays the cached canonical plan through the request's inverse
+   permutation and skips planning entirely.
+4. **solve** — misses on the batch lane (DPconv[max]) are stacked by ``n``
+   and solved with shared lattice sweeps (``repro.service.batch``); single
+   -lane misses run the routed core algorithm directly.  Solved plans are
+   inserted into the cache in canonical space.
+
+``serve`` drives a whole request stream through a micro-batching loop:
+requests are admitted in arrival order, a batch closes when it reaches
+``max_batch`` or no further arrival lands within ``max_wait`` of the batch
+opening; completion times use a discrete-event clock (simulated Poisson
+arrivals + measured wall-clock solve time), which is what the latency
+histogram and the throughput counters report.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import best_effort
+from repro.core.dpconv import optimize
+from repro.core.querygraph import QueryGraph
+from repro.service.batch import BatchedSolver, BatchPolicy
+from repro.service.cache import CachedPlan, PlanCache
+from repro.service.canon import CanonicalForm, canonicalize, relabel_tree
+from repro.service.router import Route, Router
+
+
+# ---------------------------------------------------------------- requests
+@dataclasses.dataclass
+class PlanRequest:
+    q: QueryGraph
+    card: np.ndarray
+    cost: str = "max"
+    latency_budget: "float | None" = None
+    arrival: float = 0.0
+    req_id: int = 0
+
+
+@dataclasses.dataclass
+class PlanResponse:
+    req_id: int
+    cost: float
+    tree: object
+    meta: dict
+    route: Route
+    cache_hit: bool
+    latency: float = 0.0
+
+
+# --------------------------------------------------------------- telemetry
+class LatencyHistogram:
+    """Log-bucketed latency histogram (1us .. ~17min) with exact
+    percentiles from retained samples."""
+
+    BUCKETS_PER_DECADE = 4
+
+    def __init__(self):
+        self._samples: list = []
+
+    def record(self, seconds: float) -> None:
+        self._samples.append(float(seconds))
+
+    @property
+    def count(self) -> int:
+        return len(self._samples)
+
+    def percentile(self, p: float) -> float:
+        if not self._samples:
+            return 0.0
+        return float(np.percentile(np.asarray(self._samples), p))
+
+    def buckets(self) -> "list[tuple[float, int]]":
+        """(upper_bound_seconds, count) pairs for non-empty log buckets."""
+        if not self._samples:
+            return []
+        out: dict = {}
+        for s in self._samples:
+            k = int(np.ceil(np.log10(max(s, 1e-6))
+                            * self.BUCKETS_PER_DECADE))
+            out[k] = out.get(k, 0) + 1
+        return [(10 ** (k / self.BUCKETS_PER_DECADE), c)
+                for k, c in sorted(out.items())]
+
+    def summary(self) -> dict:
+        return {"count": self.count,
+                "p50_ms": round(self.percentile(50) * 1e3, 3),
+                "p90_ms": round(self.percentile(90) * 1e3, 3),
+                "p99_ms": round(self.percentile(99) * 1e3, 3)}
+
+
+@dataclasses.dataclass
+class ServeStats:
+    served: int = 0
+    batches: int = 0
+    deadline_fallbacks: int = 0
+    wall_s: float = 0.0
+    latency: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram)
+
+    @property
+    def plans_per_s(self) -> float:
+        return self.served / self.wall_s if self.wall_s > 0 else 0.0
+
+
+# ------------------------------------------------------------------ server
+class PlanServer:
+    def __init__(self,
+                 cache_capacity: int = 4096,
+                 max_batch: int = 16,
+                 max_wait: float = 0.005,
+                 router: "Router | None" = None,
+                 batch_policy: "BatchPolicy | None" = None,
+                 enable_cache: bool = True,
+                 enable_batch: bool = True):
+        self.cache = PlanCache(cache_capacity)
+        self.router = router or Router()
+        self.solver = BatchedSolver(batch_policy
+                                    or BatchPolicy(max_batch=max_batch))
+        self.max_batch = max_batch
+        self.max_wait = max_wait
+        self.enable_cache = enable_cache
+        self.enable_batch = enable_batch
+        self.stats = ServeStats()
+
+    # ------------------------------------------------------- single entry
+    def plan_one(self, q: QueryGraph, card: np.ndarray, cost: str = "max",
+                 latency_budget: "float | None" = None) -> PlanResponse:
+        """Plan one query through the full cache/route/solve path.  This
+        is the entry the planner layer (einsum_path / datajoin) uses."""
+        req = PlanRequest(q=q, card=np.asarray(card, np.float64),
+                          cost=cost, latency_budget=latency_budget)
+        resp = self._process([req])[0]
+        self.stats.served += 1
+        return resp
+
+    # ------------------------------------------------------ stream serving
+    def serve(self, requests: "list[PlanRequest]",
+              closed_loop: bool = False
+              ) -> "tuple[list[PlanResponse], ServeStats]":
+        """Drive a request stream through the micro-batching loop.
+
+        ``closed_loop=True`` ignores arrival times (back-to-back batches
+        of ``max_batch``) — the benchmark's max-throughput mode.  The
+        default honors arrivals with a discrete-event clock: batch wait
+        time comes from the simulated arrivals, solve time from the wall
+        clock.
+        """
+        reqs = sorted(requests, key=lambda r: r.arrival)
+        by_req: dict = {}
+        clock = 0.0
+        wall = 0.0
+        i = 0
+        while i < len(reqs):
+            if closed_loop:
+                batch = reqs[i:i + self.max_batch]
+            else:
+                clock = max(clock, reqs[i].arrival)
+                deadline = clock + self.max_wait
+                batch = [reqs[i]]
+                j = i + 1
+                while (j < len(reqs) and len(batch) < self.max_batch
+                       and reqs[j].arrival <= deadline):
+                    batch.append(reqs[j])
+                    j += 1
+                clock = max(clock, batch[-1].arrival)
+            t0 = time.perf_counter()
+            rs = self._process(batch)
+            dt = time.perf_counter() - t0
+            wall += dt
+            completion = (wall if closed_loop else clock + dt)
+            clock = clock + dt if not closed_loop else clock
+            for req, resp in zip(batch, rs):
+                resp.latency = (dt if closed_loop
+                                else completion - req.arrival)
+                self.stats.latency.record(resp.latency)
+                by_req[id(req)] = resp
+            self.stats.batches += 1
+            self.stats.served += len(batch)
+            i += len(batch)
+        self.stats.wall_s += wall
+        return [by_req[id(r)] for r in requests], self.stats
+
+    # ---------------------------------------------------------- internals
+    def _lookup(self, req: PlanRequest, form: CanonicalForm,
+                route: Route,
+                count_miss: bool = True) -> "PlanResponse | None":
+        key = PlanCache.make_key(form.key, req.cost, route.method,
+                                 route.params)
+        entry = self.cache.lookup(key, request_perm=form.perm,
+                                  count_miss=count_miss)
+        if entry is None:
+            return None
+        self.router.record(route)
+        return PlanResponse(
+            req_id=req.req_id, cost=entry.cost,
+            tree=relabel_tree(entry.tree, form.inverse_perm),
+            meta={**entry.meta, "cached": True},
+            route=route, cache_hit=True)
+
+    def _process(self, batch: "list[PlanRequest]") -> "list[PlanResponse]":
+        responses: "list[PlanResponse | None]" = [None] * len(batch)
+        batch_lane: list = []          # (pos, form) for batched DPconv[max]
+        single_lane: list = []         # (pos, form, route)
+        routes: "list[Route | None]" = [None] * len(batch)
+
+        for pos, req in enumerate(batch):
+            form = canonicalize(req.q, np.asarray(req.card, np.float64))
+            # a cached plan replays in ~zero time, so it satisfies any
+            # latency budget: probe the cache under the PRIMARY
+            # (budget-free) route before considering deadline degradation
+            primary = self.router.route(form.q, req.cost, None)
+            if self.enable_cache:
+                resp = self._lookup(req, form, primary)
+                if resp is not None:
+                    responses[pos] = resp
+                    routes[pos] = primary
+                    continue
+            route = primary
+            if req.latency_budget is not None:
+                route = self.router.route(form.q, req.cost,
+                                          req.latency_budget)
+                if "deadline" in route.reason:
+                    self.stats.deadline_fallbacks += 1
+                if (self.enable_cache and route.method != primary.method):
+                    resp = self._lookup(req, form, route,
+                                        count_miss=False)
+                    if resp is not None:
+                        responses[pos] = resp
+                        routes[pos] = route
+                        continue
+            routes[pos] = route
+            if (self.enable_batch and route.lane == "batch"
+                    and route.method == "dpconv" and req.cost == "max"):
+                batch_lane.append((pos, form))
+            else:
+                single_lane.append((pos, form, route))
+
+        if batch_lane:
+            items = [(form.q, form.card) for _, form in batch_lane]
+            results = self.solver.solve(items)
+            for n, cnt, dt in self.solver.last_timings:
+                self.router.observe("dpconv", n, dt / max(cnt, 1))
+            for (pos, form), res in zip(batch_lane, results):
+                self._finish(batch[pos], form, routes[pos], res.cost,
+                             res.tree, res.meta, responses, pos)
+
+        for pos, form, route in single_lane:
+            t0 = time.perf_counter()
+            cost_v, tree, meta = self._solve_single(form.q, form.card,
+                                                    batch[pos].cost,
+                                                    route)
+            self.router.observe(route.method, form.q.n,
+                                time.perf_counter() - t0)
+            self._finish(batch[pos], form, route, cost_v, tree, meta,
+                         responses, pos)
+        return responses  # type: ignore[return-value]
+
+    def _finish(self, req: PlanRequest, form: CanonicalForm, route: Route,
+                cost_v: float, tree, meta: dict, responses: list,
+                pos: int) -> None:
+        meta = dict(meta)
+        key = PlanCache.make_key(form.key, req.cost, route.method,
+                                 route.params)
+        if self.enable_cache:
+            self.cache.insert(key, CachedPlan(cost=cost_v, tree=tree,
+                                              meta=meta,
+                                              inserted_perm=form.perm))
+        self.router.record(route)
+        responses[pos] = PlanResponse(
+            req_id=req.req_id, cost=cost_v,
+            tree=relabel_tree(tree, form.inverse_perm),
+            meta=meta, route=route, cache_hit=False)
+
+    @staticmethod
+    def _solve_single(q: QueryGraph, card: np.ndarray, cost: str,
+                      route: Route) -> tuple:
+        if route.method == "goo":
+            tree = best_effort.goo(q, card)
+            fn = {"max": tree.cost_max, "out": tree.cost_out,
+                  "smj": tree.cost_smj, "cap": tree.cost_out}[cost]
+            return float(fn(card)), tree, {"best_effort": True}
+        kw = route.kw()
+        res = optimize(q, card, cost=cost, method=route.method, **kw)
+        return float(res.cost), res.tree, dict(res.meta)

@@ -1,0 +1,95 @@
+"""Test-suite bootstrap: make the suite collect without ``hypothesis``.
+
+Six test modules use property-based tests via ``hypothesis``.  When the
+real package is available it is used unchanged.  When it is missing (the
+benchmark containers ship only the jax toolchain) we install a *minimal
+deterministic fallback* into ``sys.modules`` before the test modules are
+imported, so collection succeeds everywhere and the property tests still
+run — each ``@given`` draws ``max_examples`` pseudo-random examples from a
+fixed-seed RNG instead of being skipped.
+
+Only the strategy surface this repo uses is implemented:
+``st.integers``, ``st.floats``, ``st.sampled_from``, ``st.booleans``.
+Install the real thing (see requirements-dev.txt) for shrinking, the
+example database, and the full strategy library.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    def given(*strategies, **kw_strategies):
+        def decorate(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples",
+                                    _DEFAULT_MAX_EXAMPLES))
+                rng = random.Random(0xD9C0)
+                for _ in range(n):
+                    vals = [s.draw(rng) for s in strategies]
+                    kvals = {k: s.draw(rng)
+                             for k, s in kw_strategies.items()}
+                    fn(*args, *vals, **kwargs, **kvals)
+            # NB: no functools.wraps — pytest would introspect the wrapped
+            # signature (following __wrapped__) and demand fixtures for the
+            # strategy-supplied parameters.  Copy identity attrs only.
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            if hasattr(fn, "_max_examples"):
+                wrapper._max_examples = fn._max_examples
+            if hasattr(fn, "pytestmark"):
+                wrapper.pytestmark = fn.pytestmark
+            wrapper.hypothesis_fallback = True
+            return wrapper
+        return decorate
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+        return decorate
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = integers
+    _st.floats = floats
+    _st.sampled_from = sampled_from
+    _st.booleans = booleans
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = given
+    _hyp.settings = settings
+    _hyp.strategies = _st
+    _hyp.HealthCheck = types.SimpleNamespace(all=staticmethod(lambda: []))
+    _hyp.__version__ = "0.0-fallback"
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -1,0 +1,89 @@
+"""Admission-policy unit tests: routing table + deadline degradation."""
+import pytest
+
+from repro.core.querygraph import chain, clique, make_cardinalities
+from repro.service.router import Router, RouterConfig
+
+
+def test_max_routes_to_batched_dpconv():
+    r = Router()
+    route = r.route(clique(8), "max")
+    assert (route.method, route.lane) == ("dpconv", "batch")
+
+
+def test_max_tiny_n_prefers_numpy_dpsub():
+    r = Router(RouterConfig(small_n=5))
+    route = r.route(clique(4), "max")
+    assert (route.method, route.lane) == ("dpsub", "single")
+
+
+def test_out_sparse_routes_to_dpccp():
+    r = Router()
+    route = r.route(chain(8), "out")
+    assert route.method == "dpccp"
+    assert "sparse" in route.reason
+
+
+def test_out_dense_routes_to_dpsub_then_approx():
+    r = Router(RouterConfig(exact_out_max_n=13))
+    assert r.route(clique(8), "out").method == "dpsub"
+    big = r.route(clique(14), "out")
+    assert big.method == "approx"
+    assert dict(big.params)["eps"] == pytest.approx(0.25)
+
+
+def test_cap_and_smj_routing():
+    r = Router()
+    assert r.route(clique(7), "cap").method == "dpconv"
+    assert r.route(clique(7), "cap").lane == "single"
+    assert r.route(clique(7), "smj").method == "dpsub"
+
+
+def test_deadline_degrades_to_goo():
+    r = Router()
+    # force the model to predict a slow dpconv solve
+    r._coeff["dpconv"] = 1.0
+    r._coeff["goo"] = 1e-12
+    route = r.route(clique(10), "max", latency_budget=1e-3)
+    assert route.method == "goo"
+    assert "deadline" in route.reason
+
+
+def test_deadline_degrades_out_to_approx_before_goo():
+    r = Router()
+    r._coeff["dpsub"] = 1.0        # exact too slow
+    r._coeff["approx"] = 1e-12     # approx admissible
+    route = r.route(clique(10), "out", latency_budget=1e-3)
+    assert route.method == "approx"
+    assert "deadline" in route.reason
+    # approx also too slow -> terminal GOO
+    r._coeff["approx"] = 1.0
+    r._coeff["goo"] = 1e-12
+    route = r.route(clique(10), "out", latency_budget=1e-3)
+    assert route.method == "goo"
+
+
+def test_no_budget_never_degrades():
+    r = Router()
+    r._coeff["dpconv"] = 1e6
+    assert r.route(clique(10), "max").method == "dpconv"
+
+
+def test_observe_updates_estimate():
+    r = Router()
+    before = r.estimate("dpconv", 10)
+    for _ in range(20):
+        r.observe("dpconv", 10, seconds=before * 100)
+    assert r.estimate("dpconv", 10) > before * 10
+
+
+def test_unknown_cost_raises():
+    with pytest.raises(ValueError):
+        Router().route(clique(6), "nope")
+
+
+def test_route_params_are_cache_key_stable():
+    r = Router()
+    a = r.route(clique(14), "out")
+    b = r.route(clique(14), "out")
+    assert a.params == b.params and isinstance(a.params, tuple)

@@ -1,0 +1,99 @@
+"""End-to-end plan server + workload generator tests."""
+import numpy as np
+import pytest
+
+from repro.core.dpconv import optimize
+from repro.service import (LatencyHistogram, PlanServer, WorkloadSpec,
+                           make_workload)
+
+
+def _small_spec(**kw):
+    base = dict(n_requests=24, seed=0, n_range=(5, 7), pool_size=6,
+                rate=500.0)
+    base.update(kw)
+    return WorkloadSpec(**base)
+
+
+def test_workload_generator_deterministic_and_in_range():
+    a = make_workload(_small_spec())
+    b = make_workload(_small_spec())
+    assert len(a) == len(b) == 24
+    for ra, rb in zip(a, b):
+        assert ra.q.edges == rb.q.edges
+        assert ra.cost == rb.cost
+        assert ra.arrival == rb.arrival
+        assert np.array_equal(ra.card, rb.card)
+    arr = [r.arrival for r in a]
+    assert arr == sorted(arr) and arr[0] > 0
+    for r in a:
+        assert 5 <= r.q.n <= 7
+        assert r.card.shape == (1 << r.q.n,)
+        assert r.cost in ("max", "out", "cap", "smj")
+
+
+def test_serve_end_to_end_exact_parity():
+    reqs = make_workload(_small_spec())
+    srv = PlanServer(max_batch=8)
+    resps, stats = srv.serve(reqs, closed_loop=True)
+    assert stats.served == len(reqs)
+    assert [r.req_id for r in resps] == [r.req_id for r in reqs]
+    cs = srv.cache.stats
+    assert cs.lookups == len(reqs)
+    assert cs.hits + cs.misses == cs.lookups
+    assert cs.hits > 0                       # Zipf repeats must hit
+    for req, resp in zip(reqs, resps):
+        assert resp.latency > 0
+        if resp.route.method in ("goo", "approx"):
+            continue
+        if req.cost == "cap":
+            ref = optimize(req.q, req.card, cost="cap")
+        else:
+            ref = optimize(req.q, req.card, cost=req.cost,
+                           method=resp.route.method,
+                           **resp.route.kw())
+        assert float(resp.cost) == float(ref.cost)
+        if resp.tree is not None:
+            assert resp.tree.validate()
+            assert resp.tree.mask == req.q.full_mask
+
+
+def test_serve_honoring_arrivals_matches_closed_loop_answers():
+    reqs = make_workload(_small_spec(n_requests=12))
+    open_resps, _ = PlanServer(max_batch=4).serve(reqs)
+    closed_resps, _ = PlanServer(max_batch=4).serve(reqs,
+                                                    closed_loop=True)
+    assert [r.cost for r in open_resps] == [r.cost for r in closed_resps]
+
+
+def test_deadline_fallback_served_and_counted():
+    reqs = make_workload(_small_spec(n_requests=16, budget_frac=1.0,
+                                     budget_s=1e-12))
+    srv = PlanServer(max_batch=4)
+    resps, stats = srv.serve(reqs, closed_loop=True)
+    assert stats.deadline_fallbacks == len(reqs)
+    for resp in resps:
+        assert resp.route.method == "goo"
+        assert resp.tree is not None and resp.tree.validate()
+        assert np.isfinite(resp.cost)
+
+
+def test_stats_accumulate_across_serves():
+    reqs = make_workload(_small_spec(n_requests=8))
+    srv = PlanServer(max_batch=4)
+    srv.serve(reqs, closed_loop=True)
+    srv.serve(reqs, closed_loop=True)
+    assert srv.stats.served == 16
+    # second pass is fully cached
+    assert srv.cache.stats.hits >= 8
+
+
+def test_latency_histogram():
+    h = LatencyHistogram()
+    for ms in [1, 2, 4, 8, 100]:
+        h.record(ms * 1e-3)
+    assert h.count == 5
+    assert h.percentile(50) == pytest.approx(4e-3)
+    assert h.percentile(99) <= 100e-3
+    assert sum(c for _, c in h.buckets()) == 5
+    s = h.summary()
+    assert s["count"] == 5 and s["p99_ms"] <= 100.0
