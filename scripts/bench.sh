@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Cross-PR perf trajectory gate: runs the quick serving benchmark and
+# records the compact summary at the repo root.
+#
+#     scripts/bench.sh                 # quick bench -> BENCH_serve.json
+#     BENCH_ARGS="--no-target" scripts/bench.sh   # report-only mode
+#
+# BENCH_serve.json keeps plans/sec (naive / host-loop / fused serving),
+# p50/p99 latency, feasibility passes and device dispatches per batched
+# solve, and the fused-vs-host speedups — one file, overwritten per run,
+# so the per-PR perf trajectory is diffable from git history.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python benchmarks/serve_bench.py --quick \
+    --bench-out BENCH_serve.json ${BENCH_ARGS:-}
+echo "bench: OK (BENCH_serve.json written)"

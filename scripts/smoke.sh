@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
 # Fast regression gate for the serving path: tier-1 tests + the quick
-# serve benchmark (CPU, Pallas kernels in interpret mode).
+# serve benchmark (CPU, Pallas kernels in interpret mode).  The bench
+# step runs through scripts/bench.sh, which also records the cross-PR
+# perf trajectory in BENCH_serve.json at the repo root.
 #
 #     scripts/smoke.sh            # full tier-1 + quick serve bench
 #     SMOKE_SKIP_TESTS=1 scripts/smoke.sh   # bench only
@@ -12,5 +14,5 @@ if [[ -z "${SMOKE_SKIP_TESTS:-}" ]]; then
   python -m pytest -x -q
 fi
 
-python benchmarks/serve_bench.py --quick
+scripts/bench.sh
 echo "smoke: OK"

@@ -25,6 +25,10 @@ as vectorized JAX programs over the subset lattice:
 - ``baselines``   : DPsize / DPsub (vectorized numpy) for [out] and [max],
                     including the pruned variants — the paper's competitors.
 - ``dpccp``       : DPccp csg-cmp-pair enumeration (Moerkotte & Neumann 2006).
+- ``engine``      : fused DPconv[max] solver — the whole batched binary
+                    search (gates, layered DP, bracket state) inside one
+                    ``lax.while_loop`` dispatch, with an AOT executable
+                    cache for the serving tier (DESIGN.md §Fused-engine).
 - ``jointree``    : Alg. 2 — optimal bushy join tree extraction from the
                     DP table.
 - ``querygraph``  : query graphs (clique/chain/star/cycle/JOB-like, hyperedges)

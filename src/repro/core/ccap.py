@@ -44,11 +44,12 @@ def ccap(
     engine_pass2: str = "dpsub",       # "dpsub" | "dpccp"
     gamma_slack: float = 1.0,
     extract_tree: bool = True,
+    engine: str = "auto",              # dpconv_max solver: fused/host loop
 ) -> CcapResult:
     n = q.n
     diagnostics = {}
     if engine_pass1 == "dpconv":
-        res = dpconv_max(q, card, extract_tree=False)
+        res = dpconv_max(q, card, extract_tree=False, engine=engine)
         gamma = res.optimum
         diagnostics["pass1_fsc_passes"] = res.feasibility_passes
     elif engine_pass1 == "dpsub":

@@ -39,7 +39,9 @@ def optimize(q: QueryGraph, card: np.ndarray, cost: str = "max",
         if method == "dpconv":
             r = dpconv_max(q, card, extract_tree=extract_tree, **kw)
             return PlanResult(r.optimum, r.tree,
-                              {"passes": r.feasibility_passes})
+                              {"passes": r.feasibility_passes,
+                               "engine": r.engine,
+                               "dispatches": r.dispatches})
         if method == "dpsub":
             dp = baselines.dpsub_max(card, n, **kw)
             tree = jointree.extract_tree_max(dp, card, n) \
@@ -99,6 +101,8 @@ def optimize_batch(qs, cards, cost: str = "max", method: str = "dpconv",
                               extract_tree=extract_tree, dp_fn=dp_fn, **kw)
         return [PlanResult(r.optimum, r.tree,
                            {"passes": r.feasibility_passes,
+                            "engine": r.engine,
+                            "dispatches": r.dispatches,
                             "batched": True}) for r in rs]
     return [optimize(q, c, cost=cost, method=method,
                      extract_tree=extract_tree, **kw)

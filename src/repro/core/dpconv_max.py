@@ -10,7 +10,7 @@ cardinalities; Alg. 3 therefore
      all of whose intermediate cardinalities are <= gamma — checked with
      one layered counting FSC pass (Kosaraju's {0,1} trick, Sec. 6).
 
-Beyond-paper variants (see EXPERIMENTS.md §Perf):
+Beyond-paper variants (see DESIGN.md §Perf):
 
   * ``gamma_batch > 1`` — probe G thresholds per FSC pass (vectorized over a
     leading batch axis), turning binary search into (G+1)-ary search:
@@ -18,6 +18,11 @@ Beyond-paper variants (see EXPERIMENTS.md §Perf):
     (TPU/VPU lanes) the G-fold work per pass is nearly free for small G.
   * feasibility passes run with the final-layer shortcut and direct small
     layers (see ``repro.core.layered``).
+  * the fused whole-solve engine (``repro.core.engine``) runs binary
+    search, gate construction and the layered DP inside one compiled
+    ``lax.while_loop`` — one device dispatch per (batched) solve instead
+    of one per feasibility pass.  Both ``dpconv_max`` and
+    ``dpconv_max_batch`` default to it (``engine="auto"``).
 """
 from __future__ import annotations
 
@@ -28,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bitset import popcounts
+from repro.core.engine import candidate_table, fused_dpconv_max
 from repro.core.layered import (
     layered_feasibility_dp_jit,
     layered_feasibility_early_exit,
@@ -42,6 +48,11 @@ class CmaxResult:
     optimum: float                 # optimal C_max value
     tree: "jointree.JoinTree | None"
     feasibility_passes: int
+    # which solver produced it, and how many device dispatches it cost:
+    # the fused engine (repro.core.engine) runs the whole solve in ONE
+    # dispatch; the host loop pays one per feasibility pass.
+    engine: str = "host"
+    dispatches: "int | None" = None
 
 
 def _gate_for(card: jnp.ndarray, gamma: jnp.ndarray,
@@ -72,6 +83,7 @@ def dpconv_max(
     direct_layers: int = 4,
     extract_tree: bool = True,
     early_exit: bool = False,
+    engine: str = "auto",
 ) -> CmaxResult:
     """Optimal C_max value (and join tree) for query graph ``q`` with dense
     cardinality table ``card`` over the subset lattice.
@@ -79,19 +91,39 @@ def dpconv_max(
     Clique semantics: like DPsub/DPconv in the paper, the search space is
     all splits — cross products priced by ``card``.  (The query graph
     argument is used only for tree extraction sanity checks.)
+
+    ``engine`` selects the solver: ``"fused"`` runs the whole binary
+    search on device in one dispatch (``repro.core.engine``, bit-identical
+    results), ``"host"`` is the per-round host loop.  The default
+    ``"auto"`` uses the fused engine except for the variants only the host
+    loop implements (``gamma_batch > 1``, ``early_exit``).
     """
     n = q.n
     size = 1 << n
+    if engine not in ("auto", "fused", "host"):
+        raise ValueError(f"unknown engine {engine!r}")
+    use_fused = engine == "fused" or (
+        engine == "auto" and gamma_batch <= 1 and not early_exit)
+    if use_fused:
+        if gamma_batch > 1 or early_exit:
+            raise ValueError("gamma_batch > 1 / early_exit are host-loop "
+                             "variants; use engine='host' or 'auto'")
+        fs = fused_dpconv_max(np.asarray(card, np.float64)[None, :], n,
+                              direct_layers=direct_layers,
+                              extract_tree=extract_tree)
+        return CmaxResult(optimum=float(fs.optima[0]), tree=fs.trees[0],
+                          feasibility_passes=fs.passes, engine="fused",
+                          dispatches=fs.dispatches)
     assert card.shape == (size,)
     pc_np = popcounts(n)
     pc = jnp.asarray(pc_np, dtype=jnp.int32)
     cj = jnp.asarray(card, jnp.float64)
 
-    # candidate thresholds: cardinalities of non-trivial sets, descending.
-    # (The optimum is the cardinality of SOME intermediate set, |S| >= 2;
-    # c(V) itself is always part of any plan, so gamma >= c(V).)
-    cand = np.unique(card[pc_np >= 2])          # ascending, unique
-    cand = cand[cand >= card[size - 1]]         # gamma < c(V) never feasible
+    # candidate thresholds: cardinalities of non-trivial sets (the optimum
+    # is the cardinality of SOME intermediate set, |S| >= 2; c(V) is part
+    # of any plan, so gamma >= c(V)).  Shared with the fused engine —
+    # identical arrays keep the two pivot sequences bit-aligned.
+    cand = candidate_table(card, n)             # ascending, unique
     lo, hi = 0, len(cand) - 1                   # invariant: cand[hi] feasible
     passes = 0
 
@@ -136,7 +168,8 @@ def dpconv_max(
         dp = layered_feasibility_dp_jit(gate, n, direct_layers, False)
         passes += 1
         tree = jointree.extract_tree_feasibility(np.asarray(dp), card, n)
-    return CmaxResult(optimum=opt, tree=tree, feasibility_passes=passes)
+    return CmaxResult(optimum=opt, tree=tree, feasibility_passes=passes,
+                      dispatches=passes)
 
 
 # --------------------------------------------------------- batched queries
@@ -146,6 +179,8 @@ def dpconv_max_batch(
     direct_layers: int = 4,
     extract_tree: bool = True,
     dp_fn=None,
+    engine: str = "auto",
+    backend: str = "xla",
 ) -> "list[CmaxResult]":
     """Solve B same-``n`` DPconv[max] instances in lockstep.
 
@@ -167,10 +202,28 @@ def dpconv_max_batch(
     ``dp_fn(gate, final_layer_shortcut)`` overrides the feasibility-pass
     backend (e.g. the Pallas int32 tier); default is the jitted f64
     layered DP.  ``feasibility_passes`` counts *batched* passes.
+
+    ``engine="fused"`` (and the ``"auto"`` default, when no ``dp_fn``
+    override is given) runs the whole lockstep solve in one device
+    dispatch via ``repro.core.engine`` — ``backend`` then selects its
+    transform tier (``"xla"`` f64 / ``"pallas"`` int32).  ``dp_fn`` is a
+    host-loop concept, so providing it routes to the host path under
+    ``"auto"``.
     """
     cards = np.asarray(cards, np.float64)
     B, size = cards.shape
     assert size == 1 << n
+    if engine not in ("auto", "fused", "host"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "fused" or (engine == "auto" and dp_fn is None):
+        if dp_fn is not None:
+            raise ValueError("dp_fn is a host-loop override; "
+                             "use engine='host' or 'auto'")
+        fs = fused_dpconv_max(cards, n, direct_layers=direct_layers,
+                              extract_tree=extract_tree, backend=backend)
+        return [CmaxResult(optimum=float(fs.optima[b]), tree=fs.trees[b],
+                           feasibility_passes=fs.passes, engine="fused",
+                           dispatches=fs.dispatches) for b in range(B)]
     pc_np = popcounts(n)
     pc = jnp.asarray(pc_np, dtype=jnp.int32)
     cj = jnp.asarray(cards)
@@ -184,10 +237,7 @@ def dpconv_max_batch(
         g = (cj <= jnp.asarray(gammas, jnp.float64)[:, None])
         return jnp.where(pc >= 2, g.astype(jnp.float64), 1.0)
 
-    cands = []
-    for b in range(B):
-        cand = np.unique(cards[b][pc_np >= 2])
-        cands.append(cand[cand >= cards[b][size - 1]])
+    cands = [candidate_table(cards[b], n) for b in range(B)]
     lo = np.zeros(B, np.int64)
     hi = np.array([len(c) - 1 for c in cands], np.int64)
     passes = 0
@@ -210,7 +260,8 @@ def dpconv_max_batch(
         trees = [jointree.extract_tree_feasibility(dpn[b], cards[b], n)
                  for b in range(B)]
     return [CmaxResult(optimum=float(opts[b]), tree=trees[b],
-                       feasibility_passes=passes) for b in range(B)]
+                       feasibility_passes=passes, dispatches=passes)
+            for b in range(B)]
 
 
 # ------------------------------------------------------------------ oracle

@@ -1,0 +1,322 @@
+"""Fused on-device DPconv[max] engine (DESIGN.md §Fused-engine).
+
+The host-loop solvers (``dpconv_max`` / ``dpconv_max_batch``) dispatch one
+feasibility sweep per binary-search round and sync the verdict back to the
+host between rounds: ~n device round trips per solve, each paying dispatch
+latency plus Python gate rebuilding.  At serving batch sizes that overhead
+dominates the actual lattice arithmetic (the dispatch-bound regime).
+
+This module fuses the *entire* batched solve into ONE compiled program:
+
+* the B per-query candidate tables (sorted unique cardinalities, exactly
+  the host path's arrays) are padded to a ``(B_bucket, C_bucket)``
+  power-of-two buffer — padding repeats each row's last (always-feasible)
+  candidate, so per-row brackets never leave the real range;
+* the lockstep binary search runs as a ``jax.lax.while_loop`` whose body
+  builds the per-round gates from the resident ``(B, 2^n)`` cardinality
+  tables and runs the full layered feasibility DP — no host sync until
+  every query's bracket has collapsed;
+* the layer recursion is scan-form: small layers are evaluated directly
+  (static gather tables), middle layers run in a ``lax.fori_loop`` whose
+  body computes the symmetry-halved ranked convolution from a preallocated
+  ``(n+1, B, 2^n)`` ranked-zeta buffer.  The buffer lives in the
+  while-loop carry, so XLA aliases it across rounds (donated loop state)
+  instead of reallocating it per feasibility pass;
+* the final layer uses the Moebius-at-V shortcut for probes and the full
+  butterfly for the tree-extraction table, exactly like the host path.
+
+Executables are cached by ``(n, B_bucket, C_bucket, backend,
+direct_layers, extract)`` as ahead-of-time compiled artifacts
+(``jit(...).lower(...).compile()``), so the serving tier never re-traces
+in steady state; ``stats()`` exposes dispatch/solve/round counters that
+``benchmarks/serve_bench.py`` asserts on (one device dispatch per batched
+solve, vs ~n for the host loop).
+
+Exactness: identical to the host path — all layer values are exact {0,1}
+counts (f64 up to n = 26 on the XLA backend, int32 up to n = 15 on the
+Pallas backend), the probe sequence is the host's lockstep pivot sequence,
+and the extraction DP is the same table, so optima and join trees are
+bit-identical (asserted by tests/test_engine.py and the serve_bench
+parity sweep).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import jointree
+from repro.core.bitset import popcounts
+from repro.core.layered import _direct_layer_indices
+from repro.core.zeta import mobius, zeta
+
+BACKENDS = ("xla", "pallas")
+
+
+# ----------------------------------------------------------------- telemetry
+@dataclasses.dataclass
+class EngineStats:
+    dispatches: int = 0        # device executions (counted at exe call)
+    solves: int = 0            # batched solves served
+    queries: int = 0           # real (un-padded) queries planned
+    rounds: int = 0            # total while-loop rounds across solves
+    exec_cache_hits: int = 0   # executable reused without re-tracing
+    exec_cache_misses: int = 0  # (n, B, C, backend) combos compiled
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+_STATS = EngineStats()
+_EXEC_CACHE: dict = {}
+
+
+def stats() -> EngineStats:
+    return _STATS
+
+
+def reset_stats() -> None:
+    global _STATS
+    _STATS = EngineStats()
+
+
+def clear_executable_cache() -> None:
+    _EXEC_CACHE.clear()
+
+
+# ------------------------------------------------------------------ results
+@dataclasses.dataclass
+class FusedSolve:
+    """One fused batched solve: B optima (+trees) from one dispatch."""
+    optima: np.ndarray             # (B,) optimal C_max values
+    trees: list                    # JoinTree | None per query
+    rounds: int                    # while-loop iterations (lockstep)
+    passes: int                    # rounds + extraction pass, host parity
+    dispatches: int = 1            # device executions measured (1 fused)
+    dp: "np.ndarray | None" = None  # (B, 2^n) extraction feasibility table
+
+
+# ----------------------------------------------------------- program builder
+def _transforms(backend: str):
+    if backend == "xla":
+        return zeta, mobius, jnp.float64
+    if backend == "pallas":
+        # int32 counting tier: exact while counts < 2^31 (n <= 15),
+        # enforced by the caller (BatchPolicy.pallas_max_n)
+        from repro.kernels.ops import mobius_batch_op, zeta_batch_op
+        return zeta_batch_op, mobius_batch_op, jnp.int32
+    raise ValueError(f"unknown engine backend {backend!r}")
+
+
+def _build_fn(n: int, direct_layers: int, backend: str, extract: bool):
+    """The whole-solve program: (cards, cand, hi0) -> (opt[, dp], rounds).
+
+    Shapes are bound at compile time: cards (B, 2^n) f64, cand (B, C) f64,
+    hi0 (B,) int32.  All loops run on device; the only host transfer is
+    the final result tuple.
+    """
+    size = 1 << n
+    pc_np = popcounts(n)
+    zeta_fn, mobius_fn, dtype = _transforms(backend)
+    # final layer always goes through the convolution shortcut (exact
+    # either way); direct evaluation covers layers 2..min(direct, n-1)
+    dl = min(direct_layers, n - 1)
+    D = max(n // 2, 1)             # symmetry-halved convolution slots
+
+    def fn(cards, cand, hi0):
+        B = cards.shape[0]
+        pc = jnp.asarray(pc_np, dtype=jnp.int32)
+        zero = jnp.array(0, dtype)
+        one = jnp.array(1, dtype)
+        singles = jnp.broadcast_to((pc == 1).astype(dtype), (B, size))
+
+        def gate_of(gamma):
+            g = (cards <= gamma[:, None]).astype(dtype)
+            return jnp.where(pc >= 2, g, one)
+
+        def conv_at(Z, k):
+            # Σ_{d=1..k-1} Z[d] Z[k-d], symmetry-halved:
+            #   2 Σ_{1<=d<k-d} Z[d] Z[k-d] + [k even] Z[k/2]^2
+            # ``k`` may be traced (fori_loop); slots with d > k-d carry
+            # stale previous-round values and are masked by w = 0.
+            d = jnp.arange(1, D + 1)
+            w = jnp.where(d < k - d, 2, jnp.where(d == k - d, 1, 0))
+            Zhi = Z[jnp.clip(k - d, 1, n)]
+            return jnp.sum((w.astype(dtype))[:, None, None]
+                           * Z[1:D + 1] * Zhi, axis=0)
+
+        def run_layers(gate, Z, shortcut):
+            """One full layered feasibility DP under ``gate``; returns
+            (dp, Z, feasible-at-V).  Slot Z[1] (the singleton transform,
+            round-invariant) is set once at Z0 and never rewritten."""
+            dp = singles
+            for k in range(2, dl + 1):        # direct small layers
+                sets, subs, comps = _direct_layer_indices(n, k)
+                prod = dp[..., subs] * dp[..., comps]
+                layer_ind = (jnp.sum(prod, axis=-1) > 0.5).astype(dtype)
+                layer_full = jnp.zeros((B, size), dtype)
+                layer_full = layer_full.at[..., sets].set(layer_ind) * gate
+                layer_full = jnp.where(pc == k, layer_full, zero)
+                dp = dp + layer_full
+                Z = Z.at[k].set(zeta_fn(layer_full))
+
+            def layer_body(k, carry):         # middle layers, scan-form
+                dp, Z = carry
+                h = mobius_fn(conv_at(Z, k))
+                layer_full = jnp.where(
+                    pc == k, (h > 0.5).astype(dtype) * gate, zero)
+                dp = dp + layer_full
+                Z = lax.dynamic_update_index_in_dim(
+                    Z, zeta_fn(layer_full), k, 0)
+                return dp, Z
+
+            first_conv = max(dl + 1, 2)   # layers start at 2: slot Z[1]
+            if first_conv < n:            # holds the singleton transform
+                dp, Z = lax.fori_loop(first_conv, n, layer_body, (dp, Z))
+            acc = conv_at(Z, n)
+            if shortcut:
+                # Moebius evaluated at the single point V: signed partial
+                # sums exceed the count bound, so reduce in f64 (host
+                # parity: layered_feasibility_dp does the same)
+                sign = jnp.where((n - pc) % 2 == 0, 1.0, -1.0)
+                count_v = jnp.sum(acc.astype(jnp.float64) * sign, axis=-1)
+                feas = (count_v > 0.5) & (gate[..., -1] > zero)
+                return dp, Z, feas
+            h = mobius_fn(acc)
+            layer_full = jnp.where(pc == n,
+                                   (h > 0.5).astype(dtype) * gate, zero)
+            dp = dp + layer_full
+            return dp, Z, dp[..., -1] > 0.5
+
+        # ------------------------- whole-solve lockstep binary search
+        lo0 = jnp.zeros_like(hi0)
+        Z0 = jnp.zeros((n + 1, B, size), dtype).at[1].set(zeta_fn(singles))
+
+        def cond(state):
+            lo, hi, _, _ = state
+            return jnp.any(lo < hi)
+
+        def body(state):
+            lo, hi, Z, r = state
+            active = lo < hi
+            mid = jnp.where(active, (lo + hi) // 2, hi)
+            gamma = jnp.take_along_axis(cand, mid[:, None], axis=1)[:, 0]
+            _, Z, ok = run_layers(gate_of(gamma), Z, True)
+            hi = jnp.where(active & ok, mid, hi)
+            lo = jnp.where(active & ~ok, mid + 1, lo)
+            return lo, hi, Z, r + 1
+
+        lo, hi, Z, rounds = lax.while_loop(
+            cond, body, (lo0, hi0, Z0, jnp.int32(0)))
+        opt = jnp.take_along_axis(cand, hi[:, None], axis=1)[:, 0]
+        if extract:
+            dp, _, _ = run_layers(gate_of(opt), Z, False)
+            return opt, dp.astype(jnp.float64), rounds
+        return opt, rounds
+
+    return fn
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length()
+
+
+def get_executable(n: int, B: int, C: int, backend: str = "xla",
+                   direct_layers: int = 4, extract: bool = True):
+    """AOT-compiled whole-solve executable for one shape bucket.
+
+    Keyed by ``(n, B_bucket, C_bucket, backend, direct_layers, extract)``;
+    a hit returns the compiled artifact with zero tracing work — the
+    steady-state serving path never re-enters the tracer.
+    """
+    key = (n, B, C, backend, direct_layers, extract)
+    exe = _EXEC_CACHE.get(key)
+    if exe is not None:
+        _STATS.exec_cache_hits += 1
+        return exe
+    _STATS.exec_cache_misses += 1
+    fn = _build_fn(n, direct_layers, backend, extract)
+    exe = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((B, 1 << n), jnp.float64),
+        jax.ShapeDtypeStruct((B, C), jnp.float64),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+    ).compile()
+    _EXEC_CACHE[key] = exe
+    return exe
+
+
+# -------------------------------------------------------------- entry point
+def _run(exe, *args):
+    """The single device-execution site: every XLA invocation the engine
+    ever makes goes through here, so ``stats().dispatches`` is a real
+    execution count (the dispatches-per-solve acceptance check would
+    catch a future change that sneaks in a second call per solve)."""
+    _STATS.dispatches += 1
+    return exe(*args)
+
+
+def candidate_table(card: np.ndarray, n: int) -> np.ndarray:
+    """Sorted unique candidate thresholds for one query — exactly the
+    host path's array (ascending; gamma < c(V) is never feasible)."""
+    size = 1 << n
+    pc = popcounts(n)
+    cand = np.unique(card[pc >= 2])
+    return cand[cand >= card[size - 1]]
+
+
+def fused_dpconv_max(cards: np.ndarray, n: int, direct_layers: int = 4,
+                     extract_tree: bool = True,
+                     backend: str = "xla") -> FusedSolve:
+    """Solve B same-``n`` DPconv[max] instances in ONE device dispatch.
+
+    ``cards`` is (B, 2^n).  Optima (and trees) are bit-identical to B
+    host-loop ``dpconv_max`` calls; the B binary searches advance in
+    lockstep inside the compiled while loop.
+    """
+    cards = np.asarray(cards, np.float64)
+    if cards.ndim == 1:
+        cards = cards[None, :]
+    B, size = cards.shape
+    assert size == 1 << n and n >= 2
+    cands = [candidate_table(cards[b], n) for b in range(B)]
+
+    Bp = _next_pow2(B)
+    C = _next_pow2(max(len(c) for c in cands))
+    cand_pad = np.ones((Bp, C), np.float64)
+    hi0 = np.zeros(Bp, np.int32)
+    for b, c in enumerate(cands):
+        cand_pad[b, :len(c)] = c
+        cand_pad[b, len(c):] = c[-1]     # repeat: bracket never leaves row
+        hi0[b] = len(c) - 1
+    cards_pad = cards
+    if Bp != B:                          # pad rows replay query 0
+        cards_pad = np.concatenate(
+            [cards, np.repeat(cards[:1], Bp - B, axis=0)], axis=0)
+
+    exe = get_executable(n, Bp, C, backend, direct_layers, extract_tree)
+    disp0 = _STATS.dispatches
+    out = _run(exe, jnp.asarray(cards_pad), jnp.asarray(cand_pad),
+               jnp.asarray(hi0))
+    if extract_tree:
+        opt, dp, rounds = out
+        dpn = np.asarray(dp, np.float64)
+    else:
+        opt, rounds = out
+        dpn = None
+    opt = np.asarray(opt, np.float64)[:B]
+    rounds = int(rounds)
+
+    trees: list = [None] * B
+    if extract_tree:
+        trees = [jointree.extract_tree_feasibility(dpn[b], cards[b], n)
+                 for b in range(B)]
+    _STATS.solves += 1
+    _STATS.queries += B
+    _STATS.rounds += rounds
+    return FusedSolve(optima=opt, trees=trees, rounds=rounds,
+                      passes=rounds + (1 if extract_tree else 0),
+                      dispatches=_STATS.dispatches - disp0,
+                      dp=dpn[:B] if dpn is not None else None)

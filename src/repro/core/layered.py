@@ -25,6 +25,13 @@ Implemented optimizations from the paper:
 Sec. 5.3 ("avoiding useless multiplications", |S| < max(d, k-d) pruning) is
 a sparse-iteration optimization that does not translate to dense vector
 lanes; see DESIGN.md §Hardware-adaptation.
+
+This module is the per-pass building block: one call = one device
+dispatch.  The serving hot path does not call it per round anymore —
+``repro.core.engine`` re-expresses the same recursion in scan form inside
+a whole-solve ``lax.while_loop`` (bit-identical results, one dispatch per
+batched solve); the functions here remain the host-loop reference, the
+``gamma_batch``/early-exit variants, and the parity oracle for tests.
 """
 from __future__ import annotations
 

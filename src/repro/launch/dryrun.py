@@ -74,7 +74,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = costmodel.xla_cost_analysis(compiled)
             hlo = compiled.as_text()
     except Exception as e:  # a failure here is a bug in the system
         return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,

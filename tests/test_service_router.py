@@ -69,6 +69,36 @@ def test_no_budget_never_degrades():
     assert r.route(clique(10), "max").method == "dpconv"
 
 
+def test_engine_hint_only_prices_the_batch_lane():
+    """The fused-engine coefficient must not leak into single-lane uses
+    of dpconv (the C_cap pipeline observes untagged and much slower)."""
+    r = Router()
+    r.engine_hint["dpconv"] = "fused"
+    r._coeff["dpconv"] = 1.0           # untagged model: slow (cap's view)
+    r._coeff["dpconv@fused"] = 1e-15   # batch lane: fast
+    r._coeff["goo"] = 1e-12
+    # batch lane (cost=max) admits under the fused coefficient
+    assert r.route(clique(10), "max",
+                   latency_budget=1e-3).method == "dpconv"
+    # single-lane cap prices untagged -> degrades under the same budget
+    route = r.route(clique(10), "cap", latency_budget=1e-3)
+    assert route.method == "goo"
+    assert "deadline" in route.reason
+
+
+def test_observe_with_engine_namespaces_coefficient():
+    r = Router()
+    base = r.estimate("dpconv", 9)
+    for _ in range(30):
+        r.observe("dpconv", 9, seconds=base * 100, engine="host")
+    # tagged observations don't disturb the untagged coefficient...
+    assert r.estimate("dpconv", 9) == base
+    # ...but are used when the tagged estimate is requested
+    assert r.estimate("dpconv", 9, engine="host") > base * 10
+    # an unseen tag falls back to the untagged coefficient
+    assert r.estimate("dpconv", 9, engine="fused") == base
+
+
 def test_observe_updates_estimate():
     r = Router()
     before = r.estimate("dpconv", 10)
