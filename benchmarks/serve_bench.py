@@ -1,4 +1,4 @@
-"""Plan-serving benchmark: plans/sec and latency, engine × cache × batch.
+"""Plan-serving benchmark: plans/sec and latency, engine × probe × cache.
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--quick] [...]
 
@@ -12,32 +12,50 @@ templates with random relabelings, Poisson arrivals):
   — the PR-1 serving path: lockstep binary search with one device
   dispatch + host sync per feasibility round;
 * ``service`` on the **fused engine** (``engine="fused"``, the default)
-  — the whole batched solve as ONE compiled ``lax.while_loop`` dispatch
-  (``repro.core.engine``); swept over micro-batch sizes, cache off/on.
+  — each chunk's whole solve (search, layered DP, the (min,+) C_cap
+  pass, Alg. 2 extraction) as ONE compiled lattice program
+  (``repro.core.engine`` over ``repro.core.lattice``); swept over
+  micro-batch sizes, cache off/on, and both probe strategies: binary
+  search (``gamma_batch=1``) and (G+1)-ary gamma probing
+  (``gamma_batch=3`` — fewer while-loop rounds, same single dispatch).
 
 Reports plans/sec, p50/p99 latency, cache stats, batch-lane solver
-throughput, and the pass/dispatch accounting per configuration: the host
-loop pays ~n device dispatches per batched solve (one per feasibility
-pass), the fused engine exactly 1 — asserted against the engine's
-dispatch counter.  Verifies **exact parity**: every response produced by
-an exact route is bit-compared against a fresh single-query ``optimize``
-on the raw request, with DPconv[max] references forced onto the
-host-loop engine so the fused path is checked against the independent
-host implementation (optima bitwise, join-tree costs identical).
+throughput, and the pass/dispatch/round accounting per configuration:
+the host loop pays ~n device dispatches per batched solve, the fused
+engine exactly 1 — for ``cost="max"`` AND ``cost="cap"`` chunks alike —
+asserted against the engine's dispatch counter, along with zero
+per-solve host extraction recursions.  Verifies **exact parity**: every
+response produced by an exact route is bit-compared against a fresh
+single-query ``optimize`` on the raw request, with DPconv references
+forced onto the host-loop engine so the fused paths are checked against
+the independent host implementations (optima bitwise, join-tree costs
+identical; C_cap trees to f64 tolerance of the replayed sum order).
+
+Two extra sections ride along:
+
+* **replay** — the einsum contraction-log workload
+  (``service.workload.make_einsum_workload``) served and
+  parity-checked, so the gate also covers real-trace traffic
+  (``--workload einsum`` makes it the main sweep's stream too);
+* **cold start** — the executable cache is cleared and a sub-workload
+  is served cold with and without ``PlanServer.prewarm``, measuring the
+  cold-bucket p99 spike the prewarm satellite exists to kill.
 
 Writes ``benchmarks/results/serve_bench.json`` (full rows) and a compact
 cross-PR trajectory record ``BENCH_serve.json`` at the repo root
 (``scripts/bench.sh`` drives this; ``scripts/smoke.sh`` calls it).
 
-Exits non-zero if parity fails, if a fused solve takes more than one
-device dispatch, or (unless ``--no-target``) if the serving targets are
-missed: full fused path >= 2x plans/sec over the naive loop, and fused
->= 2x over the host-loop (PR-1) serving path — judged on the cache-off
-end-to-end rate OR the batch-lane solver rate, whichever clears it (the
-end-to-end ratio on the shared CPU is noisy: Python canonicalization /
-routing overhead, identical in both engines, dilutes it under load;
-both ratios are recorded in BENCH_serve.json so regressions in either
-view stay visible).
+Exits non-zero if parity fails anywhere, if a fused solve takes more
+than one device dispatch or any host extraction runs, if gamma probing
+fails to reduce rounds-per-solve vs binary search, or (unless
+``--no-target``) if the serving targets are missed: full fused path >=
+2x plans/sec over the naive loop, fused >= 2x over the host-loop (PR-1)
+serving path — judged on the cache-off end-to-end rate OR the
+batch-lane solver rate, whichever clears it (the end-to-end ratio on
+the shared CPU is noisy: Python canonicalization / routing overhead,
+identical in both engines, dilutes it under load; both ratios are
+recorded in BENCH_serve.json so regressions in either view stay
+visible) — and prewarmed cold-start p99 below the un-prewarmed one.
 
 A jit warm-up pass (the same shapes, separate server) runs before every
 timed configuration so the numbers measure serving, not tracing.
@@ -54,12 +72,18 @@ import numpy as np
 
 from repro.core import engine as engine_mod
 from repro.core.dpconv import optimize
-from repro.service import (PlanServer, WorkloadSpec, make_workload)
+from repro.service import (PlanServer, WorkloadSpec, make_einsum_workload,
+                           make_workload)
 from repro.service.batch import BatchPolicy
 
 RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                        "results")
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (engine, gamma_batch) configurations swept by the service rows; the
+# gamma-probe config runs cache-off only (its row exists to measure
+# rounds-per-solve and parity, cache hits are engine-independent)
+ENGINE_CONFIGS = (("host", 1), ("fused", 1), ("fused", 3))
 
 
 def _route_method_for(resp) -> "tuple[str, dict]":
@@ -71,11 +95,14 @@ def check_parity(reqs, resps) -> "tuple[int, int]":
 
     The naive reference deliberately runs OUTSIDE the service (raw request
     labels, no canonicalization, no batching): serving must not change
-    answers.  DPconv[max] references are forced onto the HOST-LOOP engine,
-    so fused-engine responses are checked bitwise against the independent
-    per-round implementation, and the response's relabeled join tree must
-    reproduce the optimum cost exactly.  GOO fallbacks are best-effort and
-    approx is only checked for route equality, so both are skipped here.
+    answers.  DPconv references are forced onto the HOST-LOOP engine, so
+    fused-engine responses — including the fused two-pass C_cap program —
+    are checked bitwise against the independent per-round implementation,
+    and the response's relabeled join tree must reproduce the optimum
+    cost (bit-exactly for C_max; to f64 sum-order tolerance for C_cap's
+    C_out, whose tree replays the sum in a different association).  GOO
+    fallbacks are best-effort and approx is only checked for route
+    equality, so both are skipped here.
     """
     checked = mismatched = 0
     for req, resp in zip(reqs, resps):
@@ -83,7 +110,7 @@ def check_parity(reqs, resps) -> "tuple[int, int]":
         if method in ("goo", "approx"):
             continue
         if req.cost == "cap":
-            # pin the reference's dpconv pass to the host loop too —
+            # pin the reference's BOTH passes to the host pipeline —
             # otherwise cap routes would check fused against itself
             ref = optimize(req.q, req.card, cost="cap", engine="host")
         else:
@@ -97,6 +124,10 @@ def check_parity(reqs, resps) -> "tuple[int, int]":
                 and resp.tree is not None):
             # the relabeled tree must realize the optimum bit-exactly
             bad = float(resp.tree.cost_max(req.card)) != float(resp.cost)
+        if (not bad and req.cost == "cap" and resp.tree is not None):
+            got = float(resp.tree.cost_out(req.card))
+            bad = abs(got - float(resp.cost)) > \
+                1e-9 * max(1.0, abs(float(resp.cost)))
         if bad:
             mismatched += 1
             print(f"  PARITY MISMATCH req={req.req_id} cost={req.cost} "
@@ -108,9 +139,9 @@ def check_parity(reqs, resps) -> "tuple[int, int]":
 def _naive_kw(cost: str) -> dict:
     # exact C_out via the polynomial embedding needs small integral
     # cardinalities; the practical single-query exact default is DPsub.
-    # DPconv[max] routes pin engine="host": the naive row is the
-    # PRE-FUSED status quo, comparable against PR-1's recorded numbers
-    # (the fused engine's single-query win shows up in the service rows)
+    # DPconv routes pin engine="host": the naive row is the PRE-FUSED
+    # status quo, comparable against PR-1's recorded numbers (the fused
+    # engine's single-query win shows up in the service rows)
     return {"method": "dpsub"} if cost in ("out", "smj") \
         else {"engine": "host"}
 
@@ -142,20 +173,23 @@ def run_naive(reqs, passes: int = 2) -> dict:
             "p99_ms": float(np.percentile(lat, 99)) * 1e3}
 
 
-def _make_server(batch_size: int, cache: bool,
-                 engine: str = "fused") -> PlanServer:
+def _make_server(batch_size: int, cache: bool, engine: str = "fused",
+                 gamma: int = 1) -> PlanServer:
     return PlanServer(max_batch=batch_size, cache_capacity=8192,
                       enable_cache=cache,
                       batch_policy=BatchPolicy(max_batch=batch_size,
-                                               engine=engine))
+                                               engine=engine,
+                                               gamma_batch=gamma))
 
 
 def _dpconv_pass_stats(resps) -> dict:
     """Mean feasibility passes / device dispatches per *batched solve* on
-    the DPconv[max] batch lane (cache misses only).  Every response in a
-    chunk copies its solve's counters, so each is weighted by 1/chunk —
-    the result is a true per-solve mean, not a chunk-size-weighted one."""
+    the DPconv batch lane — C_max and C_cap chunks alike (cache misses
+    only).  Every response in a chunk copies its solve's counters, so
+    each is weighted by 1/chunk — the result is a true per-solve mean,
+    not a chunk-size-weighted one."""
     passes, disp, weights = [], [], []
+    cap_disp = []
     for r in resps:
         if (r.route.method == "dpconv" and r.route.lane == "batch"
                 and not r.cache_hit
@@ -165,16 +199,22 @@ def _dpconv_pass_stats(resps) -> dict:
             passes.append(r.meta["passes"] * w)
             if r.meta.get("dispatches") is not None:
                 disp.append(r.meta["dispatches"] * w)
+                if r.route.cost == "cap":
+                    cap_disp.append(r.meta["dispatches"])
     out = {"queries_on_lane": len(passes),
            "solves_on_lane": round(sum(weights), 2)}
     if weights:
         out["passes_per_solve"] = float(sum(passes) / sum(weights))
     if disp:
         out["dispatches_per_solve"] = float(sum(disp) / sum(weights))
+    if cap_disp:
+        out["cap_queries"] = len(cap_disp)
+        out["cap_max_dispatches"] = int(max(cap_disp))
     return out
 
 
 def run_service(reqs, batch_size: int, cache: bool, engine: str = "fused",
+                gamma: int = 1,
                 passes: int = 3) -> "tuple[dict, list]":
     """Throughput from closed-loop passes (back-to-back micro-batches —
     apples-to-apples with the naive loop's pure-compute rate).  The same
@@ -184,7 +224,7 @@ def run_service(reqs, batch_size: int, cache: bool, engine: str = "fused",
     cold pass kept in the row).  Latency percentiles come from a fresh
     cold server honoring the workload's Poisson arrivals."""
     engine_mod.reset_stats()
-    srv = _make_server(batch_size, cache, engine)
+    srv = _make_server(batch_size, cache, engine, gamma)
     resps = None
     pass_rates = []
     for p in range(passes):
@@ -198,14 +238,17 @@ def run_service(reqs, batch_size: int, cache: bool, engine: str = "fused",
     # snapshot the engine counters NOW: they must describe the timed
     # throughput configuration, not the separate latency server below
     est = dict(engine_mod.stats().as_dict())
-    srv_lat = _make_server(batch_size, cache, engine)
+    srv_lat = _make_server(batch_size, cache, engine, gamma)
     _, lat_stats = srv_lat.serve(list(reqs), closed_loop=False)
     cs = srv.cache.stats
     solver = srv.solver.total_solved / srv.solver.total_solve_s \
         if srv.solver.total_solve_s > 0 else 0.0
-    row = {"config": f"service/engine={engine}/batch={batch_size}/"
+    probe = "binary" if gamma == 1 else f"gamma{gamma}"
+    row = {"config": f"service/engine={engine}/probe={probe}/"
+                     f"batch={batch_size}/"
                      f"cache={'on' if cache else 'off'}",
            "engine": engine,
+           "probe": probe,
            "plans_per_s": max(pass_rates),
            "cold_plans_per_s": pass_rates[0],
            "solver_plans_per_s": solver,
@@ -218,22 +261,26 @@ def run_service(reqs, batch_size: int, cache: bool, engine: str = "fused",
            "dpconv_lane": _dpconv_pass_stats(resps),
            "engine_counters": est}
     if engine == "fused" and est["solves"]:
-        # the acceptance invariant: a fused batched solve is ONE device
-        # execution (dispatches counted at the engine's exe call site) —
-        # checked by main() alongside parity, not skippable
+        # the acceptance invariants: a fused batched solve is ONE device
+        # execution (dispatches counted at the engine's exe call site,
+        # max and cap chunks alike), and tree extraction never falls
+        # back to a host recursion — checked by main() alongside parity,
+        # not skippable
         row["fused_one_dispatch"] = bool(
             est["dispatches"] == est["solves"])
+        row["fused_no_host_extraction"] = est["host_extractions"] == 0
         row["dpconv_lane"]["fused_rounds_per_solve"] = \
             est["rounds"] / est["solves"]
     return row, resps
 
 
-def warmup(reqs, batch_sizes, engines=("host", "fused")) -> None:
+def warmup(reqs, batch_sizes) -> None:
     """Compile every shape the timed runs can hit: all power-of-two batch
-    buckets per ``n`` on the batched lane (both engines), plus each
-    single-query route.  Fused-engine executables also depend on the
-    candidate-table bucket, so a full serve pass per engine covers the
-    real chunkings too."""
+    buckets per ``n`` on the batched lane (both engines, both probe
+    modes) plus each single-query route.  Candidate tables always pad to
+    the canonical per-``n`` bucket, so a full serve pass per
+    configuration covers the real chunkings; the host jit caches key on
+    gate shapes, covered by the same passes."""
     from repro.core.dpconv import optimize_batch
 
     by_n: dict = {}
@@ -242,20 +289,65 @@ def warmup(reqs, batch_sizes, engines=("host", "fused")) -> None:
     for n, r in sorted(by_n.items()):
         b = 1            # b = 1 compiles the single-query (chunk-1) tier
         while b <= max(batch_sizes):
-            for eng in engines:
+            for eng, gamma in ENGINE_CONFIGS:
                 optimize_batch([r.q] * b, [r.card] * b, cost="max",
-                               engine=eng)
+                               engine=eng, gamma_batch=gamma)
             b *= 2
-    for eng in engines:
-        srv = _make_server(max(batch_sizes), cache=False, engine=eng)
+    for eng, gamma in ENGINE_CONFIGS:
+        srv = _make_server(max(batch_sizes), cache=False, engine=eng,
+                           gamma=gamma)
         srv.serve(list(reqs), closed_loop=True)
         if eng == "fused":
-            # arrival-honoring batching chunks differently (other
-            # candidate-table buckets for the fused executables) — warm
-            # those too so latency rows measure serving, not compiles.
-            # Host jit caches key only on gate shapes, already covered.
-            srv2 = _make_server(max(batch_sizes), cache=False, engine=eng)
+            # arrival-honoring batching chunks differently (other batch
+            # buckets for the fused executables) — warm those too so
+            # latency rows measure serving, not compiles
+            srv2 = _make_server(max(batch_sizes), cache=False,
+                                engine=eng, gamma=gamma)
             srv2.serve(list(reqs), closed_loop=False)
+
+
+def run_cold_start(reqs, batch_size: int, gamma: int = 1) -> dict:
+    """The prewarm satellite's measurement: serve a cold sub-workload
+    (executable cache cleared) with and without ``PlanServer.prewarm``.
+    Without it, the first seconds of serving pay the AOT compiles inline
+    — the cold-bucket p99 spike; with it, startup pays them before
+    traffic arrives and the served latencies stay flat."""
+    ns = sorted({r.q.n for r in reqs})
+    out = {}
+    for prewarm in (False, True):
+        engine_mod.clear_executable_cache()
+        srv = _make_server(batch_size, cache=False, engine="fused",
+                           gamma=gamma)
+        if prewarm:
+            pw = srv.prewarm(ns)
+            out["prewarm_compiled"] = pw["compiled"]
+            out["prewarm_s"] = round(pw["seconds"], 2)
+        _, stats = srv.serve(list(reqs), closed_loop=False)
+        key = "prewarm" if prewarm else "no_prewarm"
+        out[f"p99_ms_{key}"] = stats.latency.percentile(99) * 1e3
+        out[f"p50_ms_{key}"] = stats.latency.percentile(50) * 1e3
+    return out
+
+
+def run_replay(spec_seed: int, n_requests: int,
+               batch_size: int) -> "tuple[dict, int, int]":
+    """The einsum contraction-log replay lane: real-trace templates
+    through the full serving path, parity-checked like the main sweep."""
+    spec = WorkloadSpec(n_requests=n_requests, seed=spec_seed)
+    reqs = make_einsum_workload(spec)
+    warm = _make_server(batch_size, cache=False)
+    warm.serve(list(reqs), closed_loop=True)
+    srv = _make_server(batch_size, cache=True)
+    t0 = time.perf_counter()
+    resps, _ = srv.serve(list(reqs), closed_loop=True)
+    wall = time.perf_counter() - t0
+    checked, bad = check_parity(reqs, resps)
+    row = {"config": f"replay/einsum/batch={batch_size}/cache=on",
+           "plans_per_s": len(reqs) / wall if wall > 0 else 0.0,
+           "n_requests": len(reqs),
+           "cache": srv.cache.stats.as_dict(),
+           "parity_checked": checked}
+    return row, checked, bad
 
 
 def main(argv=None) -> int:
@@ -269,9 +361,16 @@ def main(argv=None) -> int:
                     help="comma-separated micro-batch sizes to sweep")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--budget-frac", type=float, default=0.05)
+    ap.add_argument("--workload", choices=("synthetic", "einsum"),
+                    default="synthetic",
+                    help="main-sweep stream: synthetic templates or the "
+                         "einsum contraction-log replay lane")
     ap.add_argument("--no-target", action="store_true",
                     help="report only; don't enforce the 2x acceptance "
                          "targets")
+    ap.add_argument("--skip-cold", action="store_true",
+                    help="skip the cold-start/prewarm measurement "
+                         "(it recompiles every bucket twice)")
     ap.add_argument("--bench-out",
                     default=os.path.join(REPO_ROOT, "BENCH_serve.json"),
                     help="compact cross-PR trajectory record (repo root)")
@@ -290,9 +389,11 @@ def main(argv=None) -> int:
 
     spec = WorkloadSpec(n_requests=n_requests, seed=args.seed,
                         n_range=n_range, budget_frac=args.budget_frac)
-    reqs = make_workload(spec)
+    reqs = make_workload(spec) if args.workload == "synthetic" \
+        else make_einsum_workload(spec)
     ns = sorted({r.q.n for r in reqs})
-    print(f"# workload: {n_requests} requests, n in {ns}, "
+    print(f"# workload: {args.workload}, {n_requests} requests, "
+          f"n in {ns}, "
           f"{len(set(id(r.q) for r in reqs))} distinct graph objects")
     print("# warmup (jit tracing all shapes) ...", flush=True)
     t0 = time.perf_counter()
@@ -310,12 +411,17 @@ def main(argv=None) -> int:
           f"{naive['p50_ms']:.2f},{naive['p99_ms']:.2f},", flush=True)
 
     parity_fail = 0
-    dispatch_fail = 0
-    best: dict = {"host": {}, "fused": {}}
-    for engine in ("host", "fused"):        # host first: the PR-1 path
-        for cache in (False, True):
+    invariant_fail = 0
+    best: dict = {}
+    rounds_by_probe: dict = {}
+    for engine, gamma in ENGINE_CONFIGS:    # host first: the PR-1 path
+        probe = "binary" if gamma == 1 else f"gamma{gamma}"
+        # the gamma-probe config is a cache-off measurement row
+        cache_sweep = (False,) if gamma > 1 else (False, True)
+        for cache in cache_sweep:
             for b in batch_sizes:
-                row, resps = run_service(list(reqs), b, cache, engine)
+                row, resps = run_service(list(reqs), b, cache, engine,
+                                         gamma)
                 rows.append(row)
                 cs = row["cache"]
                 lane = row["dpconv_lane"]
@@ -324,25 +430,58 @@ def main(argv=None) -> int:
                          f"solver={row['solver_plans_per_s']:.0f}/s;"
                          f"passes={lane.get('passes_per_solve', 0):.1f};"
                          f"dispatches="
-                         f"{lane.get('dispatches_per_solve', 0):.1f}")
+                         f"{lane.get('dispatches_per_solve', 0):.1f};"
+                         f"rounds="
+                         f"{lane.get('fused_rounds_per_solve', 0):.1f}")
                 print(f"{row['config']},{row['plans_per_s']:.1f},"
                       f"{row['p50_ms']:.2f},{row['p99_ms']:.2f},{extra}",
                       flush=True)
                 if not row.get("fused_one_dispatch", True):
-                    dispatch_fail += 1
+                    invariant_fail += 1
                     print("#   INVARIANT VIOLATION: fused solve took "
                           f"{row['engine_counters']['dispatches']} "
                           f"dispatches for "
                           f"{row['engine_counters']['solves']} solves",
                           file=sys.stderr)
-                key = ("cache" if cache else "nocache")
-                cur = best[engine].get(key)
+                if not row.get("fused_no_host_extraction", True):
+                    invariant_fail += 1
+                    print("#   INVARIANT VIOLATION: host extraction "
+                          "recursion ran on the fused path",
+                          file=sys.stderr)
+                if engine == "fused" and not cache and b == max(
+                        batch_sizes) and "fused_rounds_per_solve" in lane:
+                    rounds_by_probe[probe] = \
+                        lane["fused_rounds_per_solve"]
+                key = (engine, gamma, "cache" if cache else "nocache")
+                cur = best.get(key)
                 if cur is None or row["plans_per_s"] > cur["plans_per_s"]:
-                    best[engine][key] = row
+                    best[key] = row
                 checked, bad = check_parity(reqs, resps)
                 parity_fail += bad
                 print(f"#   parity: {checked} exact routes checked, "
                       f"{bad} mismatches", flush=True)
+
+    # ------------------------------------------------- replay lane row
+    replay_row, replay_checked, replay_bad = run_replay(
+        args.seed + 1, min(96, n_requests), max(batch_sizes))
+    rows.append(replay_row)
+    parity_fail += replay_bad
+    print(f"{replay_row['config']},{replay_row['plans_per_s']:.1f},,,"
+          f"hit_rate={replay_row['cache']['hit_rate']}")
+    print(f"#   replay parity: {replay_checked} checked, "
+          f"{replay_bad} mismatches", flush=True)
+
+    # -------------------------------------------- cold start / prewarm
+    cold = {}
+    if not args.skip_cold:
+        cold = run_cold_start(reqs[: min(48, len(reqs))],
+                              min(8, max(batch_sizes)))
+        rows.append({"config": "cold_start", **cold})
+        p99_cold = cold["p99_ms_no_prewarm"]
+        print(f"# cold start: no_prewarm p99={p99_cold:.1f}ms, "
+              f"prewarm p99={cold['p99_ms_prewarm']:.1f}ms "
+              f"({cold['prewarm_compiled']} executables in "
+              f"{cold['prewarm_s']}s before traffic)", flush=True)
 
     os.makedirs(RESULTS, exist_ok=True)
     out = os.path.join(RESULTS, "serve_bench.json")
@@ -353,15 +492,15 @@ def main(argv=None) -> int:
 
     # ------------------------------------------------ acceptance targets
     # 1) full fused serving path (cache + batching) vs the naive loop
-    fused_full = best["fused"]["cache"]["plans_per_s"]
+    fused_full = best[("fused", 1, "cache")]["plans_per_s"]
     speedup_naive = fused_full / naive["plans_per_s"]
     print(f"# best fused batched+cached vs naive: {speedup_naive:.2f}x")
     # 2) fused engine vs the PR-1 (host-loop) serving path.  Compared
     # cache-OFF so the ratio measures the solve path, not replayed cache
     # hits (a hit costs the same regardless of engine); the batch-lane
     # solver rate is reported alongside as the pure-solver view.
-    host_row = best["host"]["nocache"]
-    fused_row = best["fused"]["nocache"]
+    host_row = best[("host", 1, "nocache")]
+    fused_row = best[("fused", 1, "nocache")]
     speedup_host = (fused_row["plans_per_s"] / host_row["plans_per_s"]
                     if host_row["plans_per_s"] > 0 else 0.0)
     solver_speedup = (fused_row["solver_plans_per_s"]
@@ -371,18 +510,31 @@ def main(argv=None) -> int:
           f"{speedup_host:.2f}x end-to-end, {solver_speedup:.2f}x on the "
           f"batch-lane solver")
     print(f"# dispatches per batched solve: host~="
-          f"{best['host']['nocache']['dpconv_lane'].get('passes_per_solve', 0):.1f}"
+          f"{host_row['dpconv_lane'].get('passes_per_solve', 0):.1f}"
           f" (one per feasibility pass), fused="
           f"{fused_row['dpconv_lane'].get('dispatches_per_solve', 0):.1f}")
+    # 3) probe strategies: (G+1)-ary gamma probing must cut the while-
+    # loop rounds per solve vs binary search (equal optima/trees were
+    # already asserted by its parity sweep)
+    gamma_probe = [p for p in rounds_by_probe if p != "binary"]
+    rounds_ok = True
+    if gamma_probe and "binary" in rounds_by_probe:
+        g = gamma_probe[0]
+        rounds_ok = rounds_by_probe[g] < rounds_by_probe["binary"]
+        print(f"# rounds per fused solve: binary="
+              f"{rounds_by_probe['binary']:.2f}, {g}="
+              f"{rounds_by_probe[g]:.2f} "
+              f"({'OK' if rounds_ok else 'NOT REDUCED'})")
 
     summary = {
         "generated_by": "benchmarks/serve_bench.py "
                         + ("--quick" if args.quick else "(full)"),
+        "workload": args.workload,
         "n_requests": len(reqs),
         "n_range": list(n_range),
         "plans_per_s": {
             "naive": naive["plans_per_s"],
-            "host_serving": best["host"]["cache"]["plans_per_s"],
+            "host_serving": best[("host", 1, "cache")]["plans_per_s"],
             "host_serving_nocache": host_row["plans_per_s"],
             "fused_serving": fused_full,
             "fused_serving_nocache": fused_row["plans_per_s"],
@@ -392,10 +544,10 @@ def main(argv=None) -> int:
             "fused": fused_row["solver_plans_per_s"],
         },
         "latency_ms": {
-            "fused_p50": best["fused"]["cache"]["p50_ms"],
-            "fused_p99": best["fused"]["cache"]["p99_ms"],
-            "host_p50": best["host"]["cache"]["p50_ms"],
-            "host_p99": best["host"]["cache"]["p99_ms"],
+            "fused_p50": best[("fused", 1, "cache")]["p50_ms"],
+            "fused_p99": best[("fused", 1, "cache")]["p99_ms"],
+            "host_p50": best[("host", 1, "cache")]["p50_ms"],
+            "host_p99": best[("host", 1, "cache")]["p99_ms"],
         },
         "passes_per_solve": {
             "host": host_row["dpconv_lane"].get("passes_per_solve"),
@@ -405,6 +557,14 @@ def main(argv=None) -> int:
             "host": host_row["dpconv_lane"].get("dispatches_per_solve"),
             "fused": fused_row["dpconv_lane"].get("dispatches_per_solve"),
         },
+        "rounds_per_solve": rounds_by_probe,
+        "cap_lane": {
+            "queries": fused_row["dpconv_lane"].get("cap_queries", 0),
+            "max_dispatches_per_solve":
+                fused_row["dpconv_lane"].get("cap_max_dispatches"),
+        },
+        "cold_start": cold,
+        "replay": replay_row,
         "speedup": {
             "fused_vs_naive": speedup_naive,
             "fused_vs_host_serving": speedup_host,
@@ -419,8 +579,12 @@ def main(argv=None) -> int:
     if parity_fail:
         print("FAIL: parity mismatches", file=sys.stderr)
         return 1
-    if dispatch_fail:
-        print("FAIL: fused solves took more than one device dispatch",
+    if invariant_fail:
+        print("FAIL: fused dispatch/extraction invariants violated",
+              file=sys.stderr)
+        return 1
+    if not rounds_ok:
+        print("FAIL: gamma probing did not reduce rounds per solve",
               file=sys.stderr)
         return 1
     if not args.no_target:
@@ -431,6 +595,11 @@ def main(argv=None) -> int:
         if max(speedup_host, solver_speedup) < 2.0:
             print("FAIL: fused engine < 2x over the host-loop serving "
                   "path", file=sys.stderr)
+            return 1
+        if (cold and cold["p99_ms_prewarm"]
+                >= cold["p99_ms_no_prewarm"]):
+            print("FAIL: prewarm did not improve cold-start p99",
+                  file=sys.stderr)
             return 1
     return 0
 

@@ -2,7 +2,12 @@
 # Fast regression gate for the serving path: tier-1 tests + the quick
 # serve benchmark (CPU, Pallas kernels in interpret mode).  The bench
 # step runs through scripts/bench.sh, which also records the cross-PR
-# perf trajectory in BENCH_serve.json at the repo root.
+# perf trajectory in BENCH_serve.json at the repo root.  serve_bench
+# itself exits non-zero on any parity mismatch (including the fused
+# C_cap lane and the einsum replay lane), on the one-dispatch /
+# no-host-recursion invariants, and on the probe-rounds reduction; the
+# explicit check below re-asserts the fused-cap gate from the written
+# summary so a benchmark refactor can't silently drop it.
 #
 #     scripts/smoke.sh            # full tier-1 + quick serve bench
 #     SMOKE_SKIP_TESTS=1 scripts/smoke.sh   # bench only
@@ -15,4 +20,19 @@ if [[ -z "${SMOKE_SKIP_TESTS:-}" ]]; then
 fi
 
 scripts/bench.sh
+
+python - <<'PY'
+import json
+s = json.load(open("BENCH_serve.json"))
+assert s["parity_mismatches"] == 0, "parity mismatches recorded"
+cap = s["cap_lane"]
+assert cap["queries"] > 0, "no cap requests exercised the fused lane"
+assert cap["max_dispatches_per_solve"] == 1, \
+    f"fused cap solves took {cap['max_dispatches_per_solve']} dispatches"
+r = s["rounds_per_solve"]
+gammas = [k for k in r if k != "binary"]
+assert gammas and r[gammas[0]] < r["binary"], \
+    f"gamma probing did not reduce rounds: {r}"
+print("smoke gates: fused-cap parity/dispatch + probe rounds OK")
+PY
 echo "smoke: OK"

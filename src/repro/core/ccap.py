@@ -12,6 +12,16 @@ optimization becomes *faster* than a vanilla C_out optimization for large
 cliques, because pass 1 is O(2^n n^3) and pass 2 enjoys a pruned search
 space.
 
+Engines: the default (``engine="auto"``, with the paper's
+``dpconv``/``dpsub`` pass combination) runs BOTH passes — and the
+witness-tree extraction — as one fused lattice program on device
+(``engine.fused_ccap``): pass 2 is ``lattice.minplus_value_layers``, the
+(min,+) instantiation of the same layered skeleton, gated by
+gamma-slack.  One device dispatch per (batched) solve; caps, C_out
+values and trees are bit-identical to the host pipeline, which remains
+available as ``engine="host"`` (the parity reference, and the only
+route for ``engine_pass2="dpccp"`` / ``engine_pass1="dpsub"``).
+
 ``gamma_slack`` > 1 implements the Sec. 11 discussion (resource-aware
 trade-off): cap at gamma = slack * gamma* instead of the optimum, trading
 memory headroom for a better C_out.
@@ -26,6 +36,7 @@ from repro.core.querygraph import QueryGraph
 from repro.core.dpconv_max import dpconv_max
 from repro.core.baselines import dpsub, dpsub_max
 from repro.core.dpccp import dpccp
+from repro.core import engine as engine_mod
 from repro.core import jointree
 
 
@@ -35,6 +46,12 @@ class CcapResult:
     cout: float             # optimal C_out subject to the cap
     tree: "jointree.JoinTree | None"
     passes: dict            # diagnostics
+    engine: str = "host"    # which pipeline produced it
+    dispatches: "int | None" = None
+
+
+def _fused_combo(engine_pass1: str, engine_pass2: str) -> bool:
+    return engine_pass1 == "dpconv" and engine_pass2 == "dpsub"
 
 
 def ccap(
@@ -44,14 +61,40 @@ def ccap(
     engine_pass2: str = "dpsub",       # "dpsub" | "dpccp"
     gamma_slack: float = 1.0,
     extract_tree: bool = True,
-    engine: str = "auto",              # dpconv_max solver: fused/host loop
+    engine: str = "auto",              # "auto" | "fused" | "host"
+    gamma_batch: int = 1,              # pass-1 probe width (fused only)
 ) -> CcapResult:
     n = q.n
+    if engine not in ("auto", "fused", "host"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "fused" and not _fused_combo(engine_pass1, engine_pass2):
+        raise ValueError("the fused C_cap program implements the "
+                         "dpconv/dpsub pass combination; other passes "
+                         "run on engine='host'")
+    use_fused = engine == "fused" or (
+        engine == "auto" and _fused_combo(engine_pass1, engine_pass2))
+    if use_fused:
+        fc = engine_mod.fused_ccap(
+            np.asarray(card, np.float64)[None, :], n,
+            gamma_slack=gamma_slack, extract_tree=extract_tree,
+            gamma_batch=gamma_batch)
+        cout = float(fc.couts[0])
+        assert np.isfinite(cout), \
+            "cap infeasible — gamma below C_max optimum?"
+        return CcapResult(gamma=float(fc.gammas[0]), cout=cout,
+                          tree=fc.trees[0],
+                          passes={"pass1_fsc_passes": fc.rounds},
+                          engine="fused", dispatches=fc.dispatches)
+
     diagnostics = {}
     if engine_pass1 == "dpconv":
+        # NB: under engine="auto" with a non-fusable pass-2 (dpccp),
+        # pass 1 itself still runs on the fused engine; engine="host"
+        # pins the whole pipeline to the per-round host loop
         res = dpconv_max(q, card, extract_tree=False, engine=engine)
         gamma = res.optimum
         diagnostics["pass1_fsc_passes"] = res.feasibility_passes
+        diagnostics["pass1_engine"] = res.engine
     elif engine_pass1 == "dpsub":
         gamma = float(dpsub_max(card, n)[-1])
     else:
@@ -69,4 +112,42 @@ def ccap(
     cout = float(dp[-1])
     assert np.isfinite(cout), "cap infeasible — gamma below C_max optimum?"
     tree = jointree.extract_tree_out(dp, card, n) if extract_tree else None
-    return CcapResult(gamma=gamma, cout=cout, tree=tree, passes=diagnostics)
+    return CcapResult(gamma=gamma, cout=cout, tree=tree,
+                      passes=diagnostics, engine="host")
+
+
+# --------------------------------------------------------- batched queries
+def ccap_batch(
+    qs: list,
+    cards: np.ndarray,
+    n: int,
+    gamma_slack: float = 1.0,
+    extract_tree: bool = True,
+    engine: str = "fused",
+    gamma_batch: int = 1,
+) -> "list[CcapResult]":
+    """Solve B same-``n`` C_cap instances in lockstep — the serving
+    batch-lane entry point.  ``engine="fused"`` runs the whole batch
+    (both passes + extraction) in ONE device dispatch; ``"host"`` loops
+    the reference pipeline per query (parity/fallback)."""
+    cards = np.asarray(cards, np.float64)
+    B = cards.shape[0]
+    assert cards.shape[1] == 1 << n
+    if engine in ("fused", "auto"):
+        fc = engine_mod.fused_ccap(cards, n, gamma_slack=gamma_slack,
+                                   extract_tree=extract_tree,
+                                   gamma_batch=gamma_batch)
+        out = []
+        for b in range(B):
+            cout = float(fc.couts[b])
+            assert np.isfinite(cout), \
+                "cap infeasible — gamma below C_max optimum?"
+            out.append(CcapResult(gamma=float(fc.gammas[b]), cout=cout,
+                                  tree=fc.trees[b],
+                                  passes={"pass1_fsc_passes": fc.rounds},
+                                  engine="fused",
+                                  dispatches=fc.dispatches))
+        return out
+    return [ccap(q, cards[b], gamma_slack=gamma_slack,
+                 extract_tree=extract_tree, engine="host")
+            for b, q in enumerate(qs)]

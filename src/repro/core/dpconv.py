@@ -21,7 +21,7 @@ from repro.core import baselines, dpccp as dpccp_mod, jointree
 from repro.core.dpconv_max import dpconv_max, dpconv_max_batch
 from repro.core.dpconv_out import dpconv_out
 from repro.core.approx import approx_out
-from repro.core.ccap import ccap
+from repro.core.ccap import ccap, ccap_batch
 
 
 @dataclasses.dataclass
@@ -68,7 +68,10 @@ def optimize(q: QueryGraph, card: np.ndarray, cost: str = "max",
     if cost == "cap":
         r = ccap(q, card, extract_tree=extract_tree, **kw)
         return PlanResult(r.cout, r.tree,
-                          {"gamma": r.gamma, **r.passes})
+                          {"gamma": r.gamma, "engine": r.engine,
+                           "dispatches": r.dispatches,
+                           "passes": r.passes.get("pass1_fsc_passes"),
+                           **r.passes})
     if cost == "smj":
         if method == "approx":
             val, dp = approx_out(card, n, cost="smj", **kw)
@@ -87,10 +90,13 @@ def optimize_batch(qs, cards, cost: str = "max", method: str = "dpconv",
     For ``(cost="max", method="dpconv")`` with same-``n`` queries the DP
     table construction is stacked on a leading batch axis and every
     feasibility sweep serves the whole batch (``dpconv_max_batch``) —
-    results are bit-identical to B single ``optimize`` calls.  Every other
-    (cost, method) pair, and mixed-``n`` batches, fall back to a per-query
-    loop.  ``repro.service.batch`` sits on top of this and does the
-    same-``n`` grouping.
+    results are bit-identical to B single ``optimize`` calls.
+    ``(cost="cap", method="dpconv")`` same-``n`` batches run the fused
+    two-pass C_cap lattice program the same way (``ccap_batch``), one
+    dispatch for the whole batch.  Every other (cost, method) pair, and
+    mixed-``n`` batches, fall back to a per-query loop.
+    ``repro.service.batch`` sits on top of this and does the same-``n``
+    grouping.
     """
     qs = list(qs)
     cards = [np.asarray(c) for c in cards]
@@ -103,6 +109,17 @@ def optimize_batch(qs, cards, cost: str = "max", method: str = "dpconv",
                            {"passes": r.feasibility_passes,
                             "engine": r.engine,
                             "dispatches": r.dispatches,
+                            "batched": True}) for r in rs]
+    if (cost == "cap" and method == "dpconv" and len(qs) > 1
+            and len(ns) == 1 and dp_fn is None
+            and kw.get("engine", "auto") != "host"):
+        kw.pop("engine", None)
+        rs = ccap_batch(qs, np.stack(cards), qs[0].n,
+                        extract_tree=extract_tree, **kw)
+        return [PlanResult(r.cout, r.tree,
+                           {"gamma": r.gamma, "engine": r.engine,
+                            "dispatches": r.dispatches,
+                            "passes": r.passes.get("pass1_fsc_passes"),
                             "batched": True}) for r in rs]
     return [optimize(q, c, cost=cost, method=method,
                      extract_tree=extract_tree, **kw)

@@ -18,11 +18,15 @@ Beyond-paper variants (see DESIGN.md §Perf):
     (TPU/VPU lanes) the G-fold work per pass is nearly free for small G.
   * feasibility passes run with the final-layer shortcut and direct small
     layers (see ``repro.core.layered``).
-  * the fused whole-solve engine (``repro.core.engine``) runs binary
-    search, gate construction and the layered DP inside one compiled
-    ``lax.while_loop`` — one device dispatch per (batched) solve instead
-    of one per feasibility pass.  Both ``dpconv_max`` and
-    ``dpconv_max_batch`` default to it (``engine="auto"``).
+  * the fused whole-solve engine (``repro.core.engine``, built on the
+    lattice-program layer ``repro.core.lattice``) runs the search, gate
+    construction, layered DP and Alg. 2 tree extraction inside one
+    compiled program — one device dispatch per (batched) solve instead
+    of one per feasibility pass, and no per-solve host recursion.  Both
+    ``dpconv_max`` and ``dpconv_max_batch`` default to it
+    (``engine="auto"``), including ``gamma_batch > 1``: the fused while
+    loop probes G thresholds per round on a leading gate axis.  The
+    host ``gamma_batch`` loop below stays as the parity reference.
 """
 from __future__ import annotations
 
@@ -84,6 +88,7 @@ def dpconv_max(
     extract_tree: bool = True,
     early_exit: bool = False,
     engine: str = "auto",
+    backend: str = "xla",
 ) -> CmaxResult:
     """Optimal C_max value (and join tree) for query graph ``q`` with dense
     cardinality table ``card`` over the subset lattice.
@@ -92,25 +97,32 @@ def dpconv_max(
     all splits — cross products priced by ``card``.  (The query graph
     argument is used only for tree extraction sanity checks.)
 
-    ``engine`` selects the solver: ``"fused"`` runs the whole binary
-    search on device in one dispatch (``repro.core.engine``, bit-identical
+    ``engine`` selects the solver: ``"fused"`` runs the whole search on
+    device in one dispatch (``repro.core.engine``, bit-identical
     results), ``"host"`` is the per-round host loop.  The default
-    ``"auto"`` uses the fused engine except for the variants only the host
-    loop implements (``gamma_batch > 1``, ``early_exit``).
+    ``"auto"`` uses the fused engine — including ``gamma_batch > 1``,
+    which folds (G+1)-ary probing into the fused while loop (G gates on
+    a leading axis, ~log_{G+1} rounds) — except for ``early_exit``,
+    which only the host loop implements (its layer abort is a host-sync
+    decision by construction).  ``backend`` selects the fused engine's
+    transform tier (``"xla"`` f64 / ``"pallas"`` int32); the host loop
+    takes transform overrides via ``dpconv_max_batch``'s ``dp_fn``
+    instead.
     """
     n = q.n
     size = 1 << n
     if engine not in ("auto", "fused", "host"):
         raise ValueError(f"unknown engine {engine!r}")
-    use_fused = engine == "fused" or (
-        engine == "auto" and gamma_batch <= 1 and not early_exit)
+    use_fused = engine == "fused" or (engine == "auto" and not early_exit)
     if use_fused:
-        if gamma_batch > 1 or early_exit:
-            raise ValueError("gamma_batch > 1 / early_exit are host-loop "
-                             "variants; use engine='host' or 'auto'")
+        if early_exit:
+            raise ValueError("early_exit is a host-loop variant; "
+                             "use engine='host' or 'auto'")
         fs = fused_dpconv_max(np.asarray(card, np.float64)[None, :], n,
                               direct_layers=direct_layers,
-                              extract_tree=extract_tree)
+                              extract_tree=extract_tree,
+                              backend=backend,
+                              gamma_batch=gamma_batch)
         return CmaxResult(optimum=float(fs.optima[0]), tree=fs.trees[0],
                           feasibility_passes=fs.passes, engine="fused",
                           dispatches=fs.dispatches)
@@ -181,6 +193,7 @@ def dpconv_max_batch(
     dp_fn=None,
     engine: str = "auto",
     backend: str = "xla",
+    gamma_batch: int = 1,
 ) -> "list[CmaxResult]":
     """Solve B same-``n`` DPconv[max] instances in lockstep.
 
@@ -206,9 +219,11 @@ def dpconv_max_batch(
     ``engine="fused"`` (and the ``"auto"`` default, when no ``dp_fn``
     override is given) runs the whole lockstep solve in one device
     dispatch via ``repro.core.engine`` — ``backend`` then selects its
-    transform tier (``"xla"`` f64 / ``"pallas"`` int32).  ``dp_fn`` is a
-    host-loop concept, so providing it routes to the host path under
-    ``"auto"``.
+    transform tier (``"xla"`` f64 / ``"pallas"`` int32) and
+    ``gamma_batch`` its probe strategy (G > 1: (G+1)-ary search, G gates
+    per round on a leading axis).  ``dp_fn`` is a host-loop concept, so
+    providing it routes to the host path under ``"auto"``; the host
+    batch loop itself is binary-only and refuses ``gamma_batch > 1``.
     """
     cards = np.asarray(cards, np.float64)
     B, size = cards.shape
@@ -220,10 +235,14 @@ def dpconv_max_batch(
             raise ValueError("dp_fn is a host-loop override; "
                              "use engine='host' or 'auto'")
         fs = fused_dpconv_max(cards, n, direct_layers=direct_layers,
-                              extract_tree=extract_tree, backend=backend)
+                              extract_tree=extract_tree, backend=backend,
+                              gamma_batch=gamma_batch)
         return [CmaxResult(optimum=float(fs.optima[b]), tree=fs.trees[b],
                            feasibility_passes=fs.passes, engine="fused",
                            dispatches=fs.dispatches) for b in range(B)]
+    if gamma_batch > 1:
+        raise ValueError("the host batch loop is binary-search only; "
+                         "gamma_batch > 1 runs on the fused engine")
     pc_np = popcounts(n)
     pc = jnp.asarray(pc_np, dtype=jnp.int32)
     cj = jnp.asarray(cards)

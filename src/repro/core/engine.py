@@ -1,59 +1,52 @@
-"""Fused on-device DPconv[max] engine (DESIGN.md §Fused-engine).
+"""Fused on-device DPconv engines (DESIGN.md §Fused-engine).
 
-The host-loop solvers (``dpconv_max`` / ``dpconv_max_batch``) dispatch one
-feasibility sweep per binary-search round and sync the verdict back to the
-host between rounds: ~n device round trips per solve, each paying dispatch
-latency plus Python gate rebuilding.  At serving batch sizes that overhead
-dominates the actual lattice arithmetic (the dispatch-bound regime).
+The host-loop solvers (``dpconv_max`` / ``dpconv_max_batch`` / ``ccap``)
+dispatch one feasibility sweep per search round and sync the verdict back
+to the host between rounds: ~n device round trips per solve, each paying
+dispatch latency plus Python gate rebuilding.  At serving batch sizes
+that overhead dominates the actual lattice arithmetic.
 
-This module fuses the *entire* batched solve into ONE compiled program:
-
-* the B per-query candidate tables (sorted unique cardinalities, exactly
-  the host path's arrays) are padded to a ``(B_bucket, C_bucket)``
-  power-of-two buffer — padding repeats each row's last (always-feasible)
-  candidate, so per-row brackets never leave the real range;
-* the lockstep binary search runs as a ``jax.lax.while_loop`` whose body
-  builds the per-round gates from the resident ``(B, 2^n)`` cardinality
-  tables and runs the full layered feasibility DP — no host sync until
-  every query's bracket has collapsed;
-* the layer recursion is scan-form: small layers are evaluated directly
-  (static gather tables), middle layers run in a ``lax.fori_loop`` whose
-  body computes the symmetry-halved ranked convolution from a preallocated
-  ``(n+1, B, 2^n)`` ranked-zeta buffer.  The buffer lives in the
-  while-loop carry, so XLA aliases it across rounds (donated loop state)
-  instead of reallocating it per feasibility pass;
-* the final layer uses the Moebius-at-V shortcut for probes and the full
-  butterfly for the tree-extraction table, exactly like the host path.
+This module is the *execution tier* over the lattice-program layer
+(``repro.core.lattice``): it pads batched queries into power-of-two
+shape buckets, AOT-compiles the whole-solve programs, caches the
+executables, and counts every device execution.  The programs themselves
+— lockstep (G+1)-ary search, scan-form layered DP, the (min,+) C_cap
+value pass, and the Alg. 2 extraction scan — are built by
+``lattice.build_max_program`` / ``lattice.build_cap_program``; one
+batched solve is ONE dispatch for every cost function and probe
+strategy, including tree extraction (no per-solve host recursion: the
+host only assembles ``JoinTree`` objects from the returned split
+arrays).
 
 Executables are cached by ``(n, B_bucket, C_bucket, backend,
-direct_layers, extract)`` as ahead-of-time compiled artifacts
-(``jit(...).lower(...).compile()``), so the serving tier never re-traces
-in steady state; ``stats()`` exposes dispatch/solve/round counters that
-``benchmarks/serve_bench.py`` asserts on (one device dispatch per batched
-solve, vs ~n for the host loop).
+direct_layers, extract, cost, gamma_batch)`` as ahead-of-time compiled
+artifacts (``jit(...).lower(...).compile()``), so the serving tier never
+re-traces in steady state; ``prewarm`` compiles the buckets a configured
+server can hit before traffic arrives (killing the cold-bucket p99
+spike), and ``stats()`` exposes dispatch/solve/round counters that
+``benchmarks/serve_bench.py`` asserts on.
 
-Exactness: identical to the host path — all layer values are exact {0,1}
-counts (f64 up to n = 26 on the XLA backend, int32 up to n = 15 on the
-Pallas backend), the probe sequence is the host's lockstep pivot sequence,
-and the extraction DP is the same table, so optima and join trees are
-bit-identical (asserted by tests/test_engine.py and the serve_bench
-parity sweep).
+Exactness: identical to the host paths — all feasibility values are
+exact {0,1} counts (f64 up to n = 26 on the XLA backend, int32 up to
+n = 15 on the Pallas backend), the G = 1 probe sequence is the host's
+lockstep pivot sequence, the (min,+) pass reproduces DPsub[out]'s f64
+operations, and the extraction scan applies the host extractors'
+witness rule, so optima, C_out values and join trees are bit-identical
+(tests/test_engine.py, tests/test_lattice_parity.py, and the
+serve_bench parity sweep).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
-from repro.core import jointree
+from repro.core import jointree, lattice
 from repro.core.bitset import popcounts
-from repro.core.layered import _direct_layer_indices
-from repro.core.zeta import mobius, zeta
-
-BACKENDS = ("xla", "pallas")
+from repro.core.lattice import BACKENDS  # noqa: F401  (re-export)
 
 
 # ----------------------------------------------------------------- telemetry
@@ -64,7 +57,9 @@ class EngineStats:
     queries: int = 0           # real (un-padded) queries planned
     rounds: int = 0            # total while-loop rounds across solves
     exec_cache_hits: int = 0   # executable reused without re-tracing
-    exec_cache_misses: int = 0  # (n, B, C, backend) combos compiled
+    exec_cache_misses: int = 0  # shape-bucket combos compiled
+    prewarmed: int = 0         # executables compiled by prewarm()
+    host_extractions: int = 0  # per-solve host recursions (must stay 0)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -97,155 +92,99 @@ class FusedSolve:
     passes: int                    # rounds + extraction pass, host parity
     dispatches: int = 1            # device executions measured (1 fused)
     dp: "np.ndarray | None" = None  # (B, 2^n) extraction feasibility table
+    extraction: str = "device"     # where Alg. 2 ran
 
 
-# ----------------------------------------------------------- program builder
-def _transforms(backend: str):
-    if backend == "xla":
-        return zeta, mobius, jnp.float64
-    if backend == "pallas":
-        # int32 counting tier: exact while counts < 2^31 (n <= 15),
-        # enforced by the caller (BatchPolicy.pallas_max_n)
-        from repro.kernels.ops import mobius_batch_op, zeta_batch_op
-        return zeta_batch_op, mobius_batch_op, jnp.int32
-    raise ValueError(f"unknown engine backend {backend!r}")
+@dataclasses.dataclass
+class FusedCapSolve:
+    """One fused batched C_cap solve: both passes + extraction, one
+    dispatch."""
+    gammas: np.ndarray             # (B,) caps (= slack * optimal C_max)
+    couts: np.ndarray              # (B,) optimal C_out under the cap
+    trees: list                    # JoinTree | None per query
+    rounds: int                    # pass-1 search rounds (lockstep)
+    dispatches: int = 1
+    extraction: str = "device"
 
 
-def _build_fn(n: int, direct_layers: int, backend: str, extract: bool):
-    """The whole-solve program: (cards, cand, hi0) -> (opt[, dp], rounds).
-
-    Shapes are bound at compile time: cards (B, 2^n) f64, cand (B, C) f64,
-    hi0 (B,) int32.  All loops run on device; the only host transfer is
-    the final result tuple.
-    """
-    size = 1 << n
-    pc_np = popcounts(n)
-    zeta_fn, mobius_fn, dtype = _transforms(backend)
-    # final layer always goes through the convolution shortcut (exact
-    # either way); direct evaluation covers layers 2..min(direct, n-1)
-    dl = min(direct_layers, n - 1)
-    D = max(n // 2, 1)             # symmetry-halved convolution slots
-
-    def fn(cards, cand, hi0):
-        B = cards.shape[0]
-        pc = jnp.asarray(pc_np, dtype=jnp.int32)
-        zero = jnp.array(0, dtype)
-        one = jnp.array(1, dtype)
-        singles = jnp.broadcast_to((pc == 1).astype(dtype), (B, size))
-
-        def gate_of(gamma):
-            g = (cards <= gamma[:, None]).astype(dtype)
-            return jnp.where(pc >= 2, g, one)
-
-        def conv_at(Z, k):
-            # Σ_{d=1..k-1} Z[d] Z[k-d], symmetry-halved:
-            #   2 Σ_{1<=d<k-d} Z[d] Z[k-d] + [k even] Z[k/2]^2
-            # ``k`` may be traced (fori_loop); slots with d > k-d carry
-            # stale previous-round values and are masked by w = 0.
-            d = jnp.arange(1, D + 1)
-            w = jnp.where(d < k - d, 2, jnp.where(d == k - d, 1, 0))
-            Zhi = Z[jnp.clip(k - d, 1, n)]
-            return jnp.sum((w.astype(dtype))[:, None, None]
-                           * Z[1:D + 1] * Zhi, axis=0)
-
-        def run_layers(gate, Z, shortcut):
-            """One full layered feasibility DP under ``gate``; returns
-            (dp, Z, feasible-at-V).  Slot Z[1] (the singleton transform,
-            round-invariant) is set once at Z0 and never rewritten."""
-            dp = singles
-            for k in range(2, dl + 1):        # direct small layers
-                sets, subs, comps = _direct_layer_indices(n, k)
-                prod = dp[..., subs] * dp[..., comps]
-                layer_ind = (jnp.sum(prod, axis=-1) > 0.5).astype(dtype)
-                layer_full = jnp.zeros((B, size), dtype)
-                layer_full = layer_full.at[..., sets].set(layer_ind) * gate
-                layer_full = jnp.where(pc == k, layer_full, zero)
-                dp = dp + layer_full
-                Z = Z.at[k].set(zeta_fn(layer_full))
-
-            def layer_body(k, carry):         # middle layers, scan-form
-                dp, Z = carry
-                h = mobius_fn(conv_at(Z, k))
-                layer_full = jnp.where(
-                    pc == k, (h > 0.5).astype(dtype) * gate, zero)
-                dp = dp + layer_full
-                Z = lax.dynamic_update_index_in_dim(
-                    Z, zeta_fn(layer_full), k, 0)
-                return dp, Z
-
-            first_conv = max(dl + 1, 2)   # layers start at 2: slot Z[1]
-            if first_conv < n:            # holds the singleton transform
-                dp, Z = lax.fori_loop(first_conv, n, layer_body, (dp, Z))
-            acc = conv_at(Z, n)
-            if shortcut:
-                # Moebius evaluated at the single point V: signed partial
-                # sums exceed the count bound, so reduce in f64 (host
-                # parity: layered_feasibility_dp does the same)
-                sign = jnp.where((n - pc) % 2 == 0, 1.0, -1.0)
-                count_v = jnp.sum(acc.astype(jnp.float64) * sign, axis=-1)
-                feas = (count_v > 0.5) & (gate[..., -1] > zero)
-                return dp, Z, feas
-            h = mobius_fn(acc)
-            layer_full = jnp.where(pc == n,
-                                   (h > 0.5).astype(dtype) * gate, zero)
-            dp = dp + layer_full
-            return dp, Z, dp[..., -1] > 0.5
-
-        # ------------------------- whole-solve lockstep binary search
-        lo0 = jnp.zeros_like(hi0)
-        Z0 = jnp.zeros((n + 1, B, size), dtype).at[1].set(zeta_fn(singles))
-
-        def cond(state):
-            lo, hi, _, _ = state
-            return jnp.any(lo < hi)
-
-        def body(state):
-            lo, hi, Z, r = state
-            active = lo < hi
-            mid = jnp.where(active, (lo + hi) // 2, hi)
-            gamma = jnp.take_along_axis(cand, mid[:, None], axis=1)[:, 0]
-            _, Z, ok = run_layers(gate_of(gamma), Z, True)
-            hi = jnp.where(active & ok, mid, hi)
-            lo = jnp.where(active & ~ok, mid + 1, lo)
-            return lo, hi, Z, r + 1
-
-        lo, hi, Z, rounds = lax.while_loop(
-            cond, body, (lo0, hi0, Z0, jnp.int32(0)))
-        opt = jnp.take_along_axis(cand, hi[:, None], axis=1)[:, 0]
-        if extract:
-            dp, _, _ = run_layers(gate_of(opt), Z, False)
-            return opt, dp.astype(jnp.float64), rounds
-        return opt, rounds
-
-    return fn
-
-
+# ----------------------------------------------------------- program cache
 def _next_pow2(x: int) -> int:
     return 1 << max(x - 1, 0).bit_length()
 
 
 def get_executable(n: int, B: int, C: int, backend: str = "xla",
-                   direct_layers: int = 4, extract: bool = True):
+                   direct_layers: int = 4, extract: bool = True,
+                   cost: str = "max", gamma_batch: int = 1):
     """AOT-compiled whole-solve executable for one shape bucket.
 
-    Keyed by ``(n, B_bucket, C_bucket, backend, direct_layers, extract)``;
-    a hit returns the compiled artifact with zero tracing work — the
-    steady-state serving path never re-enters the tracer.
+    Keyed by ``(n, B_bucket, C_bucket, backend, direct_layers, extract,
+    cost, gamma_batch)``; a hit returns the compiled artifact with zero
+    tracing work — the steady-state serving path never re-enters the
+    tracer.
     """
-    key = (n, B, C, backend, direct_layers, extract)
+    key = (n, B, C, backend, direct_layers, bool(extract), cost,
+           gamma_batch)
     exe = _EXEC_CACHE.get(key)
     if exe is not None:
         _STATS.exec_cache_hits += 1
         return exe
     _STATS.exec_cache_misses += 1
-    fn = _build_fn(n, direct_layers, backend, extract)
-    exe = jax.jit(fn).lower(
+    args = [
         jax.ShapeDtypeStruct((B, 1 << n), jnp.float64),
         jax.ShapeDtypeStruct((B, C), jnp.float64),
         jax.ShapeDtypeStruct((B,), jnp.int32),
-    ).compile()
+    ]
+    if cost == "max":
+        fn = lattice.build_max_program(n, direct_layers, backend, extract,
+                                       gamma_batch)
+    elif cost == "cap":
+        fn = lattice.build_cap_program(n, direct_layers, backend, extract,
+                                       gamma_batch)
+        args.append(jax.ShapeDtypeStruct((), jnp.float64))
+    else:
+        raise ValueError(f"unknown fused cost {cost!r}")
+    exe = jax.jit(fn).lower(*args).compile()
     _EXEC_CACHE[key] = exe
     return exe
+
+
+def candidate_bucket(n: int) -> int:
+    """The canonical candidate-table width for lattice size ``n``.
+
+    Candidate tables are always padded to this single per-``n`` bucket
+    (``2^n - n - 1`` distinct |S| >= 2 cardinalities at most, rounded up
+    to a power of two).  Padding costs a trivially larger (B, C) gather
+    buffer — the layered DP's work is independent of C — and buys the
+    serving tier a *closed* executable space keyed by (n, B_bucket)
+    alone: ``prewarm`` can compile every bucket a configured server will
+    ever hit, so no arrival pattern can run into a cold candidate
+    bucket (the p99 spike serve_bench's cold-latency row measures).
+    """
+    return _next_pow2(max((1 << n) - n - 1, 1))
+
+
+def prewarm(ns, max_batch: int = 16, backend: str = "xla",
+            direct_layers: int = 4, costs=("max",), gamma_batch: int = 1,
+            extract: bool = True) -> dict:
+    """Compile the executable buckets a server configured for ``ns`` can
+    hit, before traffic arrives: for each ``n``, every power-of-two
+    batch bucket up to ``max_batch`` (including the chunk-1 tier) at the
+    canonical candidate bucket.  Returns ``{"compiled": k, "seconds":
+    s}``; already-cached buckets are free.
+    """
+    t0 = time.perf_counter()
+    before = _STATS.exec_cache_misses
+    for n in ns:
+        b = 1
+        while b <= max_batch:
+            for cost in costs:
+                get_executable(n, b, candidate_bucket(n), backend,
+                               direct_layers, extract, cost, gamma_batch)
+            b *= 2
+    compiled = _STATS.exec_cache_misses - before
+    _STATS.prewarmed += compiled
+    return {"compiled": compiled,
+            "seconds": time.perf_counter() - t0}
 
 
 # -------------------------------------------------------------- entry point
@@ -267,56 +206,124 @@ def candidate_table(card: np.ndarray, n: int) -> np.ndarray:
     return cand[cand >= card[size - 1]]
 
 
+def _pad_candidates(cards: np.ndarray, n: int):
+    """Pad B candidate tables into the (B_bucket, candidate_bucket(n))
+    buffer: rows repeat their last (always-feasible) candidate so
+    per-row brackets never leave the real range; padded batch rows
+    replay query 0 with a collapsed bracket.  The candidate axis always
+    uses the single canonical per-``n`` bucket — see
+    ``candidate_bucket`` for why."""
+    B = cards.shape[0]
+    cands = [candidate_table(cards[b], n) for b in range(B)]
+    Bp = _next_pow2(B)
+    C = candidate_bucket(n)
+    cand_pad = np.ones((Bp, C), np.float64)
+    hi0 = np.zeros(Bp, np.int32)
+    for b, c in enumerate(cands):
+        cand_pad[b, :len(c)] = c
+        cand_pad[b, len(c):] = c[-1]
+        hi0[b] = len(c) - 1
+    cards_pad = cards
+    if Bp != B:
+        cards_pad = np.concatenate(
+            [cards, np.repeat(cards[:1], Bp - B, axis=0)], axis=0)
+    return cards_pad, cand_pad, hi0, Bp, C
+
+
+def _trees_from_arrays(nodes: np.ndarray, lidx: np.ndarray,
+                       B: int) -> list:
+    """Assemble JoinTree objects from the device split arrays — a linear
+    pass, no submask search, no recursion."""
+    return [jointree.tree_from_split_arrays(nodes[b], lidx[b])
+            for b in range(B)]
+
+
 def fused_dpconv_max(cards: np.ndarray, n: int, direct_layers: int = 4,
-                     extract_tree: bool = True,
-                     backend: str = "xla") -> FusedSolve:
+                     extract_tree: bool = True, backend: str = "xla",
+                     gamma_batch: int = 1) -> FusedSolve:
     """Solve B same-``n`` DPconv[max] instances in ONE device dispatch.
 
-    ``cards`` is (B, 2^n).  Optima (and trees) are bit-identical to B
-    host-loop ``dpconv_max`` calls; the B binary searches advance in
-    lockstep inside the compiled while loop.
+    ``cards`` is (B, 2^n).  Optima and trees are bit-identical to B
+    host-loop ``dpconv_max`` calls; the B searches advance in lockstep
+    inside the compiled while loop.  ``gamma_batch = G > 1`` probes G
+    thresholds per round on a leading gate axis — (G+1)-ary search,
+    ~log_{G+1} instead of ~log_2 rounds, still one dispatch and the same
+    optima/trees.
     """
     cards = np.asarray(cards, np.float64)
     if cards.ndim == 1:
         cards = cards[None, :]
     B, size = cards.shape
     assert size == 1 << n and n >= 2
-    cands = [candidate_table(cards[b], n) for b in range(B)]
+    assert gamma_batch >= 1
+    cards_pad, cand_pad, hi0, Bp, C = _pad_candidates(cards, n)
 
-    Bp = _next_pow2(B)
-    C = _next_pow2(max(len(c) for c in cands))
-    cand_pad = np.ones((Bp, C), np.float64)
-    hi0 = np.zeros(Bp, np.int32)
-    for b, c in enumerate(cands):
-        cand_pad[b, :len(c)] = c
-        cand_pad[b, len(c):] = c[-1]     # repeat: bracket never leaves row
-        hi0[b] = len(c) - 1
-    cards_pad = cards
-    if Bp != B:                          # pad rows replay query 0
-        cards_pad = np.concatenate(
-            [cards, np.repeat(cards[:1], Bp - B, axis=0)], axis=0)
-
-    exe = get_executable(n, Bp, C, backend, direct_layers, extract_tree)
+    exe = get_executable(n, Bp, C, backend, direct_layers, extract_tree,
+                         "max", gamma_batch)
     disp0 = _STATS.dispatches
+    rec0 = jointree.recursive_extractions()
     out = _run(exe, jnp.asarray(cards_pad), jnp.asarray(cand_pad),
                jnp.asarray(hi0))
+    trees: list = [None] * B
+    dpn = None
     if extract_tree:
-        opt, dp, rounds = out
-        dpn = np.asarray(dp, np.float64)
+        opt, dp, nodes, lidx, rounds = out
+        dpn = np.asarray(dp, np.float64)[:B]
+        trees = _trees_from_arrays(np.asarray(nodes), np.asarray(lidx), B)
     else:
         opt, rounds = out
-        dpn = None
     opt = np.asarray(opt, np.float64)[:B]
     rounds = int(rounds)
 
-    trees: list = [None] * B
-    if extract_tree:
-        trees = [jointree.extract_tree_feasibility(dpn[b], cards[b], n)
-                 for b in range(B)]
+    # the "zero per-solve host recursions" invariant: tree assembly must
+    # not have fallen back to the recursive Alg. 2 extractors
+    _STATS.host_extractions += jointree.recursive_extractions() - rec0
     _STATS.solves += 1
     _STATS.queries += B
     _STATS.rounds += rounds
     return FusedSolve(optima=opt, trees=trees, rounds=rounds,
                       passes=rounds + (1 if extract_tree else 0),
                       dispatches=_STATS.dispatches - disp0,
-                      dp=dpn[:B] if dpn is not None else None)
+                      dp=dpn, extraction="device")
+
+
+def fused_ccap(cards: np.ndarray, n: int, gamma_slack: float = 1.0,
+               direct_layers: int = 4, extract_tree: bool = True,
+               backend: str = "xla",
+               gamma_batch: int = 1) -> FusedCapSolve:
+    """Solve B same-``n`` C_cap instances (Sec. 8) in ONE device
+    dispatch: pass-1 gamma search, gamma-pruned (min,+) C_out pass, and
+    witness-tree extraction all inside the same program.
+
+    Caps, C_out values and trees are bit-identical to the host pipeline
+    (``dpconv_max`` pass 1 + ``baselines.dpsub(mode="out",
+    prune_gamma=gamma)`` + ``extract_tree_out``).
+    """
+    cards = np.asarray(cards, np.float64)
+    if cards.ndim == 1:
+        cards = cards[None, :]
+    B, size = cards.shape
+    assert size == 1 << n and n >= 2
+    cards_pad, cand_pad, hi0, Bp, C = _pad_candidates(cards, n)
+
+    exe = get_executable(n, Bp, C, backend, direct_layers, extract_tree,
+                         "cap", gamma_batch)
+    disp0 = _STATS.dispatches
+    rec0 = jointree.recursive_extractions()
+    out = _run(exe, jnp.asarray(cards_pad), jnp.asarray(cand_pad),
+               jnp.asarray(hi0), jnp.float64(gamma_slack))
+    trees = [None] * B
+    if extract_tree:
+        gamma, cout, nodes, lidx, rounds = out
+        trees = _trees_from_arrays(np.asarray(nodes), np.asarray(lidx), B)
+    else:
+        gamma, cout, rounds = out
+    _STATS.host_extractions += jointree.recursive_extractions() - rec0
+    _STATS.solves += 1
+    _STATS.queries += B
+    _STATS.rounds += int(rounds)
+    return FusedCapSolve(gammas=np.asarray(gamma, np.float64)[:B],
+                         couts=np.asarray(cout, np.float64)[:B],
+                         trees=trees, rounds=int(rounds),
+                         dispatches=_STATS.dispatches - disp0,
+                         extraction="device")

@@ -78,9 +78,50 @@ def _submask_iter(s: int):
         t = (t - 1) & s
 
 
+# Count of host-side recursive extractions (Alg. 2 with per-node submask
+# search).  The fused engine snapshots this around its tree assembly to
+# prove its "zero per-solve host recursions" invariant
+# (engine.stats().host_extractions) — ``tree_from_split_arrays`` does
+# not count, it only replays device-found splits.
+_RECURSIVE_EXTRACTIONS = 0
+
+
+def recursive_extractions() -> int:
+    return _RECURSIVE_EXTRACTIONS
+
+
+def _count_recursive_extraction() -> None:
+    global _RECURSIVE_EXTRACTIONS
+    _RECURSIVE_EXTRACTIONS += 1
+
+
+def tree_from_split_arrays(nodes: np.ndarray,
+                           lidx: np.ndarray) -> JoinTree:
+    """Assemble a JoinTree from the on-device extraction scan's split
+    arrays (``lattice.extract_scan``): ``nodes[r]`` is slot r's set mask
+    (0 = unused slot), ``lidx[r]`` its left-child slot (0 = leaf).
+
+    A single reverse linear pass — children always live at higher slot
+    indices than their parent — so the host does no submask search and
+    no recursion: Alg. 2 already ran on device.
+    """
+    M = len(nodes)
+    built: list = [None] * M
+    for r in range(M - 1, -1, -1):
+        m = int(nodes[r])
+        if m == 0:
+            continue
+        li = int(lidx[r])
+        built[r] = JoinTree(m) if li == 0 else \
+            JoinTree(m, built[li], built[li + 1])
+    return built[0]
+
+
 def extract_tree_feasibility(dp: np.ndarray, card: np.ndarray,
                              n: int) -> JoinTree:
     """Alg. 2 for the C_max feasibility table (dp ∈ {0,1})."""
+    _count_recursive_extraction()
+
     def build(s: int) -> JoinTree:
         if popcount_int(s) == 1:
             return JoinTree(s)
@@ -96,6 +137,8 @@ def extract_tree_feasibility(dp: np.ndarray, card: np.ndarray,
 def extract_tree_out(dp: np.ndarray, card: np.ndarray, n: int,
                      tol: float = 1e-6) -> JoinTree:
     """Alg. 2 for a C_out value table: DP[S] = c(S) + DP[T] + DP[S\\T]."""
+    _count_recursive_extraction()
+
     def build(s: int) -> JoinTree:
         if popcount_int(s) == 1:
             return JoinTree(s)
@@ -113,6 +156,8 @@ def extract_tree_out(dp: np.ndarray, card: np.ndarray, n: int,
 
 def extract_tree_max(dp: np.ndarray, card: np.ndarray, n: int) -> JoinTree:
     """Alg. 2 for a C_max value table: DP[S] = max(c(S), DP[T], DP[S\\T])."""
+    _count_recursive_extraction()
+
     def build(s: int) -> JoinTree:
         if popcount_int(s) == 1:
             return JoinTree(s)

@@ -1,0 +1,495 @@
+"""The lattice-program layer: ONE implementation of the paper's layered
+DP skeleton (Alg. 1), instantiated per cost function.
+
+Before this module the repo had drifted into per-cost forks of the same
+recursion: ``layered.py`` (host-loop feasibility reference),
+``engine.py`` (fused scan-form feasibility), the ``gamma_batch`` probe
+loop in ``dpconv_max.py``, and ``service.batch.pallas_dp_fn`` each
+re-stated the layered recursion with small local differences.  This
+module states it once, parameterized along four orthogonal axes:
+
+========== =================================================================
+axis        instances
+========== =================================================================
+semiring    *feasibility* — {0,1} counting in (+,·), thresholded per layer
+            (Kosaraju's trick, Sec. 6): ``feasibility_layers``;
+            *value* — (min,+) over f64 with a gamma gate (DPsub[out]'s
+            recursion as a dense layer program): ``minplus_value_layers``
+transforms  XLA f64 butterflies (exact counts to n = 26) or the batched
+            Pallas int32 kernels (exact to n = 15) — ``transforms()``;
+            optionally a fused ranked-convolution kernel
+probe       binary search (G = 1) or (G+1)-ary ``gamma_batch`` probing —
+            G gates ride a leading axis through the same layer program,
+            shrinking rounds from ~log2 C to ~log_{G+1} C
+extraction  Alg. 2 as an on-device masked scan over tree slots
+            (``extract_scan``) — no host recursion, the host only
+            assembles ``JoinTree`` objects from the returned split arrays
+========== =================================================================
+
+The layered recursion itself (direct small layers, ranked-convolution
+middle layers, Moebius-at-V shortcut or full final butterfly) has exactly
+one implementation, ``feasibility_layers``, which runs either *unrolled*
+(the host-loop / jit-per-pass reference: ``layered.py`` is now a thin
+wrapper) or *scan-form* (``lax.fori_loop`` body with masked convolution
+slots, carried ranked-zeta buffer: the fused engine's mode).
+
+``build_max_program`` / ``build_cap_program`` compose the axes into
+whole-solve programs — one ``lax.while_loop`` dispatch per batched solve —
+that ``repro.core.engine`` AOT-compiles and caches.  Exactness notes sit
+next to each piece; every instantiation is bit-identical to its host
+reference (asserted by tests/test_lattice_parity.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.bitset import layer_indices, popcounts, submask_table
+
+BACKENDS = ("xla", "pallas")
+
+
+# ------------------------------------------------------------- transforms
+@dataclasses.dataclass(frozen=True)
+class Transforms:
+    """The transform backend of a lattice program: zeta/Moebius pair, the
+    DP dtype they are exact in, and (optionally) a fused ranked-conv
+    kernel for the unrolled static-``k`` path."""
+    name: str
+    zeta: callable
+    mobius: callable
+    dtype: object
+    ranked_conv: "callable | None" = None   # static-k fused kernel
+
+    def __hash__(self):                      # jit static-arg friendly
+        return hash((self.name, self.zeta, self.mobius))
+
+    def __eq__(self, other):
+        return (isinstance(other, Transforms)
+                and (self.name, self.zeta, self.mobius)
+                == (other.name, other.zeta, other.mobius))
+
+
+def transforms(backend: str) -> Transforms:
+    """The two shipped transform tiers (DESIGN.md §Hardware-adaptation)."""
+    if backend == "xla":
+        from repro.core.zeta import mobius, zeta
+        return Transforms("xla", zeta, mobius, jnp.float64)
+    if backend == "pallas":
+        # int32 counting tier: exact while counts < 2^31 (n <= 15),
+        # enforced by the caller (BatchPolicy.pallas_max_n)
+        from repro.kernels.ops import (mobius_batch_op, ranked_conv_op,
+                                       zeta_batch_op)
+        return Transforms("pallas", zeta_batch_op, mobius_batch_op,
+                          jnp.int32, ranked_conv=ranked_conv_op)
+    raise ValueError(f"unknown lattice backend {backend!r}")
+
+
+# ------------------------------------------------- static gather tables
+@functools.lru_cache(maxsize=128)
+def direct_layer_indices(n: int, k: int):
+    """Static gather tables for direct evaluation of layer k.
+
+    Returns (sets, subs, comps): sets (m,) int64 masks with |S| = k;
+    subs/comps (m, 2^k) submask / complement-in-S tables.  Shared by the
+    feasibility direct layers AND the (min,+) value layers — the rows
+    T = 0 / T = S are neutralized by dp[∅] (0 for counting, +inf for
+    min-plus), so one table serves both semirings.
+    """
+    sets = layer_indices(n)[k]
+    subs = submask_table(sets, k).T          # (m, 2^k)
+    comps = sets[:, None] & ~subs
+    # NB: keep these as numpy — jnp constants created inside a jit trace
+    # must not be cached across traces (tracer leak).
+    return (sets, subs, comps)
+
+
+# ------------------------------------------------------ layer primitives
+def direct_layer_full(dp, gate, n: int, k: int, pc, dtype):
+    """Layer k by gather-based split enumeration (paper Sec. 6): full
+    (..., 2^n) indicator of gated layer-k sets with a feasible split."""
+    sets, subs, comps = direct_layer_indices(n, k)
+    prod = dp[..., subs] * dp[..., comps]          # (..., m, 2^k)
+    layer_ind = (jnp.sum(prod, axis=-1) > 0.5).astype(dtype)
+    layer_full = jnp.zeros(dp.shape, dtype)
+    layer_full = layer_full.at[..., sets].set(layer_ind) * gate
+    return jnp.where(pc == k, layer_full, jnp.array(0, dtype))
+
+
+def conv_fixed(Z, k: int, ranked_conv=None):
+    """Symmetry-halved ranked convolution at a *static* layer k:
+    conv_k = Σ_{d=1..k-1} Z[d] Z[k-d] = 2 Σ_{d<k/2} Z[d] Z[k-d]
+    (+ Z[k/2]^2 if k even).  ``ranked_conv`` optionally routes to a fused
+    kernel (one HBM read of the ranked table instead of k)."""
+    if ranked_conv is not None:
+        return ranked_conv(Z, k)
+    acc = jnp.zeros_like(Z[0])
+    for d in range(1, (k - 1) // 2 + 1):
+        acc = acc + Z[d] * Z[k - d]
+    acc = acc + acc        # *2, without promoting int32 to f64
+    if k % 2 == 0:
+        acc = acc + Z[k // 2] * Z[k // 2]
+    return acc
+
+
+def conv_masked(Z, k, n: int, dtype):
+    """The same convolution for a *traced* k (scan-form middle layers):
+    slots with d > k-d carry stale previous-round values and are masked
+    by w = 0, trading arithmetic for uniformity (DESIGN.md
+    §Hardware-adaptation)."""
+    D = max(n // 2, 1)             # symmetry-halved convolution slots
+    d = jnp.arange(1, D + 1)
+    w = jnp.where(d < k - d, 2, jnp.where(d == k - d, 1, 0))
+    Zhi = Z[jnp.clip(k - d, 1, n)]
+    wb = w.astype(dtype).reshape((D,) + (1,) * (Z.ndim - 1))
+    return jnp.sum(wb * Z[1:D + 1] * Zhi, axis=0)
+
+
+def moebius_at_v(acc, pc, n: int):
+    """Moebius transform evaluated at the single point V: the signed
+    O(2^n) sum Σ_T (-1)^{n-|T|} conv[T].  Signed partial sums exceed the
+    count bound, so reduce in f64 regardless of the DP dtype."""
+    sign = jnp.where((n - pc) % 2 == 0, 1.0, -1.0)
+    return jnp.sum(acc.astype(jnp.float64) * sign, axis=-1)
+
+
+# --------------------------------------------- the feasibility recursion
+def feasibility_layers(gate, n: int, direct_layers: int = 4,
+                       tfm: "Transforms | None" = None,
+                       final_shortcut: bool = True,
+                       Z=None, scan_middle: bool = False):
+    """One full layered feasibility DP under ``gate`` — THE layered
+    recursion (paper Sec. 5 + 6), shared by every solver in the repo.
+
+    Returns ``(dp, Z, feas)``: the accumulated feasibility table, the
+    ranked-zeta buffer, and the boolean feasibility of the full set V.
+    With ``final_shortcut`` the final layer is evaluated only at V
+    (Moebius-at-V) and ``dp`` carries no layer-n entries; otherwise the
+    full final butterfly runs (the tree-extraction table).
+
+    ``gate`` may carry any leading batch axes (..., 2^n): the serving
+    batch axis, and the gamma-probe axis of (G+1)-ary search, both ride
+    in front and every lattice op broadcasts.
+
+    ``Z`` — pass the carried ``(n+1, ..., 2^n)`` ranked-zeta buffer to
+    reuse it across rounds (the fused while-loop donates it); slot Z[1]
+    (the singleton transform, round-invariant) must already be set and is
+    never rewritten.  ``Z=None`` allocates fresh.
+
+    ``scan_middle`` selects the middle-layer form: unrolled static-``k``
+    layers (the host/jit-per-pass reference) or a ``lax.fori_loop`` with
+    masked convolution slots (the fused engine; the final layer is then
+    always convolution-form).  Both are exact — every intermediate is an
+    exact {0,1} count in the transform dtype — so results are
+    bit-identical across forms.
+    """
+    tfm = tfm or transforms("xla")
+    size = 1 << n
+    pc = jnp.asarray(popcounts(n), dtype=jnp.int32)
+    dtype = tfm.dtype
+    batch = gate.shape[:-1]
+    zero = jnp.array(0, dtype)
+
+    singles = jnp.broadcast_to((pc == 1).astype(dtype), batch + (size,))
+    dp = jnp.zeros(batch + (size,), dtype) + singles
+    if Z is None:
+        Z = jnp.zeros((n + 1,) + batch + (size,), dtype)
+        Z = Z.at[1].set(tfm.zeta(singles))
+
+    dl = min(direct_layers, n - 1) if scan_middle else min(direct_layers, n)
+    for k in range(2, dl + 1):                 # direct small layers
+        layer_full = direct_layer_full(dp, gate, n, k, pc, dtype)
+        dp = dp + layer_full
+        if k < n:
+            Z = Z.at[k].set(tfm.zeta(layer_full))
+    if dl >= n:                                # all-direct (host, small n)
+        return dp, Z, dp[..., -1] > 0.5
+
+    if scan_middle:
+        def layer_body(k, carry):              # middle layers, scan-form
+            dp, Z = carry
+            h = tfm.mobius(conv_masked(Z, k, n, dtype))
+            layer_full = jnp.where(
+                pc == k, (h > 0.5).astype(dtype) * gate, zero)
+            dp = dp + layer_full
+            Z = lax.dynamic_update_index_in_dim(
+                Z, tfm.zeta(layer_full), k, 0)
+            return dp, Z
+
+        first_conv = max(dl + 1, 2)   # layers start at 2: slot Z[1]
+        if first_conv < n:            # holds the singleton transform
+            dp, Z = lax.fori_loop(first_conv, n, layer_body, (dp, Z))
+        acc = conv_masked(Z, n, n, dtype)
+    else:
+        for k in range(max(dl + 1, 2), n):     # middle layers, unrolled
+            h = tfm.mobius(conv_fixed(Z, k, tfm.ranked_conv))
+            layer_full = jnp.where(
+                pc == k, (h > 0.5).astype(dtype) * gate, zero)
+            dp = dp + layer_full
+            Z = Z.at[k].set(tfm.zeta(layer_full))
+        acc = conv_fixed(Z, n, tfm.ranked_conv)
+
+    if final_shortcut:
+        count_v = moebius_at_v(acc, pc, n)
+        feas = (count_v > 0.5) & (gate[..., -1] > zero)
+        return dp, Z, feas
+    h = tfm.mobius(acc)
+    layer_full = jnp.where(pc == n, (h > 0.5).astype(dtype) * gate, zero)
+    dp = dp + layer_full
+    return dp, Z, dp[..., -1] > 0.5
+
+
+# ------------------------------------------------- the (min,+) semiring
+def minplus_value_layers(card, gate_ok, n: int):
+    """DPsub[out]'s recursion as a dense layer program — the C_cap
+    pass-2 instantiation of the lattice skeleton.
+
+    ``dp[S] = c(S) + min_T (dp[T] + dp[S\\T])`` for gated sets
+    (``gate_ok``: c(S) <= gamma), +inf otherwise; singletons cost 0.
+    There is no FSC shortcut in the (min,+) semiring (that hardness is
+    the paper's point), so every layer runs the direct gather-table
+    enumeration — the textbook O(3^n) operation count re-blocked into
+    dense vector lanes, on device, batched, inside the same single
+    dispatch as pass 1.  Bit-identical to ``baselines.dpsub(mode="out",
+    prune_gamma=gamma)``: min is order-independent and the add
+    association matches.
+
+    ``card`` (..., 2^n) f64; ``gate_ok`` boolean, same shape.
+    """
+    pc = jnp.asarray(popcounts(n), dtype=jnp.int32)
+    inf = jnp.array(np.inf, jnp.float64)
+    dp = jnp.broadcast_to(
+        jnp.where(pc == 1, 0.0, inf), card.shape).astype(jnp.float64)
+    for k in range(2, n + 1):
+        sets, subs, comps = direct_layer_indices(n, k)
+        combo = dp[..., subs] + dp[..., comps]     # (..., m, 2^k)
+        best = jnp.min(combo, axis=-1)
+        val = best + card[..., sets]
+        val = jnp.where(gate_ok[..., sets], val, inf)
+        dp = dp.at[..., sets].set(val)
+    return dp
+
+
+# ------------------------------------------------------ probe strategies
+def probe_pivots(lo, hi, G: int):
+    """(G,) interior pivots per query splitting [lo, hi] into G+1 parts:
+    p_g = lo + (hi-lo)(g+1)/(G+1), all in [lo, hi-1] — every probe makes
+    progress.  G = 1 reduces to the binary-search pivot (lo+hi)//2
+    exactly, so the fused G = 1 path stays bit-aligned with the host
+    loop's pivot sequence."""
+    g = jnp.arange(1, G + 1, dtype=lo.dtype)
+    return lo[None, :] + ((hi - lo)[None, :] * g[:, None]) // (G + 1)
+
+
+def bracket_update(lo, hi, piv, ok, active):
+    """Monotone (G+1)-ary bracket update: feasibility is monotone in
+    gamma, so ``ok`` along the probe axis is [F..F, T..T]; the bracket
+    collapses onto [largest infeasible + 1, smallest feasible]."""
+    G = piv.shape[0]
+    ntrue = jnp.sum(ok.astype(jnp.int32), axis=0)          # (B,)
+    any_ok = ntrue > 0
+    any_bad = ntrue < G
+    first_ok = jnp.clip(G - ntrue, 0, G - 1)
+    last_bad = jnp.clip(G - ntrue - 1, 0, G - 1)
+    piv_ok = jnp.take_along_axis(piv, first_ok[None, :], axis=0)[0]
+    piv_bad = jnp.take_along_axis(piv, last_bad[None, :], axis=0)[0]
+    hi = jnp.where(active & any_ok, piv_ok, hi)
+    lo = jnp.where(active & any_bad, piv_bad + 1, lo)
+    return lo, hi
+
+
+# ------------------------------------------- on-device tree extraction
+def extract_scan(dp, n: int, card=None):
+    """Alg. 2 as a masked scan over tree slots — fully on device.
+
+    The join tree over n relations has at most ``M = 2n-1`` nodes.  The
+    scan walks a breadth-first slot array: slot r holds a set mask; an
+    internal slot finds its witness split by one dense O(2^n) pass over
+    all candidate submasks (valid-submask masking + argmin), writes its
+    two children at the write head, and records the child slot index.
+    Total O(2^n n) per query — Alg. 2's bound, with the per-node submask
+    *enumeration* replaced by a full-lattice masked reduction (the same
+    uniformity trade the rest of the engine makes).
+
+    Witness rule — matched to the host extractors for bit-identical
+    trees: the *largest* T minimizing the witness error, because the
+    host's descending ``_submask_iter`` keeps the first (= largest)
+    strict minimum.  ``card=None`` reads ``dp`` as a feasibility table
+    (error 0 iff both sides feasible); with ``card`` it reads ``dp`` as
+    a C_out value table (error |dp[T] + dp[S\\T] - (dp[S] - c(S))|).
+
+    Returns ``(nodes, lidx)``: (B, M) int32 — slot masks and left-child
+    slot indices (0 for leaves).  ``jointree.tree_from_split_arrays``
+    assembles JoinTree objects from them without any host search.
+    """
+    B, size = dp.shape
+    M = 2 * n - 1
+    pc = jnp.asarray(popcounts(n), dtype=jnp.int32)
+    T = jnp.arange(size, dtype=jnp.int32)
+    ar = jnp.arange(B)
+
+    def body(r, carry):
+        nodes, lidx, w = carry
+        S = nodes[:, r]                                    # (B,)
+        internal = pc[S] >= 2
+        valid = (((T[None, :] & ~S[:, None]) == 0)
+                 & (T[None, :] != 0) & (T[None, :] != S[:, None]))
+        comp = S[:, None] & ~T[None, :]
+        dpC = jnp.take_along_axis(dp, comp, axis=1)
+        if card is None:
+            err = 1.0 - ((dp > 0.5) & (dpC > 0.5)).astype(jnp.float64)
+        else:
+            target = (jnp.take_along_axis(dp, S[:, None], axis=1)
+                      - jnp.take_along_axis(card, S[:, None], axis=1))
+            err = jnp.abs(dp + dpC - target)
+        err = jnp.where(valid, err, jnp.inf)
+        # largest T among the minima: argmin over the reversed axis
+        twit = (size - 1 - jnp.argmin(err[:, ::-1], axis=1)) \
+            .astype(jnp.int32)
+        wc = jnp.minimum(w, M - 2)        # leaf slots don't advance w
+        left = jnp.where(internal, twit, nodes[ar, wc])
+        right = jnp.where(internal, S & ~twit, nodes[ar, wc + 1])
+        nodes = nodes.at[ar, wc].set(left)
+        nodes = nodes.at[ar, wc + 1].set(right)
+        lidx = lidx.at[:, r].set(jnp.where(internal, wc, 0))
+        w = w + 2 * internal.astype(jnp.int32)
+        return nodes, lidx, w
+
+    nodes0 = jnp.zeros((B, M), jnp.int32).at[:, 0].set(size - 1)
+    lidx0 = jnp.zeros((B, M), jnp.int32)
+    w0 = jnp.ones((B,), jnp.int32)
+    nodes, lidx, _ = lax.fori_loop(0, M, body, (nodes0, lidx0, w0))
+    return nodes, lidx
+
+
+# --------------------------------------------- whole-solve programs
+def _search_state(cards, n: int, tfm: Transforms, G: int):
+    """Initial (B,)-lockstep search state; the ranked-zeta buffer grows a
+    leading probe axis for G > 1 (G gates per round, one dispatch)."""
+    size = 1 << n
+    pc = jnp.asarray(popcounts(n), dtype=jnp.int32)
+    B = cards.shape[0]
+    batch = (B,) if G == 1 else (G, B)
+    singles = jnp.broadcast_to((pc == 1).astype(tfm.dtype),
+                               batch + (size,))
+    Z0 = jnp.zeros((n + 1,) + batch + (size,), tfm.dtype)
+    return Z0.at[1].set(tfm.zeta(singles))
+
+
+def _gate_builder(cards, pc, dtype):
+    def gate_of(gamma):
+        """gate(S) = [c(S) <= gamma] for |S| >= 2; singletons/empty pass.
+        ``gamma`` (B,) or (G, B) — broadcasts to (..., B, 2^n)."""
+        g = (cards <= gamma[..., None]).astype(dtype)
+        return jnp.where(pc >= 2, g, jnp.array(1, dtype))
+    return gate_of
+
+
+def _fused_search(cards, cand, hi0, n, direct_layers, tfm, G, gate_of):
+    """The whole-solve lockstep (G+1)-ary search: ONE while_loop whose
+    body builds this round's G gates and runs the layered DP.  Returns
+    (hi, Z, rounds) with the invariant cand[hi] feasible."""
+    dl = min(direct_layers, n - 1)
+    Z0 = _search_state(cards, n, tfm, G)
+    lo0 = jnp.zeros_like(hi0)
+
+    def cond(state):
+        lo, hi, _, _ = state
+        return jnp.any(lo < hi)
+
+    def body(state):
+        lo, hi, Z, r = state
+        active = lo < hi
+        if G == 1:
+            mid = jnp.where(active, (lo + hi) // 2, hi)
+            gamma = jnp.take_along_axis(cand, mid[:, None], axis=1)[:, 0]
+            _, Z, ok = feasibility_layers(gate_of(gamma), n, dl, tfm,
+                                          True, Z=Z, scan_middle=True)
+            hi = jnp.where(active & ok, mid, hi)
+            lo = jnp.where(active & ~ok, mid + 1, lo)
+        else:
+            piv = probe_pivots(lo, hi, G)                  # (G, B)
+            piv = jnp.where(active[None, :], piv, hi[None, :])
+            gamma = jnp.take_along_axis(cand, piv.T, axis=1).T
+            _, Z, ok = feasibility_layers(gate_of(gamma), n, dl, tfm,
+                                          True, Z=Z, scan_middle=True)
+            lo, hi = bracket_update(lo, hi, piv, ok, active)
+        return lo, hi, Z, r + 1
+
+    lo, hi, Z, rounds = lax.while_loop(
+        cond, body, (lo0, hi0, Z0, jnp.int32(0)))
+    return hi, Z, rounds
+
+
+def build_max_program(n: int, direct_layers: int, backend: str,
+                      extract: bool, gamma_batch: int = 1):
+    """The whole-solve DPconv[max] program:
+    ``(cards, cand, hi0) -> (opt[, dp, nodes, lidx], rounds)``.
+
+    Shapes bind at compile time: cards (B, 2^n) f64, cand (B, C) f64,
+    hi0 (B,) int32.  Search, gate construction, layered DP, the
+    extraction table AND the Alg. 2 split scan all run on device; the
+    only host transfer is the result tuple.
+    """
+    pc_np = popcounts(n)
+    tfm = transforms(backend)
+    dl = min(direct_layers, n - 1)
+    G = gamma_batch
+
+    def fn(cards, cand, hi0):
+        pc = jnp.asarray(pc_np, dtype=jnp.int32)
+        gate_of = _gate_builder(cards, pc, tfm.dtype)
+        hi, Z, rounds = _fused_search(cards, cand, hi0, n, direct_layers,
+                                      tfm, G, gate_of)
+        opt = jnp.take_along_axis(cand, hi[:, None], axis=1)[:, 0]
+        if not extract:
+            return opt, rounds
+        # extraction pass: full final layer at the optimum's gate.  For
+        # G > 1 the probe axis is dropped — slice 0 of the carried buffer
+        # keeps the (round-invariant) singleton transform in slot 1, and
+        # every slot >= 2 is rewritten before the recursion reads it.
+        Zx = Z if G == 1 else Z[:, 0]
+        dp, _, _ = feasibility_layers(gate_of(opt), n, dl, tfm, False,
+                                      Z=Zx, scan_middle=True)
+        dpf = dp.astype(jnp.float64)
+        nodes, lidx = extract_scan(dpf, n)
+        return opt, dpf, nodes, lidx, rounds
+
+    return fn
+
+
+def build_cap_program(n: int, direct_layers: int, backend: str,
+                      extract: bool, gamma_batch: int = 1):
+    """The whole-solve C_cap program (paper Sec. 8, both passes fused):
+    ``(cards, cand, hi0, slack) -> (gamma, cout[, nodes, lidx], rounds)``.
+
+    Pass 1 is the same lockstep feasibility search as DPconv[max]
+    (gamma* = optimal C_max); pass 2 runs the (min,+) value program under
+    the gamma-slack gate; pass 3 extracts the C_out witness tree — all
+    inside one dispatch.  ``slack`` is the Sec. 11 resource-aware knob
+    (gamma = slack · gamma*).
+    """
+    pc_np = popcounts(n)
+    tfm = transforms(backend)
+    G = gamma_batch
+
+    def fn(cards, cand, hi0, slack):
+        pc = jnp.asarray(pc_np, dtype=jnp.int32)
+        gate_of = _gate_builder(cards, pc, tfm.dtype)
+        hi, _, rounds = _fused_search(cards, cand, hi0, n, direct_layers,
+                                      tfm, G, gate_of)
+        gamma = jnp.take_along_axis(cand, hi[:, None], axis=1)[:, 0]
+        gamma = gamma * slack
+        gate_ok = (cards <= gamma[:, None]) | (pc < 2)
+        dpv = minplus_value_layers(cards, gate_ok, n)
+        cout = dpv[..., -1]
+        if not extract:
+            return gamma, cout, rounds
+        nodes, lidx = extract_scan(dpv, n, card=cards)
+        return gamma, cout, nodes, lidx, rounds
+
+    return fn

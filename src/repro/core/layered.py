@@ -1,4 +1,4 @@
-"""Layered dynamic programming (paper Sec. 5).
+"""Layered dynamic programming (paper Sec. 5) — host-loop instantiation.
 
 FSC inside a DP recursion contains redundancy; the paper shaves an O(n)
 factor with two observations:
@@ -7,63 +7,33 @@ factor with two observations:
 (★★) DP values for |S| < k never change after layer |S| — their zeta
      transforms can be computed once and cached.
 
-This module implements the *counting / feasibility* instantiation of the
-layered engine — the inner loop of DPconv[max] (Alg. 3): all values are
-{0, 1} indicators, convolved in the (+,·) ring, thresholded back to
-indicators after every layer.  Exactness: with {0,1} layer inputs, every
-intermediate count is <= 2^{2n} < 2^53, exact in float64 up to n = 26.
+The recursion itself now lives in ``repro.core.lattice``
+(``feasibility_layers``): direct small layers, ranked convolution with
+symmetry halving, the Moebius-at-V final-layer shortcut — stated once
+and shared with the fused whole-solve engine (``repro.core.engine``),
+which runs the identical recursion in scan form inside a
+``lax.while_loop``.  This module is the *per-pass, host-synced*
+instantiation: one call = one device dispatch, which is what the
+host-loop solvers, the ``dp_fn`` experiment hooks and the parity oracles
+want.  Results are bit-identical across forms — every intermediate is an
+exact {0,1} count (float64 exact to n = 26, int32 to n = 15).
 
-Implemented optimizations from the paper:
-  - layer-wise cached zeta transforms        (Sec. 5.1)
-  - layer-wise ranked convolution            (Sec. 5.2)
-  - symmetry halving  (f = g = DP)           (Sec. 5.2)
-  - small-layer direct evaluation            (Sec. 6, constant factor)
-  - final-layer shortcut: at k = n only DP(V) is needed, and the Moebius
-    transform evaluated at the single point V is a signed O(2^n) sum —
-    cheaper than a full butterfly.  (beyond-paper, documented in §Perf)
-
-Sec. 5.3 ("avoiding useless multiplications", |S| < max(d, k-d) pruning) is
-a sparse-iteration optimization that does not translate to dense vector
-lanes; see DESIGN.md §Hardware-adaptation.
-
-This module is the per-pass building block: one call = one device
-dispatch.  The serving hot path does not call it per round anymore —
-``repro.core.engine`` re-expresses the same recursion in scan form inside
-a whole-solve ``lax.while_loop`` (bit-identical results, one dispatch per
-batched solve); the functions here remain the host-loop reference, the
-``gamma_batch``/early-exit variants, and the parity oracle for tests.
+Sec. 5.3 ("avoiding useless multiplications", |S| < max(d, k-d) pruning)
+is a sparse-iteration optimization that does not translate to dense
+vector lanes; see DESIGN.md §Hardware-adaptation.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bitset import popcounts, layer_indices, submask_table
+from repro.core import lattice
+from repro.core.bitset import popcounts
 from repro.core.zeta import zeta, mobius
 
-
-# --------------------------------------------------------------------------
-# Direct evaluation of small layers (paper Sec. 6, constant-factor opt).
-# For layer k the FSC path costs O(2^n k) multiplies; direct enumeration
-# costs C(n,k) 2^k — far less for small k.  Index tables are static per
-# (n, k) and reused across jit traces.
-# --------------------------------------------------------------------------
-@functools.lru_cache(maxsize=128)
-def _direct_layer_indices(n: int, k: int):
-    """Static gather tables for direct evaluation of layer k.
-
-    Returns (sets, subs, comps): sets (m,) int64 masks with |S| = k;
-    subs/comps (m, 2^k) submask / complement-in-S tables.
-    """
-    sets = layer_indices(n)[k]
-    subs = submask_table(sets, k).T          # (m, 2^k)
-    comps = sets[:, None] & ~subs
-    # NB: keep these as numpy — jnp constants created inside a jit trace
-    # must not be cached across traces (tracer leak).
-    return (sets, subs, comps)
+# back-compat alias: the gather-table builder moved to the lattice layer
+_direct_layer_indices = lattice.direct_layer_indices
 
 
 def direct_layer_feasible(dp: jnp.ndarray, n: int, k: int) -> jnp.ndarray:
@@ -77,7 +47,7 @@ def direct_layer_feasible(dp: jnp.ndarray, n: int, k: int) -> jnp.ndarray:
 
 
 # --------------------------------------------------------------------------
-# The layered counting DP.
+# The layered counting DP — thin wrapper over the lattice layer.
 # --------------------------------------------------------------------------
 def layered_feasibility_dp(
     gate: jnp.ndarray,
@@ -86,6 +56,7 @@ def layered_feasibility_dp(
     final_layer_shortcut: bool = True,
     zeta_fn=zeta,
     mobius_fn=mobius,
+    ranked_conv_fn=None,
 ) -> jnp.ndarray:
     """Boolean DP over the lattice: a set S (|S| >= 2) is *feasible* iff
     gate[S] and it splits into two disjoint feasible parts.  Singletons are
@@ -98,58 +69,18 @@ def layered_feasibility_dp(
 
     ``zeta_fn`` / ``mobius_fn`` select the transform backend: the default
     XLA butterflies, or the Pallas kernels (``repro.kernels.ops``) for the
-    large-``n`` serving tier.  The DP runs in the gate's dtype — float64
-    for the exact-counting default (counts < 2^{2n} exact to n = 26),
-    int32 for the Pallas butterfly path (exact to n = 15).
+    large-``n`` serving tier; ``ranked_conv_fn`` optionally fuses the
+    middle-layer convolution reads (``ranked_conv_op``).  The DP runs in
+    the gate's dtype — float64 for the exact-counting default (counts <
+    2^{2n} exact to n = 26), int32 for the Pallas butterfly path (exact
+    to n = 15).
     """
-    size = 1 << n
-    pc = jnp.asarray(popcounts(n), dtype=jnp.int32)
-    batch = gate.shape[:-1]
-    dtype = gate.dtype
-
-    dp = jnp.zeros(batch + (size,), dtype)
-    singles = (pc == 1).astype(dtype)
-    dp = dp + singles                        # broadcast over batch
-    # cached ranked zeta transforms: Z[d] = zeta(dp restricted to |S| = d)
-    Z = jnp.zeros((n + 1,) + batch + (size,), dtype)
-    Z = Z.at[1].set(zeta_fn(singles * jnp.ones(batch + (size,), dtype)))
-
-    for k in range(2, n + 1):
-        last = (k == n) and final_layer_shortcut
-        if k <= direct_layers:
-            # direct path: gather-based split enumeration (broadcasts over
-            # any leading batch axes of dp)
-            sets, subs, comps = _direct_layer_indices(n, k)
-            prod = dp[..., subs] * dp[..., comps]     # (..., m, 2^k)
-            layer_ind = (jnp.sum(prod, axis=-1) > 0.5).astype(dtype)
-            layer_full = jnp.zeros(batch + (size,), dtype)
-            layer_full = layer_full.at[..., sets].set(layer_ind)
-            layer_full = layer_full * gate
-            # keep only |S| = k (gate may be dense)
-            layer_full = jnp.where(pc == k, layer_full, jnp.array(0, dtype))
-        else:
-            # ranked convolution, symmetry-halved: conv_k = Σ_{d=1..k-1}
-            # Z[d] Z[k-d] = 2 Σ_{d<k/2} Z[d] Z[k-d] (+ Z[k/2]^2 if k even)
-            acc = jnp.zeros(batch + (size,), dtype)
-            for d in range(1, (k - 1) // 2 + 1):
-                acc = acc + Z[d] * Z[k - d]
-            acc = acc + acc        # *2, without promoting int32 to f64
-            if k % 2 == 0:
-                acc = acc + Z[k // 2] * Z[k // 2]
-            if last:
-                # Moebius at the single point V: Σ_T (-1)^{n-|T|} conv[T]
-                # — a direct signed sum whose partial sums exceed the count
-                # bound, so reduce in f64 regardless of the DP dtype.
-                sign = jnp.where((n - pc) % 2 == 0, 1.0, -1.0)
-                count_v = jnp.sum(acc.astype(jnp.float64) * sign, axis=-1)
-                feas_v = (count_v > 0.5).astype(dtype) * gate[..., -1]
-                return dp.at[..., -1].set(feas_v)
-            h = mobius_fn(acc)
-            layer_full = jnp.where(pc == k, (h > 0.5).astype(dtype) * gate,
-                                   jnp.array(0, dtype))
-        dp = dp + layer_full
-        if k < n:
-            Z = Z.at[k].set(zeta_fn(layer_full))
+    tfm = lattice.Transforms("host", zeta_fn, mobius_fn, gate.dtype,
+                             ranked_conv=ranked_conv_fn)
+    dp, _, feas = lattice.feasibility_layers(
+        gate, n, direct_layers, tfm, final_layer_shortcut)
+    if final_layer_shortcut and direct_layers < n:
+        dp = dp.at[..., -1].set(feas.astype(gate.dtype))
     return dp
 
 
@@ -158,7 +89,7 @@ def layered_feasibility_dp(
 layered_feasibility_dp_jit = jax.jit(
     layered_feasibility_dp,
     static_argnames=("n", "direct_layers", "final_layer_shortcut",
-                     "zeta_fn", "mobius_fn"),
+                     "zeta_fn", "mobius_fn", "ranked_conv_fn"),
 )
 
 
@@ -173,26 +104,14 @@ layered_feasibility_dp_jit = jax.jit(
 # most of the O(2^n n^2) pass.
 # --------------------------------------------------------------------------
 def _one_layer_step(Z, dp, gate, n: int, k: int, direct_layers: int):
-    size = 1 << n
     pc = jnp.asarray(popcounts(n), dtype=jnp.int32)
     dtype = dp.dtype
     if k <= direct_layers:
-        sets, subs, comps = _direct_layer_indices(n, k)
-        prod = dp[..., subs] * dp[..., comps]
-        layer_ind = (jnp.sum(prod, axis=-1) > 0.5).astype(dtype)
-        layer_full = jnp.zeros(dp.shape, dtype)
-        layer_full = layer_full.at[..., sets].set(layer_ind)
-        layer_full = jnp.where(pc == k, layer_full * gate, 0.0)
+        layer_full = lattice.direct_layer_full(dp, gate, n, k, pc, dtype)
     else:
-        acc = jnp.zeros(dp.shape, dtype)
-        for d in range(1, (k - 1) // 2 + 1):
-            acc = acc + Z[d] * Z[k - d]
-        acc = acc * 2.0
-        if k % 2 == 0:
-            acc = acc + Z[k // 2] * Z[k // 2]
+        acc = lattice.conv_fixed(Z, k)
         if k == n:
-            sign = jnp.where((n - pc) % 2 == 0, 1.0, -1.0).astype(dtype)
-            count_v = jnp.sum(acc * sign, axis=-1)
+            count_v = lattice.moebius_at_v(acc, pc, n)
             feas_v = (count_v > 0.5).astype(dtype) * gate[..., -1]
             dp = dp.at[..., -1].set(feas_v)
             return Z, dp, feas_v > 0.5

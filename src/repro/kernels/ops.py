@@ -61,6 +61,11 @@ def mobius_batch_op(f: jnp.ndarray,
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def ranked_conv_op(Z: jnp.ndarray, k: int,
                    interpret: bool | None = None) -> jnp.ndarray:
+    """Fused layer-k ranked convolution of a (n+1, ..., 2^n) ranked zeta
+    table; leading axes are batch dimensions folded into the kernel grid
+    (one launch for the whole stack).  The lattice layer's host-loop
+    instantiation routes its middle-layer convolutions here on the
+    Pallas tier (``lattice.Transforms.ranked_conv``)."""
     if interpret is None:
         interpret = _default_interpret()
     return ranked_conv_pallas(Z, k, interpret=interpret)

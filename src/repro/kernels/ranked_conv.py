@@ -40,15 +40,27 @@ def _ranked_conv_kernel(z_ref, o_ref, *, k: int):
 
 def ranked_conv_pallas(Z: jnp.ndarray, k: int,
                        interpret: bool = True) -> jnp.ndarray:
-    """Z: (n+1, 2^n) ranked zeta table; returns layer-k convolution (2^n,).
+    """Z: (n+1, ..., 2^n) ranked zeta table; returns the layer-k
+    convolution (..., 2^n).
 
-    Falls back to the reference for lattices smaller than one tile.
+    Leading axes between the rank axis and the lattice axis are batch
+    dimensions (the plan-serving batched solver stacks same-``n``
+    queries; the (G+1)-ary probe strategy stacks gamma gates): the
+    convolution is elementwise across lattice positions, so the whole
+    batch folds into the kernel row dimension and shares one grid — true
+    batching, not a host loop.  Falls back to the reference when the
+    folded table is smaller than one tile (or not tileable).
     """
-    nranks, size = Z.shape
-    if size < TILE:
+    nranks = Z.shape[0]
+    size = Z.shape[-1]
+    batch = Z.shape[1:-1]
+    total = size
+    for b in batch:
+        total *= b
+    if total < TILE or total % TILE:
         from repro.kernels.ref import ranked_conv_ref
         return ranked_conv_ref(Z, k)
-    rows = size // LANES
+    rows = total // LANES
     z3 = Z.reshape(nranks, rows, LANES)
     out = pl.pallas_call(
         functools.partial(_ranked_conv_kernel, k=k),
@@ -59,4 +71,4 @@ def ranked_conv_pallas(Z: jnp.ndarray, k: int,
         out_shape=jax.ShapeDtypeStruct((rows, LANES), Z.dtype),
         interpret=interpret,
     )(z3)
-    return out.reshape(size)
+    return out.reshape(batch + (size,))

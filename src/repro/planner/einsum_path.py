@@ -20,6 +20,7 @@ planner feeds ``jnp.einsum`` call order inside the runtime (see
 from __future__ import annotations
 
 import dataclasses
+import json
 
 import numpy as np
 
@@ -39,6 +40,88 @@ class Contraction:
     @property
     def n(self) -> int:
         return len(self.operands)
+
+
+class ContractionLog:
+    """Append-only log of planned contractions.
+
+    ``plan_contraction(..., logger=log)`` records every contraction it
+    plans; a saved log replays through the serving tier
+    (``repro.service.workload.make_einsum_workload`` +
+    ``benchmarks/serve_bench.py --workload einsum``), so the plan server
+    is exercised by the contraction mix a real run actually issued
+    instead of synthetic query templates only.
+    """
+
+    def __init__(self, records: "list | None" = None):
+        self.records: list = list(records or [])
+
+    def log(self, c: Contraction) -> None:
+        self.records.append(c)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump([{"operands": list(c.operands), "output": c.output,
+                        "sizes": c.sizes} for c in self.records], f)
+
+    @staticmethod
+    def load(path: str) -> "ContractionLog":
+        with open(path) as f:
+            raw = json.load(f)
+        return ContractionLog([
+            Contraction(tuple(r["operands"]), r["output"],
+                        {k: int(v) for k, v in r["sizes"].items()})
+            for r in raw])
+
+
+def builtin_trace() -> "list[Contraction]":
+    """A canned contraction trace shaped like the repo's model stack.
+
+    Each entry is a multi-operand tensor network mirroring an einsum
+    chain the model layer actually runs (fused attention with Q/K/V
+    projections, gated MLP, MoE routing, SSM state scan, LoRA update,
+    cross-attention), with dims from the small-config family.  Used as
+    the default replay workload when no logged trace is supplied —
+    structurally real traffic: star/chain-ish graphs, heavily repeated
+    index sizes (so candidate tables carry duplicates, unlike the
+    synthetic generator's almost-surely-distinct random tables).
+    """
+    return [
+        # fused attention: x·Wq, x·Wk, x·Wv, softmax-less core
+        Contraction(("bsd", "dh", "bte", "eh", "btf", "fv"), "bsv",
+                    {"b": 8, "s": 128, "t": 128, "d": 512, "e": 512,
+                     "f": 512, "h": 64, "v": 64}),
+        # attention + output projection (one more hop on the chain)
+        Contraction(("bsd", "dh", "bte", "eh", "btf", "fv", "vo"), "bso",
+                    {"b": 8, "s": 64, "t": 64, "d": 256, "e": 256,
+                     "f": 256, "h": 64, "v": 64, "o": 256}),
+        # gated MLP: up, gate and down projections around the activation
+        Contraction(("bsd", "df", "dg", "fh", "gh", "he"), "bse",
+                    {"b": 8, "s": 128, "d": 512, "f": 1024, "g": 1024,
+                     "h": 1024, "e": 512}),
+        # MoE routing: token-expert affinity folded with expert weights
+        Contraction(("bsd", "de", "ef", "bsf", "fg"), "bsg",
+                    {"b": 4, "s": 256, "d": 512, "e": 8, "f": 512,
+                     "g": 512}),
+        # SSM state scan step: input proj, state mix, gate, output proj
+        Contraction(("bld", "dn", "nm", "blm", "md", "de"), "ble",
+                    {"b": 8, "l": 256, "d": 256, "n": 16, "m": 16,
+                     "e": 256}),
+        # LoRA update: frozen path + low-rank A·B correction
+        Contraction(("bsd", "dr", "rk", "bsk", "ke"), "bse",
+                    {"b": 8, "s": 128, "d": 512, "r": 16, "k": 512,
+                     "e": 512}),
+        # cross-attention (encoder-decoder): distinct kv source length
+        Contraction(("bsd", "dh", "bue", "eh", "buf", "fv", "vw"),
+                    "bsw",
+                    {"b": 4, "s": 64, "u": 1500, "d": 384, "e": 384,
+                     "f": 384, "h": 64, "v": 64, "w": 384}),
+        # pipeline of blockwise reductions (chain topology, n = 8)
+        Contraction(("ab", "bc", "cd", "de", "ef", "fg", "gh", "hi"),
+                    "ai",
+                    {"a": 32, "b": 96, "c": 64, "d": 96, "e": 64,
+                     "f": 96, "g": 64, "h": 96, "i": 32}),
+    ]
 
 
 def _intermediate_indices(c: Contraction, mask: int) -> set:
@@ -79,6 +162,7 @@ def query_graph(c: Contraction) -> QueryGraph:
 
 def plan_contraction(c: Contraction, cost: str = "max",
                      method: str = "dpconv", server=None,
+                     logger: "ContractionLog | None" = None,
                      **kw) -> PlanResult:
     """Plan the contraction order.
 
@@ -88,7 +172,12 @@ def plan_contraction(c: Contraction, cost: str = "max",
     returned response is duck-compatible with ``PlanResult``
     (``cost`` / ``tree`` / ``meta``).  Repeated or relabeled contractions
     then hit the cache, and ``method`` is chosen by the router.
+
+    ``logger`` records the contraction into a ``ContractionLog`` for
+    later workload replay through the serving benchmark.
     """
+    if logger is not None:
+        logger.log(c)
     q = query_graph(c)
     card = cardinalities(c)
     if server is not None:

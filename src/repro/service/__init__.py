@@ -37,19 +37,27 @@ examples, benchmarks):
 * ``cache``    — LRU plan cache in canonical label space with
   hit/miss/eviction/relabel-hit stats; cached join trees are replayed
   through the request's inverse permutation.
-* ``batch``    — batched solving: same-``n`` requests stack their
-  feasibility gates to (B, 2^n) and share every DP lattice sweep
-  (``core.dpconv_max_batch`` runs the binary searches in lockstep);
-  mid-size lattices route the transforms through the batched Pallas
-  kernels (int32, exact to n = 15), the rest use XLA f64 butterflies.
-  Costs are bit-identical to single-query ``optimize``.
+* ``batch``    — batched solving: same-``(n, cost)`` requests stack
+  their tables to (B, 2^n) and share every DP lattice sweep; the batch
+  lane carries ``cost="max"`` AND ``cost="cap"`` chunks, each solved as
+  ONE fused lattice-program dispatch (``repro.core.engine``) with
+  on-device tree extraction, binary or (G+1)-ary gamma probing
+  (``BatchPolicy.gamma_batch``); mid-size lattices route the transforms
+  through the batched Pallas kernels (int32, exact to n = 15), the rest
+  use XLA f64 butterflies.  Costs and trees are bit-identical to
+  single-query ``optimize``.
 * ``router``   — admission policy: (n, edge density, cost fn, latency
-  budget) -> (method, lane, params), with an EWMA latency model and
-  deadline degradation exact -> approx -> GOO.
+  budget) -> (method, lane, params), with an EWMA latency model bucketed
+  per (method, engine[:cap], topology-class) and deadline degradation
+  exact -> approx -> GOO.
 * ``server``   — the micro-batching loop tying it together, plus
-  throughput counters and latency histograms.
-* ``workload`` — request-stream generator (topology × cardinality-regime
-  templates, Zipf repeats, random relabelings, Poisson arrivals).
+  throughput counters, latency histograms, and ``prewarm`` (compile
+  every fused executable bucket the configuration can hit before
+  traffic arrives).
+* ``workload`` — request-stream generators: synthetic (topology ×
+  cardinality-regime templates, Zipf repeats, random relabelings,
+  Poisson arrivals) and the einsum contraction-log replay lane
+  (``make_einsum_workload``).
 
 Benchmark: ``benchmarks/serve_bench.py`` (``--quick`` for the CI gate in
 ``scripts/smoke.sh``).  Demo: ``examples/planner_demo.py``.
@@ -62,4 +70,4 @@ from repro.service.router import Route, Router, RouterConfig  # noqa: F401
 from repro.service.server import (LatencyHistogram, PlanRequest,  # noqa: F401
                                   PlanResponse, PlanServer, ServeStats)
 from repro.service.workload import (WorkloadSpec, make_query,  # noqa: F401
-                                    make_workload)
+                                    make_einsum_workload, make_workload)

@@ -1,15 +1,17 @@
 """Batched plan solving: stack same-``n`` queries, sweep the lattice once.
 
-The DPconv[max] inner loop is a dense computation over the (2^n,) subset
-lattice; with B queries of the same ``n`` the feasibility gates stack to
-(B, 2^n) and every layered-DP sweep (zeta transforms, ranked convolution,
-Moebius) broadcasts over the batch axis — one traced program serves the
-whole micro-batch (``dpconv_max_batch`` in core runs the B binary searches
-in lockstep on top of that).  This module adds the serving-side concerns:
+The DPconv inner loops are dense computations over the (2^n,) subset
+lattice; with B queries of the same ``n`` the per-query tables stack to
+(B, 2^n) and every lattice sweep (zeta transforms, ranked convolution,
+Moebius, the (min,+) value pass) broadcasts over the batch axis — one
+compiled program serves the whole micro-batch.  This module adds the
+serving-side concerns:
 
-* grouping a mixed micro-batch by ``n`` and restoring request order;
-* shape bucketing: each same-``n`` group is split into descending
-  power-of-two chunks (11 -> [8, 2, 1] with cap 16), so jit re-traces
+* grouping a mixed micro-batch by ``(n, cost)`` and restoring request
+  order — the batch lane carries ``cost="max"`` (DPconv[max]) and
+  ``cost="cap"`` (the fused two-pass C_cap lattice program) chunks alike;
+* shape bucketing: each group is split into descending power-of-two
+  chunks (11 -> [8, 2, 1] with cap 16), so the engine compiles
   O(log max_batch) batch shapes per ``n`` and no work is wasted on
   padding rows; size-1 chunks take the single-query path;
 * the backend tier: mid-size lattices (``pallas_min_n <= n <=
@@ -19,18 +21,25 @@ in lockstep on top of that).  This module adds the serving-side concerns:
   butterflies (exact to n = 26).  On this CPU container the Pallas tier
   runs in interpret mode; on TPU it is the MXU/VPU path.
 * the engine tier (``BatchPolicy.engine``, default ``"fused"``): each
-  chunk's ENTIRE solve — binary search, gate construction, layered DP —
-  runs as one compiled ``lax.while_loop`` program with an AOT executable
-  cache (``repro.core.engine``), so a chunk costs one device dispatch
-  instead of ~n host-synced feasibility passes.  The transform backends
-  above compose with the fused scan body (the Pallas tier is the
-  ``backend="pallas"`` argument of the fused engine).  ``engine="host"``
-  keeps the per-round host loop (parity reference, dp_fn experiments).
+  chunk's ENTIRE solve — search, gate construction, layered DP, and the
+  Alg. 2 extraction scan — runs as one compiled lattice program with an
+  AOT executable cache (``repro.core.engine``), so a chunk costs one
+  device dispatch instead of ~n host-synced feasibility passes, and no
+  per-solve host recursion.  ``engine="host"`` keeps the per-round host
+  loop (parity reference, dp_fn experiments).
+* the probe strategy (``BatchPolicy.gamma_batch``): G > 1 folds (G+1)-ary
+  gamma probing into the fused while-loop body — G gates on a leading
+  axis, ~log_{G+1} instead of ~log_2 rounds per solve, still one
+  dispatch.  Fewer sequential rounds buys latency on parallel-rich
+  hardware; the CPU container mostly shows it in the rounds-per-solve
+  counter (``benchmarks/serve_bench.py`` records both probe modes).
 
-Parity: whatever the tier, results are bit-identical in cost to
+Parity: whatever the tier, results are bit-identical in cost AND tree to
 single-query ``repro.core.dpconv.optimize`` — the candidate arrays and
-binary-search pivots are the same, and feasibility is exact integer
-counting in both dtypes (asserted by tests/test_service_batch.py).
+search brackets are the same, feasibility is exact integer counting in
+both dtypes, and the extraction witness rule matches the host extractors
+(asserted by tests/test_service_batch.py and
+tests/test_lattice_parity.py).
 """
 from __future__ import annotations
 
@@ -41,7 +50,7 @@ import numpy as np
 
 from repro.core.dpconv import PlanResult, optimize, optimize_batch
 from repro.core.layered import layered_feasibility_dp_jit
-from repro.kernels.ops import mobius_batch_op, zeta_batch_op
+from repro.kernels.ops import mobius_batch_op, ranked_conv_op, zeta_batch_op
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,15 +64,19 @@ class BatchPolicy:
     # magnitude slower than XLA); "pallas" forces it anywhere (tests).
     engine: str = "fused"       # "fused" | "host"
     # "fused" (default) runs each chunk's whole solve as ONE device
-    # dispatch (repro.core.engine: on-device binary search + layered DP,
-    # AOT executable cache); "host" is the per-round host loop — kept as
-    # the parity reference and for dp_fn-style experimentation.
+    # dispatch (repro.core.engine over the lattice-program layer);
+    # "host" is the per-round host loop — kept as the parity reference
+    # and for dp_fn-style experimentation.
+    gamma_batch: int = 1        # fused probe width: 1 = binary search,
+    # G > 1 = (G+1)-ary gamma probing inside the fused while loop
 
     def __post_init__(self):
         if self.engine not in ("fused", "host"):
             raise ValueError(f"unknown engine {self.engine!r}")
         if self.backend not in ("auto", "xla", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r}")
+        if self.gamma_batch < 1:
+            raise ValueError("gamma_batch must be >= 1")
 
 
 def _pow2_chunks(b: int, cap: int):
@@ -82,7 +95,8 @@ def _pow2_chunks(b: int, cap: int):
 
 
 def pallas_dp_fn(n: int, direct_layers: int = 4):
-    """Feasibility-pass backend running zeta/Moebius on the Pallas kernels.
+    """Feasibility-pass backend running zeta/Moebius — and the
+    middle-layer ranked convolutions — on the Pallas kernels.
 
     The gate is cast to int32 (feasibility is {0,1}-counting; exact while
     counts < 2^31, enforced by BatchPolicy.pallas_max_n) and the layered
@@ -92,13 +106,25 @@ def pallas_dp_fn(n: int, direct_layers: int = 4):
         g = gate.astype(jnp.int32)
         dp = layered_feasibility_dp_jit(
             g, n, direct_layers, final_layer_shortcut,
-            zeta_fn=zeta_batch_op, mobius_fn=mobius_batch_op)
+            zeta_fn=zeta_batch_op, mobius_fn=mobius_batch_op,
+            ranked_conv_fn=ranked_conv_op)
         return dp.astype(jnp.float64)
     return dp_fn
 
 
+def _unpack(item):
+    """items are (q, card[, cost[, tag]]) — cost defaults to "max",
+    ``tag`` is an opaque attribution label (the server passes the
+    topology class) threaded back through ``last_timings``."""
+    q, card = item[0], item[1]
+    cost = item[2] if len(item) > 2 else "max"
+    tag = item[3] if len(item) > 3 else ""
+    return q, card, cost, tag
+
+
 class BatchedSolver:
-    """Groups micro-batch items by ``n`` and dispatches the batched DP."""
+    """Groups micro-batch items by ``(n, cost)`` and dispatches the
+    batched lattice programs."""
 
     def __init__(self, policy: "BatchPolicy | None" = None):
         self.policy = policy or BatchPolicy()
@@ -109,13 +135,12 @@ class BatchedSolver:
         # of the Python serving overhead around the solver
         self.total_solve_s = 0.0
         self.total_solved = 0
-        # (n, queries, seconds, engine) per chunk of the last solve()
-        # call — the server feeds these to the router's latency model
-        # per-``n`` AND per-engine (one mixed micro-batch spans several
-        # n's; a single aggregate observation would misattribute the
-        # big-n cost to items[0]'s n, and fused/host-loop latencies
-        # differ by the per-round dispatch overhead, so they must not
-        # share an EWMA coefficient)
+        # (n, queries, seconds, engine, cost, tag_counts) per chunk of
+        # the last solve() call — the server feeds these to the router's
+        # latency model per-``n``, per-engine AND per-topology-class
+        # (one mixed micro-batch spans several n's; fused/host-loop
+        # latencies differ by the per-round dispatch overhead; and a
+        # clique chunk must not pollute a chain chunk's coefficient)
         self.last_timings: list = []
 
     def _use_pallas(self, n: int) -> bool:
@@ -135,19 +160,74 @@ class BatchedSolver:
             return pallas_dp_fn(n)
         return None                      # core default: XLA f64 layered DP
 
+    def _solve_chunk(self, qs, cards, n, cost, extract_tree):
+        """One same-(n, cost) chunk through the routed engine tier."""
+        engine = self.policy.engine
+        G = self.policy.gamma_batch
+        backend = "pallas" if self._use_pallas(n) else "xla"
+        if len(qs) == 1:
+            # BatchPolicy.engine is "fused" | "host", and both optimize
+            # entry points (dpconv_max, ccap) understand both values
+            kw = {"engine": engine}
+            if engine == "fused":
+                kw["gamma_batch"] = G
+                if cost == "max":   # cap's (min,+) pass is f64/xla-only
+                    kw["backend"] = backend
+            res = optimize(qs[0], cards[0], cost=cost,
+                           extract_tree=extract_tree, **kw)
+            res.meta["batched"] = False
+            res.meta["chunk"] = 1
+            return [res]
+        if cost == "cap":
+            if engine == "fused":
+                results = optimize_batch(qs, cards, cost="cap",
+                                         extract_tree=extract_tree,
+                                         gamma_batch=G)
+            else:
+                # the host cap pipeline has no lockstep form: these are
+                # B independent solves sharing only the wall-clock
+                # window, so they must NOT be accounted as one batched
+                # solve (per-solve counters weight by 1/chunk)
+                results = [optimize(q, c, cost="cap",
+                                    extract_tree=extract_tree,
+                                    engine="host")
+                           for q, c in zip(qs, cards)]
+                for res in results:
+                    res.meta["backend"] = backend
+                    res.meta["batched"] = False
+                    res.meta["chunk"] = 1
+                return results
+        elif engine == "fused":
+            results = optimize_batch(qs, cards, cost="max",
+                                     extract_tree=extract_tree,
+                                     engine="fused", backend=backend,
+                                     gamma_batch=G)
+        else:
+            results = optimize_batch(qs, cards, cost="max",
+                                     extract_tree=extract_tree,
+                                     engine="host", dp_fn=self._dp_fn(n))
+        self.batches_run += 1
+        self.queries_batched += len(qs)
+        for res in results:
+            res.meta["backend"] = backend
+            # all chunk members share one solve; consumers averaging
+            # per-solve counters weight by 1/chunk
+            res.meta["chunk"] = len(qs)
+        return results
+
     def solve(self, items: list, extract_tree: bool = True) -> list:
-        """``items``: list of (q, card) pairs, all cost="max"/DPconv.
-        Returns PlanResults aligned with the input order."""
+        """``items``: list of (q, card[, cost[, tag]]) tuples; cost is
+        "max" or "cap" (both lattice batch-lane costs).  Returns
+        PlanResults aligned with the input order."""
         import time
 
-        by_n: dict = {}
-        for idx, (q, card) in enumerate(items):
-            by_n.setdefault(q.n, []).append((idx, q, card))
+        groups: dict = {}
+        for idx, item in enumerate(items):
+            q, card, cost, tag = _unpack(item)
+            groups.setdefault((q.n, cost), []).append((idx, q, card, tag))
         out: list = [None] * len(items)
         self.last_timings = []
-        engine = self.policy.engine
-        for n, group in sorted(by_n.items()):
-            backend = "pallas" if self._use_pallas(n) else "xla"
+        for (n, cost), group in sorted(groups.items()):
             lo = 0
             for chunk in _pow2_chunks(len(group), self.policy.max_batch):
                 part = group[lo:lo + chunk]
@@ -155,35 +235,17 @@ class BatchedSolver:
                 idxs = [g[0] for g in part]
                 qs = [g[1] for g in part]
                 cards = [np.asarray(g[2], np.float64) for g in part]
+                tags: dict = {}
+                for g in part:
+                    tags[g[3]] = tags.get(g[3], 0) + 1
                 t0 = time.perf_counter()
-                if chunk == 1:
-                    res = optimize(qs[0], cards[0], cost="max",
-                                   extract_tree=extract_tree,
-                                   engine=engine)
-                    res.meta["batched"] = False
-                    res.meta["chunk"] = 1
-                    out[idxs[0]] = res
-                else:
-                    if engine == "fused":
-                        results = optimize_batch(
-                            qs, cards, cost="max",
-                            extract_tree=extract_tree,
-                            engine="fused", backend=backend)
-                    else:
-                        results = optimize_batch(qs, cards, cost="max",
-                                                 extract_tree=extract_tree,
-                                                 engine="host",
-                                                 dp_fn=self._dp_fn(n))
-                    self.batches_run += 1
-                    self.queries_batched += chunk
-                    for idx, res in zip(idxs, results):
-                        res.meta["backend"] = backend
-                        # all chunk members share one solve; consumers
-                        # averaging per-solve counters weight by 1/chunk
-                        res.meta["chunk"] = chunk
-                        out[idx] = res
+                results = self._solve_chunk(qs, cards, n, cost,
+                                            extract_tree)
+                for idx, res in zip(idxs, results):
+                    out[idx] = res
                 dt = time.perf_counter() - t0
                 self.total_solve_s += dt
                 self.total_solved += chunk
-                self.last_timings.append((n, chunk, dt, engine))
+                self.last_timings.append(
+                    (n, chunk, dt, self.policy.engine, cost, tags))
         return out

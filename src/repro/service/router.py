@@ -13,26 +13,37 @@ different cost/optimality envelopes.  The router turns a request's
   space excludes cross joins, which is the semantics sparse workloads
   want); the (1+eps) approximation once exact blows the budget or ``n``
   grows past ``exact_out_max_n``.
-* ``cost="cap"``  -> the two-pass C_cap pipeline (single lane).
+* ``cost="cap"``  -> the fused two-pass C_cap lattice program on the
+  *batch* lane for mid-size ``n`` (the serving tier batches ``cap``
+  requests exactly like ``max`` ones since the whole pipeline is one
+  lattice program); tiny ``n`` and ``n`` past ``fused_cap_max_n`` (where
+  the device (min,+) pass's gather tables outgrow their worth) stay on
+  the single-lane host pipeline.
 * ``cost="smj"``  -> DPsub with the sunk sort-merge term; approx fallback.
 
-Deadlines: the router keeps a per-(method, n-bucket) EWMA latency model
-seeded with rough work-count priors and updated by ``observe`` after every
-solve.  If the chosen method's estimate exceeds the request's
-``latency_budget`` it degrades along ``exact -> approx -> GOO``; GOO
-(greedy operator ordering) is the terminal best-effort answer — O(n^3)
-and always admissible.  Routes carry a ``reason`` string so responses can
-be audited (tests assert on it).
+Deadlines: the router keeps an EWMA latency model seeded with rough
+work-count priors and updated by ``observe`` after every solve.  If the
+chosen method's estimate exceeds the request's ``latency_budget`` it
+degrades along ``exact -> approx -> GOO``; GOO (greedy operator
+ordering) is the terminal best-effort answer — O(n^3) and always
+admissible.  Routes carry a ``reason`` string so responses can be
+audited (tests assert on it).
 
-Engine attribution: the batch lane can execute DPconv[max] on either the
-fused whole-solve engine (one dispatch per chunk) or the per-round host
-loop, whose latencies differ by the dispatch overhead the fused engine
-eliminates.  ``observe``/``estimate`` therefore take an optional
-``engine`` tag that namespaces the EWMA coefficient (``"dpconv@fused"``
-vs ``"dpconv@host"``); the server sets ``engine_hint`` from its
-BatchPolicy so admission estimates use the coefficient of the engine that
-will actually run.  Untagged observations keep updating the plain method
-coefficient (back-compat, and the seed for new engine tags).
+Latency-model attribution: coefficients are bucketed hierarchically by
+``method`` -> ``method@engine`` -> ``method@engine#topology-class``.
+The engine tag separates the fused whole-solve engine from the per-round
+host loop (their latencies differ by the dispatch overhead the fused
+engine eliminates; the batch lane's cap chunks are tagged
+``<engine>:cap`` so the two-pass pipeline never shares a coefficient
+with plain DPconv[max]).  The topology class — the coarse
+``canon.topology_signature`` bucket the server passes via
+``signature=`` — stops clique observations from polluting chain/star
+estimates: their gate densities, and hence their effective round counts
+and pruning behavior, differ systematically.  ``observe`` updates the
+most specific bucket it is given plus that bucket's engine-level (or
+untagged) parent; ``estimate`` falls back most-specific-first, so a cold
+topology bucket inherits the engine-level coefficient and a cold engine
+tag the method prior.
 """
 from __future__ import annotations
 
@@ -64,6 +75,7 @@ class Route:
 class RouterConfig:
     small_n: int = 5            # below: numpy DPsub beats jit dispatch
     exact_out_max_n: int = 13   # exact C_out DPsub admission ceiling
+    fused_cap_max_n: int = 13   # fused C_cap batch-lane admission ceiling
     sparse_density: float = 0.5  # <=: route C_out to DPccp
     approx_eps: float = 0.25
     ewma_alpha: float = 0.3
@@ -94,6 +106,12 @@ def _work(method: str, n: int) -> float:
     raise ValueError(method)
 
 
+def topo_class(signature: str) -> str:
+    """The coarse class field of a ``canon.topology_signature`` string
+    (``n=..|m=..|<class>`` -> ``<class>``); '' passes through."""
+    return signature.rsplit("|", 1)[-1] if signature else ""
+
+
 class Router:
     def __init__(self, config: "RouterConfig | None" = None):
         self.config = config or RouterConfig()
@@ -111,43 +129,79 @@ class Router:
 
     # ------------------------------------------------------ latency model
     @staticmethod
-    def _key(method: str, engine: str) -> str:
-        return f"{method}@{engine}" if engine else method
+    def _key(method: str, engine: str = "", topo: str = "") -> str:
+        key = method
+        if engine:
+            key += f"@{engine}"
+        if topo:
+            key += f"#{topo}"
+        return key
 
-    def estimate(self, method: str, n: int, engine: str = "") -> float:
-        key = self._key(method, engine)
-        coeff = self._coeff.get(key, self._coeff[method])
+    def estimate(self, method: str, n: int, engine: str = "",
+                 topo: str = "") -> float:
+        """Latency estimate from the most specific warmed bucket."""
+        coeff = None
+        for key in (self._key(method, engine, topo),
+                    self._key(method, engine),
+                    method):
+            coeff = self._coeff.get(key)
+            if coeff is not None:
+                break
         return coeff * _work(method, n)
 
     def observe(self, method: str, n: int, seconds: float,
-                engine: str = "") -> None:
-        """EWMA-update the per-(method, engine) latency coefficient."""
+                engine: str = "", topo: str = "",
+                parent: bool = True) -> None:
+        """EWMA-update the latency coefficients: the most specific bucket
+        given, plus (``parent=True``) its engine-level (or untagged)
+        parent so cold sibling topology buckets inherit something
+        fresher than the prior.  A caller attributing ONE solve to
+        several topology classes must update the parent only once —
+        pass ``parent=False`` on the extra classes — or the shared
+        coefficient would weight that solve k-fold."""
         if method not in self._coeff or seconds <= 0:
             return
-        key = self._key(method, engine)
-        prev = self._coeff.get(key, self._coeff[method])
         a = self.config.ewma_alpha
         obs = seconds / _work(method, n)
-        self._coeff[key] = (1 - a) * prev + a * obs
+        keys = []
+        if topo:
+            keys.append(self._key(method, engine, topo))
+        if parent or not topo:
+            keys.append(self._key(method, engine))
+        for key in keys:
+            prev = self._coeff.get(key, self._coeff[method])
+            self._coeff[key] = (1 - a) * prev + a * obs
 
     # ----------------------------------------------------------- policy
     def _admit(self, method: str, n: int, budget: "float | None",
-               lane: str = "") -> bool:
+               lane: str = "", cost: str = "", topo: str = "") -> bool:
         if budget is None:
             return True
-        # the engine hint describes the BATCH lane's solver; single-lane
-        # uses of the same method (e.g. the C_cap pipeline's dpconv
-        # pass) are observed untagged and must be priced untagged too
-        engine = self.engine_hint.get(method, "") if lane == "batch" \
-            else ""
-        return self.estimate(method, n, engine=engine) <= budget
+        # price the engine that will actually run.  The engine hint
+        # describes the serving solver; cap requests get their own
+        # ":cap" namespace (the two-pass pipeline does strictly more
+        # work than a plain max solve), and past the fused ceiling the
+        # single-lane cap pipeline is the host one regardless of hint.
+        engine = ""
+        if cost == "cap" and method == "dpconv":
+            engine = self.engine_hint.get(method, "")
+            if engine and n > self.config.fused_cap_max_n:
+                engine = "host"
+            if engine:
+                engine += ":cap"
+        elif lane == "batch":
+            engine = self.engine_hint.get(method, "")
+        return self.estimate(method, n, engine=engine,
+                             topo=topo) <= budget
 
     def route(self, q: QueryGraph, cost: str,
-              latency_budget: "float | None" = None) -> Route:
+              latency_budget: "float | None" = None,
+              signature: str = "") -> Route:
         cfg = self.config
         n = q.n
         m = len(q.edges)
         density = 2.0 * m / (n * (n - 1)) if n > 1 else 1.0
+        topo = topo_class(signature)
 
         def mk(method, lane, params=(), reason=""):
             # NB: ``decisions`` is updated by the server for the route a
@@ -156,10 +210,11 @@ class Router:
             return Route(cost, method, lane, tuple(params), reason)
 
         def degrade(primary, lane, params=(), reason=""):
-            if self._admit(primary, n, latency_budget, lane):
+            if self._admit(primary, n, latency_budget, lane, cost, topo):
                 return mk(primary, lane, params, reason)
             if cost in ("out", "smj") and primary != "approx" \
-                    and self._admit("approx", n, latency_budget):
+                    and self._admit("approx", n, latency_budget,
+                                    topo=topo):
                 return mk("approx", "single",
                           (("eps", cfg.approx_eps),),
                           "deadline: degraded to (1+eps) approx")
@@ -184,6 +239,10 @@ class Router:
                            (("eps", cfg.approx_eps),),
                            f"n={n} > exact ceiling: (1+eps) approx")
         if cost == "cap":
+            if cfg.small_n < n <= cfg.fused_cap_max_n:
+                return degrade("dpconv", "batch", (),
+                               "C_cap fused lattice program, batched "
+                               "lane")
             return degrade("dpconv", "single", (),
                            "C_cap two-pass pipeline")
         if cost == "smj":

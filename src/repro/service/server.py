@@ -29,11 +29,13 @@ import time
 import numpy as np
 
 from repro.core import best_effort
+from repro.core import engine as engine_mod
 from repro.core.dpconv import optimize
 from repro.core.querygraph import QueryGraph
 from repro.service.batch import BatchedSolver, BatchPolicy
 from repro.service.cache import CachedPlan, PlanCache
 from repro.service.canon import CanonicalForm, canonicalize, relabel_tree
+from repro.service import router as router_mod
 from repro.service.router import Route, Router
 
 
@@ -138,6 +140,48 @@ class PlanServer:
         self.enable_batch = enable_batch
         self.stats = ServeStats()
 
+    # ------------------------------------------------------------ prewarm
+    def prewarm(self, ns, costs=("max", "cap")) -> dict:
+        """Compile the fused-engine executable buckets this server's
+        policy can hit for relation counts ``ns``, before traffic
+        arrives — kills the cold-bucket p99 spike of the first seconds
+        of serving (serve_bench's cold-latency row).  Respects the
+        router's lane ceilings (tiny-``n`` and past-ceiling requests
+        never reach the fused engine).  No-op for a host-engine server.
+        """
+        pol = self.solver.policy
+        if pol.engine != "fused":
+            return {"compiled": 0, "seconds": 0.0}
+        cfg = self.router.config
+        total = {"compiled": 0, "seconds": 0.0}
+        for cost in costs:
+            for n in sorted(set(ns)):
+                if n < 2:
+                    continue
+                if cost == "max":
+                    if n <= cfg.small_n:      # routed to numpy DPsub
+                        continue
+                    max_b = pol.max_batch     # batch lane: all buckets
+                elif n > cfg.fused_cap_max_n:  # host pipeline past ceiling
+                    continue
+                else:
+                    # cap below small_n stays single-lane but still runs
+                    # the fused program — warm the chunk-1 bucket only
+                    max_b = pol.max_batch if n > cfg.small_n else 1
+                # warm the backend the solver will actually pick for this
+                # n: the Pallas tier serves mid-size max chunks, the cap
+                # program's (min,+) value pass is f64/xla-only
+                backend = "pallas" if (cost == "max"
+                                       and self.solver._use_pallas(n)) \
+                    else "xla"
+                r = engine_mod.prewarm([n], max_batch=max_b,
+                                       backend=backend,
+                                       direct_layers=4, costs=(cost,),
+                                       gamma_batch=pol.gamma_batch)
+                total["compiled"] += r["compiled"]
+                total["seconds"] += r["seconds"]
+        return total
+
     # ------------------------------------------------------- single entry
     def plan_one(self, q: QueryGraph, card: np.ndarray, cost: str = "max",
                  latency_budget: "float | None" = None) -> PlanResponse:
@@ -224,7 +268,8 @@ class PlanServer:
             # a cached plan replays in ~zero time, so it satisfies any
             # latency budget: probe the cache under the PRIMARY
             # (budget-free) route before considering deadline degradation
-            primary = self.router.route(form.q, req.cost, None)
+            primary = self.router.route(form.q, req.cost, None,
+                                        signature=form.signature)
             if self.enable_cache:
                 resp = self._lookup(req, form, primary)
                 if resp is not None:
@@ -234,7 +279,8 @@ class PlanServer:
             route = primary
             if req.latency_budget is not None:
                 route = self.router.route(form.q, req.cost,
-                                          req.latency_budget)
+                                          req.latency_budget,
+                                          signature=form.signature)
                 if "deadline" in route.reason:
                     self.stats.deadline_fallbacks += 1
                 if (self.enable_cache and route.method != primary.method):
@@ -246,17 +292,27 @@ class PlanServer:
                         continue
             routes[pos] = route
             if (self.enable_batch and route.lane == "batch"
-                    and route.method == "dpconv" and req.cost == "max"):
+                    and route.method == "dpconv"
+                    and req.cost in ("max", "cap")):
                 batch_lane.append((pos, form))
             else:
                 single_lane.append((pos, form, route))
 
         if batch_lane:
-            items = [(form.q, form.card) for _, form in batch_lane]
+            items = [(form.q, form.card, batch[pos].cost,
+                      router_mod.topo_class(form.signature))
+                     for pos, form in batch_lane]
             results = self.solver.solve(items)
-            for n, cnt, dt, eng in self.solver.last_timings:
-                self.router.observe("dpconv", n, dt / max(cnt, 1),
-                                    engine=eng)
+            for n, cnt, dt, eng, cost, tags in self.solver.last_timings:
+                tag = eng + (":cap" if cost == "cap" else "")
+                # a chunk spans several topology classes; each class in
+                # it shared the same solve, so each gets the per-query
+                # mean as its observation — but the engine-level parent
+                # coefficient sees the chunk ONCE, not once per class
+                for i, topo in enumerate(tags or {"": cnt}):
+                    self.router.observe("dpconv", n, dt / max(cnt, 1),
+                                        engine=tag, topo=topo,
+                                        parent=(i == 0))
             for (pos, form), res in zip(batch_lane, results):
                 self._finish(batch[pos], form, routes[pos], res.cost,
                              res.tree, res.meta, responses, pos)
@@ -266,8 +322,20 @@ class PlanServer:
             cost_v, tree, meta = self._solve_single(form.q, form.card,
                                                     batch[pos].cost,
                                                     route)
+            # dpconv solves carry the engine that actually ran in their
+            # meta; tag the observation with it (plus the ':cap'
+            # namespace) so a fused tiny-n cap solve never pollutes the
+            # untagged coefficient that prices the slow host pipeline
+            # past the fused ceiling — and vice versa
+            eng = meta.get("engine", "") if route.method == "dpconv" \
+                else ""
+            if eng and batch[pos].cost == "cap":
+                eng += ":cap"
             self.router.observe(route.method, form.q.n,
-                                time.perf_counter() - t0)
+                                time.perf_counter() - t0,
+                                engine=eng,
+                                topo=router_mod.topo_class(
+                                    form.signature))
             self._finish(batch[pos], form, route, cost_v, tree, meta,
                          responses, pos)
         return responses  # type: ignore[return-value]
@@ -298,8 +366,19 @@ class PlanServer:
         kw = route.kw()
         if route.method == "dpconv":
             # the whole serving tier follows BatchPolicy.engine — also
-            # the C_cap pipeline's single-lane dpconv pass, so a
-            # "host"-engine server really is the pre-fused path
-            kw.setdefault("engine", self.solver.policy.engine)
+            # the single-lane C_cap pipeline, so a "host"-engine server
+            # really is the pre-fused path.  Past the fused-cap ceiling
+            # the device (min,+) pass's gather tables outgrow their
+            # worth; those requests pin the host pipeline.
+            engine = self.solver.policy.engine
+            if (cost == "cap"
+                    and q.n > self.router.config.fused_cap_max_n):
+                engine = "host"
+            kw.setdefault("engine", engine)
+            if kw["engine"] == "fused":
+                # single-lane fused solves must hit the same (probe-
+                # strategy-keyed) executable buckets prewarm compiled
+                kw.setdefault("gamma_batch",
+                              self.solver.policy.gamma_batch)
         res = optimize(q, card, cost=cost, method=route.method, **kw)
         return float(res.cost), res.tree, dict(res.meta)

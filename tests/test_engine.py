@@ -131,15 +131,26 @@ def test_dpconv_max_defaults_to_fused_engine():
 
 
 @pytest.mark.parametrize("gamma_batch", [2, 4])
-def test_gamma_batch_still_host_path(gamma_batch):
-    """The batched-gamma variant is host-only and must not regress."""
+def test_gamma_batch_runs_fused(gamma_batch):
+    """(G+1)-ary probing is folded into the fused while loop: same
+    optimum and tree, fewer rounds, still one dispatch.  The host loop
+    keeps its own gamma_batch implementation as the parity reference;
+    the host BATCH loop is binary-only and refuses the knob."""
     q = clique(7)
     card = make_cardinalities(q, seed=3)
-    res = dpconv_max(q, card, gamma_batch=gamma_batch, extract_tree=False)
-    assert res.engine == "host"
+    res = dpconv_max(q, card, gamma_batch=gamma_batch)
+    assert res.engine == "fused" and res.dispatches == 1
     assert res.optimum == dpconv_max_ref(card, 7)
+    assert res.tree.cost_max(card) == res.optimum
+    binary = dpconv_max(q, card)
+    assert res.optimum == binary.optimum
+    assert res.feasibility_passes <= binary.feasibility_passes
+    host = dpconv_max(q, card, gamma_batch=gamma_batch, engine="host",
+                      extract_tree=False)
+    assert host.engine == "host" and host.optimum == res.optimum
     with pytest.raises(ValueError):
-        dpconv_max(q, card, gamma_batch=gamma_batch, engine="fused")
+        dpconv_max_batch(np.stack([card, card]), 7, engine="host",
+                         gamma_batch=gamma_batch)
 
 
 def test_early_exit_still_host_path():

@@ -34,8 +34,13 @@ def test_out_dense_routes_to_dpsub_then_approx():
 
 def test_cap_and_smj_routing():
     r = Router()
-    assert r.route(clique(7), "cap").method == "dpconv"
-    assert r.route(clique(7), "cap").lane == "single"
+    # mid-size cap requests batch like max ones (fused lattice program)
+    mid = r.route(clique(7), "cap")
+    assert (mid.method, mid.lane) == ("dpconv", "batch")
+    # tiny n and past the fused ceiling stay on the single-lane pipeline
+    assert r.route(clique(4), "cap").lane == "single"
+    big = r.route(clique(14), "cap")
+    assert (big.method, big.lane) == ("dpconv", "single")
     assert r.route(clique(7), "smj").method == "dpsub"
 
 
@@ -71,19 +76,65 @@ def test_no_budget_never_degrades():
 
 def test_engine_hint_only_prices_the_batch_lane():
     """The fused-engine coefficient must not leak into single-lane uses
-    of dpconv (the C_cap pipeline observes untagged and much slower)."""
+    of dpconv (the host C_cap pipeline past the fused ceiling observes
+    untagged and much slower), and batch-lane cap chunks price their own
+    ':cap' namespace — the two-pass program never shares a coefficient
+    with plain DPconv[max]."""
     r = Router()
     r.engine_hint["dpconv"] = "fused"
-    r._coeff["dpconv"] = 1.0           # untagged model: slow (cap's view)
-    r._coeff["dpconv@fused"] = 1e-15   # batch lane: fast
+    r._coeff["dpconv"] = 1.0           # untagged model: slow
+    r._coeff["dpconv@fused"] = 1e-15   # batch lane, max: fast
     r._coeff["goo"] = 1e-12
     # batch lane (cost=max) admits under the fused coefficient
     assert r.route(clique(10), "max",
                    latency_budget=1e-3).method == "dpconv"
-    # single-lane cap prices untagged -> degrades under the same budget
+    # batch-lane cap prices dpconv@fused:cap — unseen, falls back to the
+    # slow untagged coefficient -> degrades under the same budget
     route = r.route(clique(10), "cap", latency_budget=1e-3)
     assert route.method == "goo"
     assert "deadline" in route.reason
+    # ...until its own namespace warms up
+    r._coeff["dpconv@fused:cap"] = 1e-15
+    assert r.route(clique(10), "cap",
+                   latency_budget=1e-3).method == "dpconv"
+    # single-lane cap (past the fused ceiling) stays untagged-priced
+    big = r.route(clique(14), "cap", latency_budget=1e-3)
+    assert big.method == "goo" and "deadline" in big.reason
+
+
+def test_topology_class_buckets_latency_model():
+    """Clique and chain observations must not pollute each other's
+    estimates: same method/engine, different topology-class buckets."""
+    from repro.service.canon import topology_signature
+    r = Router()
+    sig_clique = topology_signature(clique(9))
+    sig_chain = topology_signature(chain(9))
+    base = r.estimate("dpconv", 9, engine="fused")
+    for _ in range(30):
+        r.observe("dpconv", 9, seconds=base * 100, engine="fused",
+                  topo="clique")
+    # the clique bucket moved...
+    assert r.estimate("dpconv", 9, engine="fused",
+                      topo="clique") > base * 10
+    # ...the engine-level parent inherits (cold siblings seed from it)...
+    assert r.estimate("dpconv", 9, engine="fused") > base * 10
+    # ...but a chain bucket fed fast observations stays fast
+    for _ in range(30):
+        r.observe("dpconv", 9, seconds=base / 100, engine="fused",
+                  topo="chain")
+    est_chain = r.estimate("dpconv", 9, engine="fused", topo="chain")
+    est_clique = r.estimate("dpconv", 9, engine="fused", topo="clique")
+    assert est_chain < est_clique / 100
+    # route() threads the signature through to admission (the batch
+    # lane's engine hint selects the engine level, the signature the
+    # topology bucket under it)
+    r.engine_hint["dpconv"] = "fused"
+    r._coeff["goo"] = 1e-12
+    budget = base
+    assert r.route(chain(9), "max", latency_budget=budget,
+                   signature=sig_chain).method == "dpconv"
+    assert r.route(clique(9), "max", latency_budget=budget,
+                   signature=sig_clique).method == "goo"
 
 
 def test_observe_with_engine_namespaces_coefficient():
