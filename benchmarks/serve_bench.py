@@ -31,12 +31,18 @@ forced onto the host-loop engine so the fused paths are checked against
 the independent host implementations (optima bitwise, join-tree costs
 identical; C_cap trees to f64 tolerance of the replayed sum order).
 
-Two extra sections ride along:
+Three extra sections ride along:
 
 * **replay** — the einsum contraction-log workload
   (``service.workload.make_einsum_workload``) served and
   parity-checked, so the gate also covers real-trace traffic
   (``--workload einsum`` makes it the main sweep's stream too);
+* **out lane** — a sparse out-only stream served on the host-DPccp and
+  the fused connectivity-masked C_out engines (``--cost out`` makes it
+  the main sweep's mix too); the row records host-vs-fused plans/sec,
+  dispatches- and rounds-per-solve, and its parity/one-dispatch/
+  no-host-extraction fields are what ``scripts/smoke.sh`` gates on —
+  it is emitted unconditionally, no flag drops it;
 * **cold start** — the executable cache is cleared and a sub-workload
   is served cold with and without ``PlanServer.prewarm``, measuring the
   cold-bucket p99 spike the prewarm satellite exists to kill.
@@ -128,6 +134,16 @@ def check_parity(reqs, resps) -> "tuple[int, int]":
             got = float(resp.tree.cost_out(req.card))
             bad = abs(got - float(resp.cost)) > \
                 1e-9 * max(1.0, abs(float(resp.cost)))
+        if (not bad and req.cost == "out" and method == "dpccp"
+                and resp.tree is not None):
+            # the relabeled tree must replay the optimum (f64 sum-order
+            # tolerance) AND stay inside the DPccp search space: every
+            # internal node connected in the *request's* labeling
+            got = float(resp.tree.cost_out(req.card))
+            bad = (abs(got - float(resp.cost))
+                   > 1e-9 * max(1.0, abs(float(resp.cost)))
+                   or not all(req.q.is_connected(m)
+                              for m in resp.tree.internal_masks()))
         if bad:
             mismatched += 1
             print(f"  PARITY MISMATCH req={req.req_id} cost={req.cost} "
@@ -350,6 +366,57 @@ def run_replay(spec_seed: int, n_requests: int,
     return row, checked, bad
 
 
+def run_out_sweep(spec_seed: int, n_requests: int,
+                  batch_size: int) -> "tuple[dict, int, int]":
+    """The connected-C_out lane sweep — host DPccp enumeration vs the
+    fused connectivity-masked lattice program, on a sparse out-only
+    workload inside the fused window.  Emitted unconditionally: the
+    smoke gate asserts this row's parity/dispatch/extraction fields, so
+    no flag combination may drop it.
+    """
+    spec = WorkloadSpec(n_requests=n_requests, seed=spec_seed,
+                        n_range=(6, 9), cost_mix=(("out", 1.0),),
+                        topologies=("chain", "star", "cycle", "sparse",
+                                    "grid"))
+    reqs = make_workload(spec)
+    row = {"config": f"out_sweep/batch={batch_size}/cache=off"}
+    checked_total = bad_total = 0
+    for eng in ("host", "fused"):
+        warm = _make_server(batch_size, cache=False, engine=eng)
+        warm.serve(list(reqs), closed_loop=True)
+        engine_mod.reset_stats()
+        srv = _make_server(batch_size, cache=False, engine=eng)
+        t0 = time.perf_counter()
+        resps, _ = srv.serve(list(reqs), closed_loop=True)
+        wall = time.perf_counter() - t0
+        checked, bad = check_parity(reqs, resps)
+        checked_total += checked
+        bad_total += bad
+        est = engine_mod.stats().as_dict()
+        row[f"{eng}_plans_per_s"] = len(reqs) / wall if wall > 0 else 0.0
+        if eng == "fused":
+            disp = [r.meta["dispatches"] for r in resps
+                    if r.route.method == "dpccp" and not r.cache_hit
+                    and r.meta.get("dispatches") is not None]
+            row["queries_on_lane"] = len(disp)
+            row["fused_solves"] = est["solves"]
+            row["max_dispatches_per_solve"] = max(disp) if disp else 0
+            row["dispatches_per_solve"] = (est["dispatches"]
+                                           / max(est["solves"], 1))
+            # the (min,+) layer sweep probes nothing: zero search rounds
+            # per solve, by construction — recorded so a future probing
+            # variant shows up in the trajectory
+            row["rounds_per_solve"] = (est["rounds"]
+                                       / max(est["solves"], 1))
+            row["host_extractions"] = est["host_extractions"]
+            row["routes"] = dict(srv.router.decisions)
+    row["parity_checked"] = checked_total
+    row["parity_mismatches"] = bad_total
+    row["speedup"] = (row["fused_plans_per_s"] / row["host_plans_per_s"]
+                      if row["host_plans_per_s"] > 0 else 0.0)
+    return row, checked_total, bad_total
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -365,6 +432,11 @@ def main(argv=None) -> int:
                     default="synthetic",
                     help="main-sweep stream: synthetic templates or the "
                          "einsum contraction-log replay lane")
+    ap.add_argument("--cost", choices=("mix", "out"), default="mix",
+                    help="main-sweep cost mix: the default serving mix, "
+                         "or an out-only sparse stream that pins the "
+                         "whole sweep onto the connected-C_out lane "
+                         "(the dedicated out_sweep row runs either way)")
     ap.add_argument("--no-target", action="store_true",
                     help="report only; don't enforce the 2x acceptance "
                          "targets")
@@ -387,8 +459,19 @@ def main(argv=None) -> int:
         batch_sizes = [int(b) for b in
                        (args.batch_sizes or "1,4,16").split(",")]
 
+    spec_kw = {}
+    engine_configs = ENGINE_CONFIGS
+    if args.cost == "out":
+        # out-only sparse stream: everything rides the DPccp lane.  The
+        # (min,+) layer sweep never probes, so the gamma-probe config
+        # (and its rounds-reduction gate) has nothing to measure here.
+        spec_kw = {"cost_mix": (("out", 1.0),),
+                   "topologies": ("chain", "star", "cycle", "sparse",
+                                  "grid")}
+        engine_configs = tuple(c for c in ENGINE_CONFIGS if c[1] == 1)
     spec = WorkloadSpec(n_requests=n_requests, seed=args.seed,
-                        n_range=n_range, budget_frac=args.budget_frac)
+                        n_range=n_range, budget_frac=args.budget_frac,
+                        **spec_kw)
     reqs = make_workload(spec) if args.workload == "synthetic" \
         else make_einsum_workload(spec)
     ns = sorted({r.q.n for r in reqs})
@@ -414,7 +497,7 @@ def main(argv=None) -> int:
     invariant_fail = 0
     best: dict = {}
     rounds_by_probe: dict = {}
-    for engine, gamma in ENGINE_CONFIGS:    # host first: the PR-1 path
+    for engine, gamma in engine_configs:    # host first: the PR-1 path
         probe = "binary" if gamma == 1 else f"gamma{gamma}"
         # the gamma-probe config is a cache-off measurement row
         cache_sweep = (False,) if gamma > 1 else (False, True)
@@ -470,6 +553,29 @@ def main(argv=None) -> int:
           f"hit_rate={replay_row['cache']['hit_rate']}")
     print(f"#   replay parity: {replay_checked} checked, "
           f"{replay_bad} mismatches", flush=True)
+
+    # --------------------------------------- connected-C_out lane row
+    out_row, out_checked, out_bad = run_out_sweep(
+        args.seed + 2, min(96, n_requests), max(batch_sizes))
+    rows.append(out_row)
+    parity_fail += out_bad
+    print(f"{out_row['config']},{out_row['fused_plans_per_s']:.1f},,,"
+          f"host={out_row['host_plans_per_s']:.1f}/s;"
+          f"speedup={out_row['speedup']:.2f}x;"
+          f"dispatches={out_row['dispatches_per_solve']:.1f};"
+          f"rounds={out_row['rounds_per_solve']:.1f}")
+    print(f"#   out-lane parity: {out_checked} checked, "
+          f"{out_bad} mismatches", flush=True)
+    if out_row["queries_on_lane"] and \
+            out_row["max_dispatches_per_solve"] != 1:
+        invariant_fail += 1
+        print("#   INVARIANT VIOLATION: fused out solve took "
+              f"{out_row['max_dispatches_per_solve']} dispatches",
+              file=sys.stderr)
+    if out_row["host_extractions"]:
+        invariant_fail += 1
+        print("#   INVARIANT VIOLATION: host extraction recursion ran "
+              "on the fused out lane", file=sys.stderr)
 
     # -------------------------------------------- cold start / prewarm
     cold = {}
@@ -565,6 +671,19 @@ def main(argv=None) -> int:
         },
         "cold_start": cold,
         "replay": replay_row,
+        "out_lane": {
+            "queries": out_row["queries_on_lane"],
+            "parity_checked": out_row["parity_checked"],
+            "parity_mismatches": out_row["parity_mismatches"],
+            "host_plans_per_s": out_row["host_plans_per_s"],
+            "fused_plans_per_s": out_row["fused_plans_per_s"],
+            "speedup": out_row["speedup"],
+            "max_dispatches_per_solve":
+                out_row["max_dispatches_per_solve"],
+            "dispatches_per_solve": out_row["dispatches_per_solve"],
+            "rounds_per_solve": out_row["rounds_per_solve"],
+            "host_extractions": out_row["host_extractions"],
+        },
         "speedup": {
             "fused_vs_naive": speedup_naive,
             "fused_vs_host_serving": speedup_host,

@@ -6,13 +6,17 @@
 #     BENCH_ARGS="--no-target" scripts/bench.sh   # report-only mode
 #     BENCH_ARGS="--workload einsum" scripts/bench.sh  # replay-lane sweep
 #
+#     BENCH_ARGS="--cost out" scripts/bench.sh    # out-only main sweep
+#
 # BENCH_serve.json keeps plans/sec (naive / host-loop / fused serving),
 # p50/p99 latency, feasibility passes and device dispatches per batched
 # solve (cost="max" AND the fused cost="cap" lane), rounds-per-solve for
 # both probe modes (binary vs gamma_batch), the cold-start/prewarm p99
-# pair, the einsum replay-lane row, and the fused-vs-host speedups — one
-# file, overwritten per run, so the per-PR perf trajectory is diffable
-# from git history.
+# pair, the einsum replay-lane row, the connected-C_out lane row (host
+# DPccp vs the fused connectivity-masked engine — always emitted, the
+# smoke gate reads it), and the fused-vs-host speedups — one file,
+# overwritten per run, so the per-PR perf trajectory is diffable from
+# git history.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Regenerate the golden-plan fixture ``tests/fixtures/golden_plans.json``.
+
+    PYTHONPATH=src python scripts/regen_golden.py
+
+The fixture freezes optima (bit-exact, ``float.hex``) and serialized
+join trees (the compact s-expr ``repr``) for a deterministic instance
+set — the canned einsum contraction-log replay trace plus JOB-like
+chain/star workloads — computed on the **host reference pipelines**
+(host-loop DPconv[max], the DPccp enumerator, the host two-pass C_cap).
+``tests/test_golden_plans.py`` diffs the **live serving-default
+solvers** (the fused engines) against it, so the fixture is both a
+cross-PR regression anchor (any drift in optima or witness rules shows
+up as a diff) and a host-vs-fused cross-engine check that runs without
+recomputing the references.
+
+Regenerate ONLY when an intentional change moves the frozen values
+(e.g. a new witness tie-break rule), and say why in the commit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURE = os.path.join(REPO, "tests", "fixtures", "golden_plans.json")
+
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def golden_instances():
+    """The deterministic (name, q, card, costs) instance set shared by
+    the regenerator and the regression test — the single source of
+    truth for what the fixture covers."""
+    from repro.core.querygraph import chain, make_cardinalities, star
+    from repro.planner.einsum_path import (builtin_trace, cardinalities,
+                                           query_graph)
+
+    out = []
+    for i, c in enumerate(rec for rec in builtin_trace() if rec.n >= 4):
+        q = query_graph(c)
+        costs = ["max", "cap"]
+        # the DPccp lane is defined for connected simple-edge graphs
+        if q.is_connected(q.full_mask) and not q.hyperedges:
+            costs.append("out")
+        out.append((f"einsum/{i}/n={q.n}", q, cardinalities(c), costs))
+    for name, maker, seed in (("job_chain8", chain, 0),
+                              ("job_star8", star, 1)):
+        q = maker(8)
+        card = make_cardinalities(q, seed=seed)
+        out.append((name, q, card, ["max", "out", "cap"]))
+    return out
+
+
+def host_reference(q, card, cost):
+    """The frozen-truth pipelines: host engines only."""
+    from repro.core.ccap import ccap
+    from repro.core.dpconv import optimize
+
+    if cost == "max":
+        r = optimize(q, card, cost="max", engine="host")
+        return float(r.cost), r.tree
+    if cost == "out":
+        r = optimize(q, card, cost="out", method="dpccp", engine="host")
+        return float(r.cost), r.tree
+    if cost == "cap":
+        r = ccap(q, card, engine="host")
+        return float(r.cout), r.tree
+    raise ValueError(cost)
+
+
+def main() -> int:
+    entries = []
+    for name, q, card, costs in golden_instances():
+        for cost in costs:
+            opt, tree = host_reference(q, card, cost)
+            entries.append({
+                "name": name,
+                "cost": cost,
+                "n": q.n,
+                "optimum": opt,                 # human-readable
+                "optimum_hex": float(opt).hex(),  # the bit-exact anchor
+                "tree": repr(tree),
+            })
+            print(f"  {name} cost={cost}: {opt:.6g}  {repr(tree)[:60]}")
+    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+    with open(FIXTURE, "w") as f:
+        json.dump({"comment": "regenerate with scripts/regen_golden.py; "
+                              "see its docstring before touching",
+                   "entries": entries}, f, indent=1)
+        f.write("\n")
+    print(f"wrote {FIXTURE} ({len(entries)} entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,16 +4,26 @@
 # step runs through scripts/bench.sh, which also records the cross-PR
 # perf trajectory in BENCH_serve.json at the repo root.  serve_bench
 # itself exits non-zero on any parity mismatch (including the fused
-# C_cap lane and the einsum replay lane), on the one-dispatch /
-# no-host-recursion invariants, and on the probe-rounds reduction; the
-# explicit check below re-asserts the fused-cap gate from the written
-# summary so a benchmark refactor can't silently drop it.
+# C_cap lane, the connected-C_out lane and the einsum replay lane), on
+# the one-dispatch / no-host-recursion invariants, and on the
+# probe-rounds reduction; the explicit checks below re-assert the
+# fused-cap and fused-out gates from the written summary so a benchmark
+# refactor can't silently drop them.
 #
 #     scripts/smoke.sh            # full tier-1 + quick serve bench
-#     SMOKE_SKIP_TESTS=1 scripts/smoke.sh   # bench only
+#     scripts/smoke.sh --quick    # bench + summary gates only (CI runs
+#                                 # tier-1 pytest as its own matrix step)
+#     SMOKE_SKIP_TESTS=1 scripts/smoke.sh   # same as --quick
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+for arg in "$@"; do
+  case "$arg" in
+    --quick) SMOKE_SKIP_TESTS=1 ;;
+    *) echo "unknown argument: $arg" >&2; exit 2 ;;
+  esac
+done
 
 if [[ -z "${SMOKE_SKIP_TESTS:-}" ]]; then
   python -m pytest -x -q
@@ -29,10 +39,19 @@ cap = s["cap_lane"]
 assert cap["queries"] > 0, "no cap requests exercised the fused lane"
 assert cap["max_dispatches_per_solve"] == 1, \
     f"fused cap solves took {cap['max_dispatches_per_solve']} dispatches"
+out = s["out_lane"]
+assert out["queries"] > 0, "no out requests exercised the fused lane"
+assert out["parity_mismatches"] == 0, \
+    f"connected-C_out parity mismatches: {out['parity_mismatches']}"
+assert out["max_dispatches_per_solve"] == 1, \
+    f"fused out solves took {out['max_dispatches_per_solve']} dispatches"
+assert out["host_extractions"] == 0, \
+    f"{out['host_extractions']} host extractions on the fused out lane"
 r = s["rounds_per_solve"]
 gammas = [k for k in r if k != "binary"]
 assert gammas and r[gammas[0]] < r["binary"], \
     f"gamma probing did not reduce rounds: {r}"
-print("smoke gates: fused-cap parity/dispatch + probe rounds OK")
+print("smoke gates: fused-cap + fused-out parity/dispatch/extraction "
+      "+ probe rounds OK")
 PY
 echo "smoke: OK"

@@ -79,6 +79,47 @@ def enumerate_csg_cmp_pairs(q: QueryGraph):
     return pairs
 
 
+def connectivity_masks(q: QueryGraph) -> np.ndarray:
+    """The DPccp search space as a dense bitset tensor: the boolean
+    (2^n,) connected-subset indicator the fused connected-C_out lattice
+    program consumes (``lattice.build_out_program``).
+
+    A split ``(T, S\\T)`` of a connected ``S`` is a csg/cmp pair iff both
+    halves are connected — the crossing join edge is implied, since any
+    partition of a connected subgraph is crossed by an edge — so this
+    single mask *is* the whole search space: the per-layer valid-split
+    masks are gathers of it (``conn[subs] & conn[comps]``).
+
+    Restricted to simple-edge graphs, exactly like the csg/cmp
+    enumerator above (``_neighbors`` walks the simple-edge adjacency);
+    hyperedge queries must stay on the full-lattice pipelines.
+    """
+    if q.hyperedges:
+        raise ValueError("DPccp connectivity masks are simple-edge only; "
+                         "hyperedge queries take the full-lattice paths")
+    return q.connected_mask()
+
+
+def ccp_pair_count(conn: np.ndarray, n: int) -> int:
+    """#ccp computed from the connected-subset mask alone: unordered
+    pairs of disjoint connected sets whose union is connected.  Must
+    equal ``len(enumerate_csg_cmp_pairs(q))`` — the property harness's
+    oracle check that the mask tensors describe exactly the enumerated
+    DPccp search space.
+    """
+    conn = np.asarray(conn, bool)
+    assert conn.shape == (1 << n,)
+    total = 0
+    for s in np.nonzero(conn)[0]:
+        s = int(s)
+        if popcount_int(s) < 2:
+            continue
+        total += sum(1 for t in _subsets_desc(s)
+                     if t != s and conn[t] and conn[s & ~t])
+    assert total % 2 == 0
+    return total // 2
+
+
 def dpccp(q: QueryGraph, card: np.ndarray, mode: str = "out",
           prune_gamma: float | None = None) -> tuple:
     """Returns (dp_table, n_ccp).  dp over connected sets only; no cross

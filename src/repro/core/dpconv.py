@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core.querygraph import QueryGraph
 from repro.core import baselines, dpccp as dpccp_mod, jointree
+from repro.core import engine as engine_mod
 from repro.core.dpconv_max import dpconv_max, dpconv_max_batch
 from repro.core.dpconv_out import dpconv_out
 from repro.core.approx import approx_out
@@ -61,10 +62,25 @@ def optimize(q: QueryGraph, card: np.ndarray, cost: str = "max",
                 if extract_tree else None
             return PlanResult(float(dp[-1]), tree, {})
         if method == "dpccp":
+            engine = kw.pop("engine", "host")
+            if engine not in ("host", "fused"):
+                raise ValueError(f"unknown dpccp engine {engine!r}")
+            if (engine == "fused" and not kw and n >= 2
+                    and not q.hyperedges
+                    and q.is_connected(q.full_mask)):
+                fo = engine_mod.fused_out(
+                    [q], np.asarray(card, np.float64)[None, :], n,
+                    extract_tree=extract_tree)
+                return PlanResult(float(fo.couts[0]), fo.trees[0],
+                                  {"engine": "fused",
+                                   "dispatches": fo.dispatches})
+            # host enumeration: the parity reference, and the only route
+            # for hyperedge/disconnected graphs and prune_gamma variants
             dp, nccp = dpccp_mod.dpccp(q, card, mode="out", **kw)
             tree = jointree.extract_tree_out(dp, card, n) \
                 if extract_tree else None
-            return PlanResult(float(dp[-1]), tree, {"ccp": nccp})
+            return PlanResult(float(dp[-1]), tree,
+                              {"ccp": nccp, "engine": "host"})
     if cost == "cap":
         r = ccap(q, card, extract_tree=extract_tree, **kw)
         return PlanResult(r.cout, r.tree,
@@ -93,7 +109,10 @@ def optimize_batch(qs, cards, cost: str = "max", method: str = "dpconv",
     results are bit-identical to B single ``optimize`` calls.
     ``(cost="cap", method="dpconv")`` same-``n`` batches run the fused
     two-pass C_cap lattice program the same way (``ccap_batch``), one
-    dispatch for the whole batch.  Every other (cost, method) pair, and
+    dispatch for the whole batch, and ``(cost="out", method="dpccp",
+    engine="fused")`` batches of connected simple-edge graphs run the
+    connectivity-masked C_out program (``engine.fused_out``) — bit-
+    identical to per-query DPccp.  Every other (cost, method) pair, and
     mixed-``n`` batches, fall back to a per-query loop.
     ``repro.service.batch`` sits on top of this and does the same-``n``
     grouping.
@@ -110,6 +129,17 @@ def optimize_batch(qs, cards, cost: str = "max", method: str = "dpconv",
                             "engine": r.engine,
                             "dispatches": r.dispatches,
                             "batched": True}) for r in rs]
+    if (cost == "out" and method == "dpccp" and len(qs) > 1
+            and len(ns) == 1 and qs[0].n >= 2 and dp_fn is None
+            and set(kw) == {"engine"} and kw["engine"] == "fused"
+            and all(not q.hyperedges and q.is_connected(q.full_mask)
+                    for q in qs)):
+        fo = engine_mod.fused_out(qs, np.stack(cards), qs[0].n,
+                                  extract_tree=extract_tree)
+        return [PlanResult(float(fo.couts[b]), fo.trees[b],
+                           {"engine": "fused",
+                            "dispatches": fo.dispatches,
+                            "batched": True}) for b in range(len(qs))]
     if (cost == "cap" and method == "dpconv" and len(qs) > 1
             and len(ns) == 1 and dp_fn is None
             and kw.get("engine", "auto") != "host"):

@@ -11,8 +11,9 @@ This module is the *execution tier* over the lattice-program layer
 shape buckets, AOT-compiles the whole-solve programs, caches the
 executables, and counts every device execution.  The programs themselves
 — lockstep (G+1)-ary search, scan-form layered DP, the (min,+) C_cap
-value pass, and the Alg. 2 extraction scan — are built by
-``lattice.build_max_program`` / ``lattice.build_cap_program``; one
+value pass, the connectivity-masked C_out sweep, and the Alg. 2
+extraction scan — are built by ``lattice.build_max_program`` /
+``lattice.build_cap_program`` / ``lattice.build_out_program``; one
 batched solve is ONE dispatch for every cost function and probe
 strategy, including tree extraction (no per-solve host recursion: the
 host only assembles ``JoinTree`` objects from the returned split
@@ -96,6 +97,18 @@ class FusedSolve:
 
 
 @dataclasses.dataclass
+class FusedOutSolve:
+    """One fused batched connected-C_out solve (DPccp semantics): B
+    optima + trees from one dispatch over the connectivity-masked
+    (min,+) lattice program."""
+    couts: np.ndarray              # (B,) optimal C_out, no cross products
+    trees: list                    # JoinTree | None per query
+    dispatches: int = 1
+    dp: "np.ndarray | None" = None  # (B, 2^n) value table (+inf outside
+    extraction: str = "device"      # the connected sets)
+
+
+@dataclasses.dataclass
 class FusedCapSolve:
     """One fused batched C_cap solve: both passes + extraction, one
     dispatch."""
@@ -141,6 +154,17 @@ def get_executable(n: int, B: int, C: int, backend: str = "xla",
         fn = lattice.build_cap_program(n, direct_layers, backend, extract,
                                        gamma_batch)
         args.append(jax.ShapeDtypeStruct((), jnp.float64))
+    elif cost == "out":
+        # the connected C_out program has no search loop and no candidate
+        # table: its inputs are the cardinality tables and the per-query
+        # connected-subset masks.  Callers key it with the canonical
+        # (C=0, backend="xla", gamma_batch=1) tuple — the (min,+) sweep
+        # is f64-only and probes nothing.
+        fn = lattice.build_out_program(n, extract)
+        args = [
+            jax.ShapeDtypeStruct((B, 1 << n), jnp.float64),
+            jax.ShapeDtypeStruct((B, 1 << n), jnp.bool_),
+        ]
     else:
         raise ValueError(f"unknown fused cost {cost!r}")
     exe = jax.jit(fn).lower(*args).compile()
@@ -178,8 +202,12 @@ def prewarm(ns, max_batch: int = 16, backend: str = "xla",
         b = 1
         while b <= max_batch:
             for cost in costs:
-                get_executable(n, b, candidate_bucket(n), backend,
-                               direct_layers, extract, cost, gamma_batch)
+                if cost == "out":      # no candidate table, no probing
+                    get_executable(n, b, 0, "xla", 4, extract, "out", 1)
+                else:
+                    get_executable(n, b, candidate_bucket(n), backend,
+                                   direct_layers, extract, cost,
+                                   gamma_batch)
             b *= 2
     compiled = _STATS.exec_cache_misses - before
     _STATS.prewarmed += compiled
@@ -285,6 +313,63 @@ def fused_dpconv_max(cards: np.ndarray, n: int, direct_layers: int = 4,
                       passes=rounds + (1 if extract_tree else 0),
                       dispatches=_STATS.dispatches - disp0,
                       dp=dpn, extraction="device")
+
+
+def fused_out(qs: list, cards: np.ndarray, n: int,
+              extract_tree: bool = True) -> FusedOutSolve:
+    """Solve B same-``n`` connected C_out instances (DPccp semantics —
+    connected csg/cmp pairs only, no cross products) in ONE device
+    dispatch.
+
+    ``qs`` are the B query graphs (each batch row may carry a different
+    topology: the connected-subset masks ship as a program input, not a
+    compile-time constant), ``cards`` is (B, 2^n).  Every graph must be
+    connected and simple-edge — the DPccp search space is undefined
+    otherwise (``dpccp.connectivity_masks`` raises on hyperedges).
+    Optima, DP tables and trees are bit-identical to B
+    ``dpccp_with_tree`` calls.
+    """
+    from repro.core.dpccp import connectivity_masks
+
+    cards = np.asarray(cards, np.float64)
+    if cards.ndim == 1:
+        cards = cards[None, :]
+    B, size = cards.shape
+    assert size == 1 << n and n >= 2
+    assert len(qs) == B
+    conn = np.stack([connectivity_masks(q) for q in qs])
+    if not conn[:, -1].all():
+        raise ValueError("fused_out requires connected query graphs "
+                         "(DPccp excludes cross products); route "
+                         "disconnected queries to the full-lattice "
+                         "pipelines")
+    Bp = _next_pow2(B)
+    cards_pad, conn_pad = cards, conn
+    if Bp != B:
+        cards_pad = np.concatenate(
+            [cards, np.repeat(cards[:1], Bp - B, axis=0)], axis=0)
+        conn_pad = np.concatenate(
+            [conn, np.repeat(conn[:1], Bp - B, axis=0)], axis=0)
+
+    exe = get_executable(n, Bp, 0, "xla", 4, extract_tree, "out", 1)
+    disp0 = _STATS.dispatches
+    rec0 = jointree.recursive_extractions()
+    out = _run(exe, jnp.asarray(cards_pad), jnp.asarray(conn_pad))
+    trees: list = [None] * B
+    dpn = None
+    if extract_tree:
+        cout, dp, nodes, lidx = out
+        dpn = np.asarray(dp, np.float64)[:B]
+        trees = _trees_from_arrays(np.asarray(nodes), np.asarray(lidx), B)
+    else:
+        (cout,) = out
+    _STATS.host_extractions += jointree.recursive_extractions() - rec0
+    _STATS.solves += 1
+    _STATS.queries += B
+    return FusedOutSolve(couts=np.asarray(cout, np.float64)[:B],
+                         trees=trees,
+                         dispatches=_STATS.dispatches - disp0,
+                         dp=dpn, extraction="device")
 
 
 def fused_ccap(cards: np.ndarray, n: int, gamma_slack: float = 1.0,

@@ -14,7 +14,10 @@ axis        instances
 semiring    *feasibility* — {0,1} counting in (+,·), thresholded per layer
             (Kosaraju's trick, Sec. 6): ``feasibility_layers``;
             *value* — (min,+) over f64 with a gamma gate (DPsub[out]'s
-            recursion as a dense layer program): ``minplus_value_layers``
+            recursion as a dense layer program): ``minplus_value_layers``;
+            *connected value* — the same (min,+) sweep under per-subset
+            valid-split masks (DPccp's csg/cmp search space as bitset
+            tensors): ``minplus_connected_layers``
 transforms  XLA f64 butterflies (exact counts to n = 26) or the batched
             Pallas int32 kernels (exact to n = 15) — ``transforms()``;
             optionally a fused ranked-convolution kernel
@@ -33,9 +36,9 @@ one implementation, ``feasibility_layers``, which runs either *unrolled*
 wrapper) or *scan-form* (``lax.fori_loop`` body with masked convolution
 slots, carried ranked-zeta buffer: the fused engine's mode).
 
-``build_max_program`` / ``build_cap_program`` compose the axes into
-whole-solve programs — one ``lax.while_loop`` dispatch per batched solve —
-that ``repro.core.engine`` AOT-compiles and caches.  Exactness notes sit
+``build_max_program`` / ``build_cap_program`` / ``build_out_program``
+compose the axes into whole-solve programs — one dispatch per batched
+solve — that ``repro.core.engine`` AOT-compiles and caches.  Exactness notes sit
 next to each piece; every instantiation is bit-identical to its host
 reference (asserted by tests/test_lattice_parity.py).
 """
@@ -274,6 +277,46 @@ def minplus_value_layers(card, gate_ok, n: int):
     return dp
 
 
+def minplus_connected_layers(card, conn, n: int):
+    """DPccp's recursion as a dense layer program — the connectivity-
+    masked C_out instantiation of the lattice skeleton.
+
+    ``dp[S] = c(S) + min_{(T, S\\T) valid} (dp[T] + dp[S\\T])`` where a
+    split is *valid* iff both halves induce connected subgraphs — for a
+    connected ``S`` a crossing join edge is then implied (any partition
+    of a connected graph has one), so the valid splits are exactly the
+    DPccp csg/cmp pairs and no cross product ever enters the search
+    space.  Disconnected sets stay at +inf; singletons cost 0.
+
+    The per-subset valid-split masks are materialized per layer from the
+    connected-subset indicator by the same gather tables the (min,+)
+    combination uses (``conn[subs] & conn[comps]``) — the DPccp search
+    space as bitset tensors, see DESIGN.md §Lattice-programs for the
+    memory accounting.  Bit-identical to ``dpccp.dpccp(q, card,
+    mode="out")``: the valid pairs are the same multiset, min is
+    order-independent, and the add association ``(dp[T] + dp[S\\T]) +
+    c(S)`` matches the enumerator's.
+
+    ``card`` (..., 2^n) f64; ``conn`` boolean, same shape (per-query
+    connected-subset masks — each batch row may carry a different query
+    graph).
+    """
+    pc = jnp.asarray(popcounts(n), dtype=jnp.int32)
+    inf = jnp.array(np.inf, jnp.float64)
+    dp = jnp.broadcast_to(
+        jnp.where(pc == 1, 0.0, inf), card.shape).astype(jnp.float64)
+    for k in range(2, n + 1):
+        sets, subs, comps = direct_layer_indices(n, k)
+        split_ok = conn[..., subs] & conn[..., comps]  # (..., m, 2^k)
+        combo = jnp.where(split_ok,
+                          dp[..., subs] + dp[..., comps], inf)
+        best = jnp.min(combo, axis=-1)
+        val = best + card[..., sets]
+        val = jnp.where(conn[..., sets], val, inf)
+        dp = dp.at[..., sets].set(val)
+    return dp
+
+
 # ------------------------------------------------------ probe strategies
 def probe_pivots(lo, hi, G: int):
     """(G,) interior pivots per query splitting [lo, hi] into G+1 parts:
@@ -458,6 +501,35 @@ def build_max_program(n: int, direct_layers: int, backend: str,
         dpf = dp.astype(jnp.float64)
         nodes, lidx = extract_scan(dpf, n)
         return opt, dpf, nodes, lidx, rounds
+
+    return fn
+
+
+def build_out_program(n: int, extract: bool):
+    """The whole-solve connected C_out program (DPccp semantics):
+    ``(cards, conn) -> (cout[, dp, nodes, lidx])``.
+
+    Shapes bind at compile time: cards (B, 2^n) f64, conn (B, 2^n) bool
+    — the per-query connected-subset masks, precomputed on the host from
+    each query graph (``dpccp.connectivity_masks``).  The (min,+) layer
+    sweep runs under per-subset valid-split masks derived from ``conn``
+    (the DPccp csg/cmp search space as bitset tensors), and the Alg. 2
+    masked-scan extraction reads the same value table — disconnected
+    witnesses carry +inf error, so the extracted tree is restricted to
+    connected csg/cmp pairs by construction.  There is no search loop:
+    C_out needs no gamma probing, so the program is a straight-line
+    layer sweep and the whole batched solve is trivially ONE dispatch.
+
+    Bit-identical optima, DP tables and trees to ``dpccp_with_tree``
+    (tests/test_out_parity.py's property harness is the machine check).
+    """
+    def fn(cards, conn):
+        dpv = minplus_connected_layers(cards, conn, n)
+        cout = dpv[..., -1]
+        if not extract:
+            return (cout,)
+        nodes, lidx = extract_scan(dpv, n, card=cards)
+        return cout, dpv, nodes, lidx
 
     return fn
 

@@ -8,8 +8,10 @@ compiled program serves the whole micro-batch.  This module adds the
 serving-side concerns:
 
 * grouping a mixed micro-batch by ``(n, cost)`` and restoring request
-  order — the batch lane carries ``cost="max"`` (DPconv[max]) and
-  ``cost="cap"`` (the fused two-pass C_cap lattice program) chunks alike;
+  order — the batch lane carries ``cost="max"`` (DPconv[max]),
+  ``cost="cap"`` (the fused two-pass C_cap lattice program) and
+  ``cost="out"`` (the connectivity-masked DPccp-semantics C_out
+  program) chunks alike;
 * shape bucketing: each group is split into descending power-of-two
   chunks (11 -> [8, 2, 1] with cap 16), so the engine compiles
   O(log max_batch) batch shapes per ``n`` and no work is wasted on
@@ -165,20 +167,40 @@ class BatchedSolver:
         engine = self.policy.engine
         G = self.policy.gamma_batch
         backend = "pallas" if self._use_pallas(n) else "xla"
+        # the batch lane carries three costs; "out" chunks run DPccp
+        # semantics (connected csg/cmp pairs, no cross products)
+        method = "dpccp" if cost == "out" else "dpconv"
         if len(qs) == 1:
-            # BatchPolicy.engine is "fused" | "host", and both optimize
-            # entry points (dpconv_max, ccap) understand both values
+            # BatchPolicy.engine is "fused" | "host", and all three
+            # optimize entry points (dpconv_max, ccap, dpccp) understand
+            # both values
             kw = {"engine": engine}
-            if engine == "fused":
-                kw["gamma_batch"] = G
+            if engine == "fused" and cost != "out":
+                kw["gamma_batch"] = G   # out's (min,+) sweep never probes
                 if cost == "max":   # cap's (min,+) pass is f64/xla-only
                     kw["backend"] = backend
-            res = optimize(qs[0], cards[0], cost=cost,
+            res = optimize(qs[0], cards[0], cost=cost, method=method,
                            extract_tree=extract_tree, **kw)
             res.meta["batched"] = False
             res.meta["chunk"] = 1
             return [res]
-        if cost == "cap":
+        if cost == "out":
+            # optimize_batch runs the whole chunk as ONE fused dispatch;
+            # with engine="host" — or when a disconnected/hyperedge chunk
+            # member voids the DPccp search space — it loops per-query
+            # host enumerations: B independent solves, accounted as
+            # chunk-1 solves like the host cap pipeline
+            results = optimize_batch(qs, cards, cost="out",
+                                     method="dpccp",
+                                     extract_tree=extract_tree,
+                                     engine=engine)
+            if not results[0].meta.get("batched"):
+                for res in results:
+                    res.meta["backend"] = "xla"
+                    res.meta["batched"] = False
+                    res.meta["chunk"] = 1
+                return results
+        elif cost == "cap":
             if engine == "fused":
                 results = optimize_batch(qs, cards, cost="cap",
                                          extract_tree=extract_tree,
@@ -209,7 +231,9 @@ class BatchedSolver:
         self.batches_run += 1
         self.queries_batched += len(qs)
         for res in results:
-            res.meta["backend"] = backend
+            # the out program's (min,+) sweep is f64/XLA-only, whatever
+            # the policy's transform tier says for max chunks
+            res.meta["backend"] = "xla" if cost == "out" else backend
             # all chunk members share one solve; consumers averaging
             # per-solve counters weight by 1/chunk
             res.meta["chunk"] = len(qs)
@@ -217,8 +241,8 @@ class BatchedSolver:
 
     def solve(self, items: list, extract_tree: bool = True) -> list:
         """``items``: list of (q, card[, cost[, tag]]) tuples; cost is
-        "max" or "cap" (both lattice batch-lane costs).  Returns
-        PlanResults aligned with the input order."""
+        "max", "cap" or "out" (all three lattice batch-lane costs).
+        Returns PlanResults aligned with the input order."""
         import time
 
         groups: dict = {}

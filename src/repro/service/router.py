@@ -11,8 +11,13 @@ different cost/optimality envelopes.  The router turns a request's
 * ``cost="out"``  -> exact DPsub for dense/small graphs; DPccp for sparse
   graphs (the classic no-cross-product production choice — its search
   space excludes cross joins, which is the semantics sparse workloads
-  want); the (1+eps) approximation once exact blows the budget or ``n``
-  grows past ``exact_out_max_n``.
+  want).  Connected simple-edge DPccp traffic in the
+  ``small_n < n <= fused_out_max_n`` window rides the *batch* lane: the
+  connectivity-masked fused C_out lattice program solves same-``n``
+  chunks in one dispatch, bit-identical to the host enumerator; tiny and
+  past-ceiling ``n`` keep the per-query host DPccp.  The (1+eps)
+  approximation takes over once exact blows the budget or ``n`` grows
+  past ``exact_out_max_n``.
 * ``cost="cap"``  -> the fused two-pass C_cap lattice program on the
   *batch* lane for mid-size ``n`` (the serving tier batches ``cap``
   requests exactly like ``max`` ones since the whole pipeline is one
@@ -33,9 +38,11 @@ Latency-model attribution: coefficients are bucketed hierarchically by
 ``method`` -> ``method@engine`` -> ``method@engine#topology-class``.
 The engine tag separates the fused whole-solve engine from the per-round
 host loop (their latencies differ by the dispatch overhead the fused
-engine eliminates; the batch lane's cap chunks are tagged
-``<engine>:cap`` so the two-pass pipeline never shares a coefficient
-with plain DPconv[max]).  The topology class — the coarse
+engine eliminates; the batch lane's cap and out chunks are tagged
+``<engine>:cap`` / ``<engine>:out`` so the two-pass pipeline and the
+connected-C_out sweep never share a coefficient with plain
+DPconv[max] — or, for ``dpccp@fused:out`` vs the untagged ``dpccp``
+prior, with the #ccp-scaling host enumerator).  The topology class — the coarse
 ``canon.topology_signature`` bucket the server passes via
 ``signature=`` — stops clique observations from polluting chain/star
 estimates: their gate densities, and hence their effective round counts
@@ -76,6 +83,7 @@ class RouterConfig:
     small_n: int = 5            # below: numpy DPsub beats jit dispatch
     exact_out_max_n: int = 13   # exact C_out DPsub admission ceiling
     fused_cap_max_n: int = 13   # fused C_cap batch-lane admission ceiling
+    fused_out_max_n: int = 13   # fused connected-C_out batch-lane ceiling
     sparse_density: float = 0.5  # <=: route C_out to DPccp
     approx_eps: float = 0.25
     ewma_alpha: float = 0.3
@@ -189,6 +197,18 @@ class Router:
                 engine = "host"
             if engine:
                 engine += ":cap"
+        elif cost == "out" and method == "dpccp":
+            # only the batch lane runs the fused connected-C_out
+            # program; every single-lane dpccp request (tiny n, past the
+            # ceiling, hyperedges) runs the host enumerator, whose
+            # latency scales with #ccp, not dense-lattice work — keying
+            # on the lane (not the n-window) keeps e.g. in-window
+            # hyperedge queries priced by the host coefficient
+            engine = self.engine_hint.get(method, "")
+            if engine and lane != "batch":
+                engine = "host"
+            if engine:
+                engine += ":out"
         elif lane == "batch":
             engine = self.engine_hint.get(method, "")
         return self.estimate(method, n, engine=engine,
@@ -230,6 +250,12 @@ class Router:
         if cost == "out":
             if density <= cfg.sparse_density \
                     and q.is_connected(q.full_mask):
+                if cfg.small_n < n <= cfg.fused_out_max_n \
+                        and not q.hyperedges:
+                    return degrade(
+                        "dpccp", "batch", (),
+                        f"sparse (density={density:.2f}): DPccp, "
+                        "fused connected-C_out lane")
                 return degrade("dpccp", "single", (),
                                f"sparse (density={density:.2f}): DPccp")
             if n <= cfg.exact_out_max_n:

@@ -134,6 +134,9 @@ class PlanServer:
         # actually run (fused vs host-loop dpconv differ by the per-round
         # dispatch overhead) — see router.py §Engine attribution
         self.router.engine_hint["dpconv"] = self.solver.policy.engine
+        # the batch lane's out chunks (DPccp semantics) follow the same
+        # policy engine; estimates price them under "<engine>:out"
+        self.router.engine_hint["dpccp"] = self.solver.policy.engine
         self.max_batch = max_batch
         self.max_wait = max_wait
         self.enable_cache = enable_cache
@@ -141,7 +144,7 @@ class PlanServer:
         self.stats = ServeStats()
 
     # ------------------------------------------------------------ prewarm
-    def prewarm(self, ns, costs=("max", "cap")) -> dict:
+    def prewarm(self, ns, costs=("max", "cap", "out")) -> dict:
         """Compile the fused-engine executable buckets this server's
         policy can hit for relation counts ``ns``, before traffic
         arrives — kills the cold-bucket p99 spike of the first seconds
@@ -162,6 +165,13 @@ class PlanServer:
                     if n <= cfg.small_n:      # routed to numpy DPsub
                         continue
                     max_b = pol.max_batch     # batch lane: all buckets
+                elif cost == "out":
+                    # the fused connected-C_out lane serves only the
+                    # batch-lane window; outside it the host enumerator
+                    # runs and there is nothing to compile
+                    if not (cfg.small_n < n <= cfg.fused_out_max_n):
+                        continue
+                    max_b = pol.max_batch
                 elif n > cfg.fused_cap_max_n:  # host pipeline past ceiling
                     continue
                 else:
@@ -292,8 +302,10 @@ class PlanServer:
                         continue
             routes[pos] = route
             if (self.enable_batch and route.lane == "batch"
-                    and route.method == "dpconv"
-                    and req.cost in ("max", "cap")):
+                    and ((route.method == "dpconv"
+                          and req.cost in ("max", "cap"))
+                         or (route.method == "dpccp"
+                             and req.cost == "out"))):
                 batch_lane.append((pos, form))
             else:
                 single_lane.append((pos, form, route))
@@ -304,13 +316,14 @@ class PlanServer:
                      for pos, form in batch_lane]
             results = self.solver.solve(items)
             for n, cnt, dt, eng, cost, tags in self.solver.last_timings:
-                tag = eng + (":cap" if cost == "cap" else "")
+                method = "dpccp" if cost == "out" else "dpconv"
+                tag = eng + (":" + cost if cost in ("cap", "out") else "")
                 # a chunk spans several topology classes; each class in
                 # it shared the same solve, so each gets the per-query
                 # mean as its observation — but the engine-level parent
                 # coefficient sees the chunk ONCE, not once per class
                 for i, topo in enumerate(tags or {"": cnt}):
-                    self.router.observe("dpconv", n, dt / max(cnt, 1),
+                    self.router.observe(method, n, dt / max(cnt, 1),
                                         engine=tag, topo=topo,
                                         parent=(i == 0))
             for (pos, form), res in zip(batch_lane, results):
@@ -322,15 +335,18 @@ class PlanServer:
             cost_v, tree, meta = self._solve_single(form.q, form.card,
                                                     batch[pos].cost,
                                                     route)
-            # dpconv solves carry the engine that actually ran in their
-            # meta; tag the observation with it (plus the ':cap'
-            # namespace) so a fused tiny-n cap solve never pollutes the
-            # untagged coefficient that prices the slow host pipeline
-            # past the fused ceiling — and vice versa
-            eng = meta.get("engine", "") if route.method == "dpconv" \
-                else ""
+            # dpconv/dpccp solves carry the engine that actually ran in
+            # their meta; tag the observation with it (plus the ':cap' /
+            # ':out' namespace) so a fused tiny-n cap solve never
+            # pollutes the untagged coefficient that prices the slow
+            # host pipeline past the fused ceiling — and vice versa
+            eng = meta.get("engine", "") \
+                if route.method in ("dpconv", "dpccp") else ""
             if eng and batch[pos].cost == "cap":
                 eng += ":cap"
+            elif eng and batch[pos].cost == "out" \
+                    and route.method == "dpccp":
+                eng += ":out"
             self.router.observe(route.method, form.q.n,
                                 time.perf_counter() - t0,
                                 engine=eng,

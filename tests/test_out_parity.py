@@ -1,0 +1,229 @@
+"""Property-based cross-engine parity for the connected C_out tier.
+
+The fused connectivity-masked lattice program (`engine.fused_out` over
+`lattice.build_out_program`) claims *bit-identical* optima, DP tables
+and join trees to the host DPccp enumerator on every connected
+simple-edge query.  A handful of hand-picked graphs cannot carry that
+claim — these properties are enforced by *generators*: query graphs
+drawn by topology class (chain, star, cycle, clique, random connected
+sparse) with integer and float cardinality models, checked against
+
+* ``dpccp_with_tree``      — the independent host enumerator (exact);
+* ``dpconv_out``           — the full-lattice FFT-embedded exact C_out,
+  on small-W integral instances (sound cross-check: the full lattice
+  also prices cross products, so its optimum lower-bounds the DPccp
+  one, with equality certified whenever its witness tree is ccp-valid);
+* ``best_effort``          — GOO's no-cross-product tree upper-bounds
+  the optimum; the exact left-deep DP lower-bounds nothing but must
+  dominate it from above too (bushy ⊇ left-deep search space);
+* a brute-force ``is_connected`` recomputation — the oracle for the
+  connectivity mask and for the #ccp count the mask tensors induce.
+
+Runs under real hypothesis or the deterministic seeded shim in
+``tests/conftest.py`` (the ``hypothesis_fallback`` marker / report line
+says which).
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine
+from repro.core.dpconv import optimize, optimize_batch
+from repro.core.dpconv_out import dpconv_out
+from repro.core.best_effort import dpsub_leftdeep, goo
+from repro.core.bitset import popcounts
+from repro.core.dpccp import (ccp_pair_count, connectivity_masks,
+                              dpccp_with_tree, enumerate_csg_cmp_pairs)
+from repro.core.querygraph import (QueryGraph, chain, clique, cycle,
+                                   make_cardinalities, random_sparse,
+                                   star)
+
+TOPOLOGIES = ("chain", "star", "cycle", "clique", "sparse")
+
+
+def make_graph(topo: str, n: int, seed: int) -> QueryGraph:
+    """One query graph of the given topology class — always connected,
+    always simple-edge (the DPccp search space's domain)."""
+    if topo == "chain":
+        return chain(n)
+    if topo == "star":
+        return star(n)
+    if topo == "cycle":
+        return cycle(max(n, 3))
+    if topo == "clique":
+        return clique(n)
+    if topo == "sparse":
+        return random_sparse(n, extra_edges=seed % n, seed=seed)
+    raise ValueError(topo)
+
+
+def int_cards(q: QueryGraph, seed: int, w: int = 8) -> np.ndarray:
+    """Small-W integral cardinalities — the regime where the FFT
+    embedding (`dpconv_out`) stays practical as a cross-check oracle.
+    No submultiplicativity is required by any C_out algorithm here."""
+    rng = np.random.default_rng(seed)
+    card = rng.integers(1, w + 1, 1 << q.n).astype(np.float64)
+    card[0] = 1.0
+    return card
+
+
+# ------------------------------------------------ connectivity oracle
+@given(topo=st.sampled_from(TOPOLOGIES), n=st.integers(3, 7),
+       seed=st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_connectivity_mask_against_bruteforce(topo, n, seed):
+    """The vectorized mask == per-subset BFS recomputation, and the
+    #ccp it induces == the count the published enumerator emits."""
+    q = make_graph(topo, n, seed)
+    conn = connectivity_masks(q)
+    brute = np.array([q.is_connected(s) for s in range(1 << q.n)])
+    assert np.array_equal(conn, brute)
+    assert ccp_pair_count(conn, q.n) == len(enumerate_csg_cmp_pairs(q))
+
+
+def test_connectivity_masks_reject_hyperedges():
+    q = QueryGraph(4, ((0, 1), (2, 3)), hyperedges=((0b0011, 0b1100),))
+    import pytest
+    with pytest.raises(ValueError):
+        connectivity_masks(q)
+
+
+# ------------------------------------------- fused == host enumerator
+@given(topo=st.sampled_from(TOPOLOGIES), n=st.integers(4, 8),
+       seed=st.integers(0, 10 ** 6), integral=st.booleans())
+@settings(max_examples=25, deadline=None)
+def test_fused_out_bit_identical_to_dpccp(topo, n, seed, integral):
+    """Optimum, full DP table AND tree parity, per generated instance."""
+    q = make_graph(topo, n, seed)
+    card = int_cards(q, seed) if integral else \
+        make_cardinalities(q, seed=seed)
+    dp_host, tree_host = dpccp_with_tree(q, card, mode="out")
+    fo = engine.fused_out([q], card[None, :], q.n)
+    assert fo.dispatches == 1
+    assert float(fo.couts[0]) == float(dp_host[-1])
+    assert np.array_equal(fo.dp[0], dp_host)      # +inf pattern included
+    assert repr(fo.trees[0]) == repr(tree_host)
+    assert fo.trees[0].validate()
+    assert all(q.is_connected(m) for m in fo.trees[0].internal_masks())
+
+
+# ------------------------------- full-lattice + best-effort envelope
+@given(topo=st.sampled_from(TOPOLOGIES), n=st.integers(4, 7),
+       seed=st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_fused_out_envelope_dpconv_out_and_best_effort(topo, n, seed):
+    """Small-W integral instances: the DPccp-space optimum is bracketed
+    by the full-lattice exact optimum (cross products allowed — a sound
+    lower bound, with equality certified when its witness tree is
+    ccp-valid) and the best-effort upper bounds (GOO greedy and the
+    exact left-deep DP, both restricted to connected joins)."""
+    q = make_graph(topo, n, seed)
+    card = int_cards(q, seed)
+    fo = engine.fused_out([q], card[None, :], q.n)
+    opt = float(fo.couts[0])
+
+    full_opt, _, full_tree = dpconv_out(card, q.n, extract_tree=True)
+    assert float(full_opt) <= opt    # larger search space, exact values
+    if all(q.is_connected(m) for m in full_tree.internal_masks()):
+        # the full-lattice witness is ccp-valid => the spaces agree
+        assert float(full_opt) == opt
+
+    goo_tree = goo(q, card, allow_cross=False)
+    assert goo_tree.validate()
+    assert opt <= float(goo_tree.cost_out(card)) * (1 + 1e-12) + 1e-9
+
+    ld = dpsub_leftdeep(q, card, connected_only=True)
+    assert np.isfinite(ld[-1])       # connected graph: left-deep exists
+    assert opt <= float(ld[-1]) * (1 + 1e-12) + 1e-9
+
+
+# ------------------------------------------------- batched mixed lane
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=5, deadline=None)
+def test_fused_out_mixed_topology_batch_one_dispatch(seed):
+    """One batch, four different graphs: the connected-subset masks are
+    program *inputs*, so topologies mix freely inside a single fused
+    dispatch, each row bit-identical to its own host solve."""
+    n = 6
+    qs = [make_graph(t, n, seed + i)
+          for i, t in enumerate(("chain", "star", "cycle", "sparse"))]
+    cards = [make_cardinalities(q, seed=seed + 10 * i)
+             for i, q in enumerate(qs)]
+    engine.reset_stats()
+    fo = engine.fused_out(qs, np.stack(cards), n)
+    assert fo.dispatches == 1
+    assert engine.stats().host_extractions == 0
+    for b, (q, card) in enumerate(zip(qs, cards)):
+        dp_host, tree_host = dpccp_with_tree(q, card, mode="out")
+        assert float(fo.couts[b]) == float(dp_host[-1])
+        assert repr(fo.trees[b]) == repr(tree_host)
+
+
+# ------------------------------------------------ facade + guard rails
+def test_optimize_facade_routes_fused_and_host_agree():
+    q = random_sparse(7, 3, seed=11)
+    card = make_cardinalities(q, seed=11)
+    fused = optimize(q, card, cost="out", method="dpccp", engine="fused")
+    host = optimize(q, card, cost="out", method="dpccp")
+    assert fused.meta["engine"] == "fused"
+    assert host.meta["engine"] == "host"
+    assert float(fused.cost) == float(host.cost)
+    assert repr(fused.tree) == repr(host.tree)
+
+
+def test_optimize_batch_out_lane_falls_back_on_hyperedges():
+    """A hyperedge graph voids the DPccp bitset search space: the fused
+    lane refuses it and the whole chunk drops to per-query host
+    enumeration; a disconnected graph is rejected outright (no
+    cross-product-free plan exists)."""
+    hyper = QueryGraph(5, tuple((i, i + 1) for i in range(4)),
+                       hyperedges=((0b00011, 0b11000),))
+    qs = [hyper, chain(5)]
+    cards = [make_cardinalities(q, seed=s) for q, s in zip(qs, (0, 1))]
+    rs = optimize_batch(qs, cards, cost="out", method="dpccp",
+                        engine="fused")
+    assert all(not r.meta.get("batched") for r in rs)
+    # per-query fallback: the hyperedge member runs the host enumerator,
+    # the clean member still gets a single-query fused solve
+    assert rs[0].meta["engine"] == "host"
+    assert rs[1].meta["engine"] == "fused"
+
+    import pytest
+    disconnected = QueryGraph(5, ((0, 1), (2, 3)))
+    cards2 = [make_cardinalities(q, seed=s)
+              for q, s in zip([disconnected, chain(5)], (0, 1))]
+    with pytest.raises(ValueError):
+        engine.fused_out([disconnected, chain(5)], np.stack(cards2), 5)
+
+
+def test_fused_out_serving_lane_invariants():
+    """End to end through PlanServer: out requests ride the batch lane,
+    one dispatch per fused solve, zero host recursions, parity vs the
+    raw host enumerator on the un-canonicalized request."""
+    from repro.service import PlanServer, WorkloadSpec, make_workload
+    from repro.service.batch import BatchPolicy
+
+    spec = WorkloadSpec(n_requests=24, seed=3, n_range=(6, 8),
+                        cost_mix=(("out", 1.0),),
+                        topologies=("chain", "star", "sparse"))
+    reqs = make_workload(spec)
+    srv = PlanServer(max_batch=8, batch_policy=BatchPolicy(max_batch=8))
+    engine.reset_stats()
+    resps, _ = srv.serve(list(reqs), closed_loop=True)
+    st_ = engine.stats()
+    assert st_.solves > 0
+    assert st_.dispatches == st_.solves
+    assert st_.host_extractions == 0
+    on_lane = 0
+    for req, resp in zip(reqs, resps):
+        if resp.route.method != "dpccp":
+            # dense random_sparse draws route to DPsub (cross products
+            # allowed — a different search space, checked elsewhere)
+            continue
+        on_lane += 1
+        assert resp.route.lane == "batch"
+        ref = optimize(req.q, req.card, cost="out", method="dpccp")
+        assert float(resp.cost) == float(ref.cost)
+        assert resp.tree.validate()
+        assert all(req.q.is_connected(m)
+                   for m in resp.tree.internal_masks())
+    assert on_lane > 0
