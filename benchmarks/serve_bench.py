@@ -31,7 +31,7 @@ forced onto the host-loop engine so the fused paths are checked against
 the independent host implementations (optima bitwise, join-tree costs
 identical; C_cap trees to f64 tolerance of the replayed sum order).
 
-Three extra sections ride along:
+Four extra sections ride along:
 
 * **replay** — the einsum contraction-log workload
   (``service.workload.make_einsum_workload``) served and
@@ -43,6 +43,14 @@ Three extra sections ride along:
   dispatches- and rounds-per-solve, and its parity/one-dispatch/
   no-host-extraction fields are what ``scripts/smoke.sh`` gates on —
   it is emitted unconditionally, no flag drops it;
+* **runtime** — a duplicate-heavy SLO-classed stream through the async
+  deadline-aware scheduler (``repro.service.runtime``) on a
+  ``VirtualClock``: per-class latency percentiles, shed / downgrade /
+  coalesce rates, batch occupancy, and the fast-path evidence (cache
+  hits overtaking the in-flight batched miss: hit p99 under the mean
+  solve time, one fused dispatch preserved), every response
+  bit-compared against the synchronous serve path — emitted
+  unconditionally, ``scripts/smoke.sh`` gates on it;
 * **cold start** — the executable cache is cleared and a sub-workload
   is served cold with and without ``PlanServer.prewarm``, measuring the
   cold-bucket p99 spike the prewarm satellite exists to kill.
@@ -69,6 +77,7 @@ timed configuration so the numbers measure serving, not tracing.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -78,8 +87,9 @@ import numpy as np
 
 from repro.core import engine as engine_mod
 from repro.core.dpconv import optimize
-from repro.service import (PlanServer, WorkloadSpec, make_einsum_workload,
-                           make_workload)
+from repro.service import (PlanServer, RuntimeConfig, SLOClass,
+                           VirtualClock, WorkloadSpec,
+                           make_einsum_workload, make_workload)
 from repro.service.batch import BatchPolicy
 
 RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -320,6 +330,90 @@ def warmup(reqs, batch_sizes) -> None:
             srv2 = _make_server(max(batch_sizes), cache=False,
                                 engine=eng, gamma=gamma)
             srv2.serve(list(reqs), closed_loop=False)
+
+
+def run_runtime_sweep(spec_seed: int, n_requests: int,
+                      batch_size: int) -> "tuple[dict, int, int]":
+    """The async-runtime row — emitted unconditionally, the smoke gate
+    reads it.  A duplicate-heavy SLO-classed stream is served through
+    ``ServingRuntime`` on a ``VirtualClock`` honoring Poisson arrivals
+    (solve durations from the wall clock), and every non-downgraded
+    response is bit-compared against the synchronous ``serve`` path on
+    the SLO-free copy of the same workload: scheduling must not change
+    answers.  The row records per-SLO-class latency percentiles, shed /
+    downgrade / coalesce counters, batch occupancy, and the fast-path
+    evidence the acceptance criterion names: cache-hit p99 under the
+    mean in-flight batched-miss solve time, with one fused dispatch per
+    batched solve preserved.
+    """
+    # rate >> 1/solve-time: duplicates land while their canonical form
+    # is still queued or in flight, so join-on-completion (not just the
+    # cache) is exercised — the coalesce-rate smoke gate reads this row
+    spec = WorkloadSpec(
+        n_requests=n_requests, seed=spec_seed, n_range=(5, 8),
+        pool_size=6, fresh_frac=0.0, relabel_frac=0.8, zipf_a=2.0,
+        rate=20000.0,
+        cost_mix=(("max", 0.7), ("cap", 0.2), ("out", 0.1)),
+        slo_mix=(("interactive", 0.4), ("standard", 0.4),
+                 ("batch", 0.2)))
+    reqs = make_workload(spec)
+    slo_free = [dataclasses.replace(r, slo=None) for r in reqs]
+    # sync reference: the same canonical answers, no deadline machinery
+    sync_srv = _make_server(batch_size, cache=True)
+    sync_resps, _ = sync_srv.serve(list(slo_free), closed_loop=True)
+    by_id = {r.req_id: r for r in sync_resps}
+    # warm the executable/jit caches for the runtime server's shapes
+    warm = _make_server(batch_size, cache=False)
+    warm.serve(list(slo_free), closed_loop=True)
+
+    engine_mod.reset_stats()
+    srv = _make_server(batch_size, cache=True)
+    clk = VirtualClock()
+    cfg = RuntimeConfig(
+        max_batch=batch_size,
+        slo_classes={
+            "interactive": SLOClass("interactive", 1.0),
+            "standard": SLOClass("standard", 5.0),
+            "batch": SLOClass("batch", None),
+        })
+    rt = srv.make_runtime(clock=clk, config=cfg)
+    tickets = []
+    for r in sorted(reqs, key=lambda r: r.arrival):
+        rt.run_until(r.arrival)
+        tickets.append(rt.submit(r))
+    rt.drain()
+    est = engine_mod.stats().as_dict()
+
+    checked = bad = 0
+    for t in tickets:
+        if t.refused or t.downgraded or t.response is None:
+            continue
+        ref = by_id[t.request.req_id]
+        if ref.route.method in ("goo", "approx"):
+            continue
+        checked += 1
+        mismatch = float(t.response.cost) != float(ref.cost)
+        if not mismatch and (t.response.tree is None) != (ref.tree is None):
+            mismatch = True
+        if not mismatch and ref.tree is not None \
+                and repr(t.response.tree) != repr(ref.tree):
+            mismatch = True
+        if mismatch:
+            bad += 1
+            print(f"  RUNTIME PARITY MISMATCH req={t.request.req_id}: "
+                  f"runtime={t.response.cost!r} sync={ref.cost!r}",
+                  file=sys.stderr)
+
+    rts = rt.stats
+    row = {"config": f"runtime/batch={batch_size}/cache=on",
+           **rts.as_dict(),
+           "parity_checked": checked,
+           "parity_mismatches": bad,
+           "one_dispatch": bool(est["solves"] == 0
+                                or est["dispatches"] == est["solves"]),
+           "host_extractions": est["host_extractions"],
+           "cache": srv.cache.stats.as_dict()}
+    return row, checked, bad
 
 
 def run_cold_start(reqs, batch_size: int, gamma: int = 1) -> dict:
@@ -577,6 +671,39 @@ def main(argv=None) -> int:
         print("#   INVARIANT VIOLATION: host extraction recursion ran "
               "on the fused out lane", file=sys.stderr)
 
+    # ------------------------------------------------ async runtime row
+    rt_row, rt_checked, rt_bad = run_runtime_sweep(
+        args.seed + 3, min(160, max(n_requests, 96)), max(batch_sizes))
+    rows.append(rt_row)
+    parity_fail += rt_bad
+    print(f"{rt_row['config']},,,,"
+          f"coalesce_rate={rt_row['coalesce_rate']};"
+          f"shed_rate={rt_row['shed_rate']};"
+          f"occupancy={rt_row['mean_batch_occupancy']};"
+          f"overtakes={rt_row['overtakes']};"
+          f"hit_p99={rt_row['hit_p99_ms']}ms;"
+          f"miss_solve={rt_row['miss_solve_ms_mean']}ms")
+    print(f"#   runtime parity vs sync serve: {rt_checked} checked, "
+          f"{rt_bad} mismatches; deadline_misses="
+          f"{rt_row['deadline_misses']}", flush=True)
+    if not rt_row["one_dispatch"] or rt_row["host_extractions"]:
+        invariant_fail += 1
+        print("#   INVARIANT VIOLATION: runtime serving broke the "
+              "one-dispatch / no-host-extraction contract",
+              file=sys.stderr)
+    if rt_row["batches"] and not (
+            rt_row["hit_p99_ms"] < rt_row["miss_solve_ms_mean"]):
+        invariant_fail += 1
+        print("#   INVARIANT VIOLATION: fast-path hit p99 "
+              f"({rt_row['hit_p99_ms']}ms) did not undercut the mean "
+              f"in-flight batched solve "
+              f"({rt_row['miss_solve_ms_mean']}ms)", file=sys.stderr)
+    if rt_row["deadline_misses"]:
+        invariant_fail += 1
+        print(f"#   INVARIANT VIOLATION: {rt_row['deadline_misses']} "
+              "deadline misses in promised (non-downgraded) classes",
+              file=sys.stderr)
+
     # -------------------------------------------- cold start / prewarm
     cold = {}
     if not args.skip_cold:
@@ -671,6 +798,14 @@ def main(argv=None) -> int:
         },
         "cold_start": cold,
         "replay": replay_row,
+        "runtime": {k: rt_row[k] for k in
+                    ("parity_checked", "parity_mismatches",
+                     "one_dispatch", "host_extractions",
+                     "fast_path_hits", "overtakes", "coalesced",
+                     "coalesce_rate", "shed", "shed_backpressure",
+                     "shed_rate", "downgraded", "batches",
+                     "mean_batch_occupancy", "deadline_misses",
+                     "hit_p99_ms", "miss_solve_ms_mean", "per_class")},
         "out_lane": {
             "queries": out_row["queries_on_lane"],
             "parity_checked": out_row["parity_checked"],
@@ -724,7 +859,6 @@ def main(argv=None) -> int:
 
 
 def dataclass_dict(spec) -> dict:
-    import dataclasses
     return dataclasses.asdict(spec)
 
 

@@ -14,9 +14,12 @@
 # both probe modes (binary vs gamma_batch), the cold-start/prewarm p99
 # pair, the einsum replay-lane row, the connected-C_out lane row (host
 # DPccp vs the fused connectivity-masked engine — always emitted, the
-# smoke gate reads it), and the fused-vs-host speedups — one file,
-# overwritten per run, so the per-PR perf trajectory is diffable from
-# git history.
+# smoke gate reads it), the async-runtime row (per-SLO-class latency
+# percentiles, shed/downgrade/coalesce rates, batch occupancy, fast-path
+# hit p99 vs in-flight solve time, sync-parity counts — always emitted,
+# the smoke gate reads it too), and the fused-vs-host speedups — one
+# file, overwritten per run, so the per-PR perf trajectory is diffable
+# from git history.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

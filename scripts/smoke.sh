@@ -51,7 +51,21 @@ r = s["rounds_per_solve"]
 gammas = [k for k in r if k != "binary"]
 assert gammas and r[gammas[0]] < r["binary"], \
     f"gamma probing did not reduce rounds: {r}"
+rt = s["runtime"]
+assert rt["parity_checked"] > 0, "runtime row checked nothing"
+assert rt["parity_mismatches"] == 0, \
+    f"runtime vs sync-serve parity mismatches: {rt['parity_mismatches']}"
+assert rt["deadline_misses"] == 0, \
+    f"{rt['deadline_misses']} deadline misses in promised classes"
+assert rt["coalesce_rate"] > 0, \
+    "no in-flight coalescing on the duplicate-heavy stream"
+assert rt["one_dispatch"] and rt["host_extractions"] == 0, \
+    "runtime serving broke the one-dispatch/no-host-extraction contract"
+assert rt["hit_p99_ms"] < rt["miss_solve_ms_mean"], \
+    f"fast-path hit p99 {rt['hit_p99_ms']}ms not under the mean " \
+    f"batched solve {rt['miss_solve_ms_mean']}ms"
 print("smoke gates: fused-cap + fused-out parity/dispatch/extraction "
-      "+ probe rounds OK")
+      "+ probe rounds + runtime (sync-parity/deadlines/coalesce/"
+      "fast-path) OK")
 PY
 echo "smoke: OK"

@@ -63,16 +63,51 @@ def ccap(
     extract_tree: bool = True,
     engine: str = "auto",              # "auto" | "fused" | "host"
     gamma_batch: int = 1,              # pass-1 probe width (fused only)
+    connected: bool = False,           # exclude cross products in pass 2
 ) -> CcapResult:
+    """``connected=True`` restricts pass 2 to the DPccp search space (no
+    cross products): fused runs the connectivity-gated (min,+) sweep,
+    host runs ``dpccp(prune_gamma=gamma)`` — i.e. it implies
+    ``engine_pass2="dpccp"``.  The cap stays the full-lattice C_max
+    optimum; if no cross-product-free plan attains it, the cap is
+    infeasible and the assertion below fires (loosen ``gamma_slack``)."""
     n = q.n
     if engine not in ("auto", "fused", "host"):
         raise ValueError(f"unknown engine {engine!r}")
-    if engine == "fused" and not _fused_combo(engine_pass1, engine_pass2):
+    if connected:
+        if engine_pass2 == "dpsub":
+            engine_pass2 = "dpccp"
+        if engine_pass2 != "dpccp":
+            raise ValueError("connected C_cap means DPccp pass-2 "
+                             "semantics")
+        fusable = (engine_pass1 == "dpconv" and not q.hyperedges
+                   and q.is_connected(q.full_mask))
+        if engine == "fused" and not fusable:
+            raise ValueError("the fused connected C_cap program needs "
+                             "dpconv pass 1 and a connected simple-edge "
+                             "graph")
+        if engine in ("fused", "auto") and fusable:
+            fc = engine_mod.fused_ccap(
+                np.asarray(card, np.float64)[None, :], n,
+                gamma_slack=gamma_slack, extract_tree=extract_tree,
+                gamma_batch=gamma_batch, qs=[q])
+            cout = float(fc.couts[0])
+            assert np.isfinite(cout), \
+                "connected cap infeasible — no cross-product-free plan " \
+                "attains gamma; raise gamma_slack"
+            return CcapResult(gamma=float(fc.gammas[0]), cout=cout,
+                              tree=fc.trees[0],
+                              passes={"pass1_fsc_passes": fc.rounds},
+                              engine="fused", dispatches=fc.dispatches)
+        # fall through to the host pipeline (engine_pass2 == "dpccp")
+    elif engine == "fused" and not _fused_combo(engine_pass1,
+                                                engine_pass2):
         raise ValueError("the fused C_cap program implements the "
                          "dpconv/dpsub pass combination; other passes "
                          "run on engine='host'")
-    use_fused = engine == "fused" or (
-        engine == "auto" and _fused_combo(engine_pass1, engine_pass2))
+    use_fused = not connected and (
+        engine == "fused" or (
+            engine == "auto" and _fused_combo(engine_pass1, engine_pass2)))
     if use_fused:
         fc = engine_mod.fused_ccap(
             np.asarray(card, np.float64)[None, :], n,

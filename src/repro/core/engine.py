@@ -154,6 +154,13 @@ def get_executable(n: int, B: int, C: int, backend: str = "xla",
         fn = lattice.build_cap_program(n, direct_layers, backend, extract,
                                        gamma_batch)
         args.append(jax.ShapeDtypeStruct((), jnp.float64))
+    elif cost == "cap_conn":
+        # the no-cross-products cap: pass 2 under connected-split masks
+        # (the same ``conn`` input the out program consumes)
+        fn = lattice.build_cap_program(n, direct_layers, backend, extract,
+                                       gamma_batch, connected=True)
+        args.append(jax.ShapeDtypeStruct((), jnp.float64))
+        args.append(jax.ShapeDtypeStruct((B, 1 << n), jnp.bool_))
     elif cost == "out":
         # the connected C_out program has no search loop and no candidate
         # table: its inputs are the cardinality tables and the per-query
@@ -375,7 +382,8 @@ def fused_out(qs: list, cards: np.ndarray, n: int,
 def fused_ccap(cards: np.ndarray, n: int, gamma_slack: float = 1.0,
                direct_layers: int = 4, extract_tree: bool = True,
                backend: str = "xla",
-               gamma_batch: int = 1) -> FusedCapSolve:
+               gamma_batch: int = 1,
+               qs: "list | None" = None) -> FusedCapSolve:
     """Solve B same-``n`` C_cap instances (Sec. 8) in ONE device
     dispatch: pass-1 gamma search, gamma-pruned (min,+) C_out pass, and
     witness-tree extraction all inside the same program.
@@ -383,6 +391,15 @@ def fused_ccap(cards: np.ndarray, n: int, gamma_slack: float = 1.0,
     Caps, C_out values and trees are bit-identical to the host pipeline
     (``dpconv_max`` pass 1 + ``baselines.dpsub(mode="out",
     prune_gamma=gamma)`` + ``extract_tree_out``).
+
+    ``qs`` switches pass 2 onto the *connected* (min,+) sweep — the
+    no-cross-products cap: the B query graphs' connected-subset masks
+    gate every split exactly like ``fused_out``, so the search space is
+    DPccp's pruned by gamma; bit-identical to ``dpconv_max`` +
+    ``dpccp(prune_gamma=gamma)`` + ``extract_tree_out``.  Requires
+    connected simple-edge graphs.  A cap the connected space cannot
+    attain yields ``cout = +inf`` (the host pipeline's behavior); the
+    caller decides whether that is an error.
     """
     cards = np.asarray(cards, np.float64)
     if cards.ndim == 1:
@@ -391,12 +408,28 @@ def fused_ccap(cards: np.ndarray, n: int, gamma_slack: float = 1.0,
     assert size == 1 << n and n >= 2
     cards_pad, cand_pad, hi0, Bp, C = _pad_candidates(cards, n)
 
+    extra = ()
+    cost = "cap"
+    if qs is not None:
+        from repro.core.dpccp import connectivity_masks
+
+        assert len(qs) == B
+        conn = np.stack([connectivity_masks(q) for q in qs])
+        if not conn[:, -1].all():
+            raise ValueError("the connected C_cap pass requires "
+                             "connected query graphs (DPccp excludes "
+                             "cross products)")
+        conn_pad = conn if Bp == B else np.concatenate(
+            [conn, np.repeat(conn[:1], Bp - B, axis=0)], axis=0)
+        extra = (jnp.asarray(conn_pad),)
+        cost = "cap_conn"
+
     exe = get_executable(n, Bp, C, backend, direct_layers, extract_tree,
-                         "cap", gamma_batch)
+                         cost, gamma_batch)
     disp0 = _STATS.dispatches
     rec0 = jointree.recursive_extractions()
     out = _run(exe, jnp.asarray(cards_pad), jnp.asarray(cand_pad),
-               jnp.asarray(hi0), jnp.float64(gamma_slack))
+               jnp.asarray(hi0), jnp.float64(gamma_slack), *extra)
     trees = [None] * B
     if extract_tree:
         gamma, cout, nodes, lidx, rounds = out

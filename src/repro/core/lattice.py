@@ -535,7 +535,8 @@ def build_out_program(n: int, extract: bool):
 
 
 def build_cap_program(n: int, direct_layers: int, backend: str,
-                      extract: bool, gamma_batch: int = 1):
+                      extract: bool, gamma_batch: int = 1,
+                      connected: bool = False):
     """The whole-solve C_cap program (paper Sec. 8, both passes fused):
     ``(cards, cand, hi0, slack) -> (gamma, cout[, nodes, lidx], rounds)``.
 
@@ -544,12 +545,24 @@ def build_cap_program(n: int, direct_layers: int, backend: str,
     the gamma-slack gate; pass 3 extracts the C_out witness tree — all
     inside one dispatch.  ``slack`` is the Sec. 11 resource-aware knob
     (gamma = slack · gamma*).
+
+    ``connected=True`` is the no-cross-products cap: the program grows a
+    ``conn`` input (the per-query connected-subset masks
+    ``build_out_program`` consumes) and pass 2 runs the *connected*
+    (min,+) sweep under the combined ``gamma-gate & connected`` mask —
+    the DPccp search space pruned by the cap.  Bit-identical to the host
+    pipeline ``dpconv_max`` + ``dpccp(prune_gamma=gamma)``: a split half
+    over gamma carries dp = +inf in both forms, so masking splits by the
+    combined gate adds no pair the enumerator would score differently.
+    NB: the cap is still the *full-lattice* C_max optimum (matching the
+    host pipeline), which a cross-product-free plan may not attain —
+    ``cout`` is then +inf, exactly like the host's pruned enumeration.
     """
     pc_np = popcounts(n)
     tfm = transforms(backend)
     G = gamma_batch
 
-    def fn(cards, cand, hi0, slack):
+    def fn(cards, cand, hi0, slack, conn=None):
         pc = jnp.asarray(pc_np, dtype=jnp.int32)
         gate_of = _gate_builder(cards, pc, tfm.dtype)
         hi, _, rounds = _fused_search(cards, cand, hi0, n, direct_layers,
@@ -557,7 +570,10 @@ def build_cap_program(n: int, direct_layers: int, backend: str,
         gamma = jnp.take_along_axis(cand, hi[:, None], axis=1)[:, 0]
         gamma = gamma * slack
         gate_ok = (cards <= gamma[:, None]) | (pc < 2)
-        dpv = minplus_value_layers(cards, gate_ok, n)
+        if connected:
+            dpv = minplus_connected_layers(cards, gate_ok & conn, n)
+        else:
+            dpv = minplus_value_layers(cards, gate_ok, n)
         cout = dpv[..., -1]
         if not extract:
             return gamma, cout, rounds

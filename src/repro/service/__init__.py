@@ -7,24 +7,31 @@ examples, benchmarks):
 
 ::
 
-            requests (QueryGraph, card, cost, budget, arrival)
-                                 |
-     +---------------------------v----------------------------+
-     |  server.PlanServer        micro-batching request loop  |
-     |                           throughput / latency stats   |
-     |   +----------+   +-----------+   +------------------+  |
-     |   | canon    |-->| cache     |-->| router            | |
-     |   | WL canon |   | LRU,      |   | (n, density, cost,| |
-     |   | labeling |   | relabel-  |   |  budget) ->       | |
-     |   | + key    |   | aware hits|   | method + lane     | |
-     |   +----------+   +-----------+   +---------+--------+  |
-     |                                            |           |
-     |                 +--------------------------+---+       |
-     |                 |  batch.BatchedSolver         |       |
-     |                 |  same-n stacking, (B, 2^n)   |       |
-     |                 |  lattice sweeps, Pallas tier |       |
-     |                 +------------------------------+       |
-     +--------------------------------------------------------+
+       requests (QueryGraph, card, cost, budget, SLO class, arrival)
+                |                                  |
+         sync: serve() / plan_one()         async: plan_async()
+                |                                  |
+     +----------v----------------------------------v------------+
+     |  runtime.ServingRuntime   event-driven scheduler         |
+     |  (Wall/Virtual clock)     fast path · coalesce · shed    |
+     |                           per-(n, cost) admission queues |
+     |                           EWMA-adaptive batch former     |
+     +---------------------------+----------------------------+
+     |  server.PlanServer        | solve path + telemetry      |
+     |   +----------+   +-----------+   +------------------+   |
+     |   | canon    |-->| cache     |-->| router            |  |
+     |   | WL canon |   | LRU,      |   | (n, density, cost,|  |
+     |   | labeling |   | relabel-  |   |  budget) ->       |  |
+     |   | + key    |   | aware hits|   | method + lane     |  |
+     |   +----------+   +-----------+   +---------+--------+   |
+     |                                            |            |
+     |                 +--------------------------+---+        |
+     |                 |  batch.BatchedSolver         |        |
+     |                 |  same-n stacking, (B, 2^n)   |        |
+     |                 |  submit/collect overlap,     |        |
+     |                 |  lattice sweeps, Pallas tier |        |
+     |                 +------------------------------+        |
+     +---------------------------------------------------------+
                                  |
           repro.core  (dpconv_max_batch / optimize / layered DP)
           repro.kernels (batched zeta/Moebius Pallas kernels)
@@ -50,10 +57,18 @@ examples, benchmarks):
   budget) -> (method, lane, params), with an EWMA latency model bucketed
   per (method, engine[:cap], topology-class) and deadline degradation
   exact -> approx -> GOO.
-* ``server``   — the micro-batching loop tying it together, plus
-  throughput counters, latency histograms, and ``prewarm`` (compile
-  every fused executable bucket the configuration can hit before
-  traffic arrives).
+* ``runtime``  — the async deadline-aware scheduler: pluggable
+  Wall/Virtual clock, per-request SLO classes, per-(n, cost) admission
+  queues with an EWMA-adaptive micro-batch former, a cache-hit fast
+  path that overtakes in-flight batched misses, relabeling-aware
+  join-on-completion coalescing, and backpressure/deadline shedding
+  with per-class telemetry.  Responses are bit-identical to the sync
+  path under any interleaving.
+* ``server``   — ties it together: the sync ``serve`` driver (a thin
+  loop over the runtime on a VirtualClock), the awaitable
+  ``plan_async`` front end, throughput counters, latency histograms,
+  and ``prewarm`` (compile every fused executable bucket the
+  configuration can hit before traffic arrives).
 * ``workload`` — request-stream generators: synthetic (topology ×
   cardinality-regime templates, Zipf repeats, random relabelings,
   Poisson arrivals) and the einsum contraction-log replay lane
@@ -62,11 +77,16 @@ examples, benchmarks):
 Benchmark: ``benchmarks/serve_bench.py`` (``--quick`` for the CI gate in
 ``scripts/smoke.sh``).  Demo: ``examples/planner_demo.py``.
 """
-from repro.service.batch import BatchedSolver, BatchPolicy  # noqa: F401
+from repro.service.batch import (BatchedSolver, BatchPolicy,  # noqa: F401
+                                 SolveHandle)
 from repro.service.cache import CachedPlan, CacheStats, PlanCache  # noqa: F401
 from repro.service.canon import (CanonicalForm, canonicalize,  # noqa: F401
                                  relabel_tree, topology_signature)
 from repro.service.router import Route, Router, RouterConfig  # noqa: F401
+from repro.service.runtime import (Clock, RuntimeConfig,  # noqa: F401
+                                   RuntimeStats, ServingRuntime,
+                                   SLOClass, Ticket, VirtualClock,
+                                   WallClock)
 from repro.service.server import (LatencyHistogram, PlanRequest,  # noqa: F401
                                   PlanResponse, PlanServer, ServeStats)
 from repro.service.workload import (WorkloadSpec, make_query,  # noqa: F401

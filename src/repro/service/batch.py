@@ -124,12 +124,39 @@ def _unpack(item):
     return q, card, cost, tag
 
 
+@dataclasses.dataclass
+class SolveHandle:
+    """A submitted-but-not-yet-collected batched solve.
+
+    ``submit`` captures the work; ``collect`` executes it (and is where
+    ``last_timings`` is refreshed).  The split exists for the async
+    runtime (``repro.service.runtime``): its executor can carry the
+    handle onto a worker thread and run ``collect`` there, so the
+    scheduler keeps admitting requests and forming the NEXT micro-batch
+    while the current dispatch executes — batch formation overlaps the
+    in-flight solve instead of serializing behind it.
+    """
+    items: list
+    extract_tree: bool = True
+    results: "list | None" = None
+    timings: "list | None" = None        # this solve's last_timings slice
+
+
 class BatchedSolver:
     """Groups micro-batch items by ``(n, cost)`` and dispatches the
     batched lattice programs."""
 
     def __init__(self, policy: "BatchPolicy | None" = None):
+        import threading
         self.policy = policy or BatchPolicy()
+        # one solver models ONE solve lane; the async runtime's worker
+        # thread and a sync front end (plan_one / serve) on the same
+        # server may both reach solve(), so the lane is a real lock —
+        # it also keeps last_timings snapshots from interleaving (an
+        # interleaved snapshot would feed another solve's durations
+        # into the router's EWMA).  RLock: collect() holds it across
+        # solve() plus the timings snapshot.
+        self._lock = threading.RLock()
         self.batches_run = 0
         self.queries_batched = 0
         # cumulative solver-lane totals (all chunks ever solved): the
@@ -239,10 +266,34 @@ class BatchedSolver:
             res.meta["chunk"] = len(qs)
         return results
 
+    # ------------------------------------------------- submit / collect
+    def submit(self, items: list, extract_tree: bool = True
+               ) -> SolveHandle:
+        """Stage a batched solve without running it.  Pair with
+        ``collect`` — possibly from another thread — to execute it; the
+        runtime uses this split to overlap batch formation with the
+        executing dispatch."""
+        return SolveHandle(items=list(items), extract_tree=extract_tree)
+
+    def collect(self, handle: SolveHandle) -> list:
+        """Execute (once) and return a submitted solve's results.  The
+        handle's ``timings`` snapshots this solve's ``last_timings``
+        rows, so concurrent collectors don't race on the shared list."""
+        with self._lock:
+            if handle.results is None:
+                handle.results = self.solve(
+                    handle.items, extract_tree=handle.extract_tree)
+                handle.timings = list(self.last_timings)
+        return handle.results
+
     def solve(self, items: list, extract_tree: bool = True) -> list:
         """``items``: list of (q, card[, cost[, tag]]) tuples; cost is
         "max", "cap" or "out" (all three lattice batch-lane costs).
         Returns PlanResults aligned with the input order."""
+        with self._lock:
+            return self._solve_locked(items, extract_tree)
+
+    def _solve_locked(self, items: list, extract_tree: bool) -> list:
         import time
 
         groups: dict = {}
@@ -270,6 +321,11 @@ class BatchedSolver:
                 dt = time.perf_counter() - t0
                 self.total_solve_s += dt
                 self.total_solved += chunk
-                self.last_timings.append(
-                    (n, chunk, dt, self.policy.engine, cost, tags))
+                # attribute to the engine that actually ran, not the
+                # policy ask — a fused-policy out chunk can fall back to
+                # the host enumerator (disconnected/hyperedge member),
+                # whose #ccp-scaling latency must not price the fused
+                # EWMA coefficient
+                eng = results[0].meta.get("engine", self.policy.engine)
+                self.last_timings.append((n, chunk, dt, eng, cost, tags))
         return out

@@ -180,24 +180,20 @@ class Router:
             prev = self._coeff.get(key, self._coeff[method])
             self._coeff[key] = (1 - a) * prev + a * obs
 
-    # ----------------------------------------------------------- policy
-    def _admit(self, method: str, n: int, budget: "float | None",
-               lane: str = "", cost: str = "", topo: str = "") -> bool:
-        if budget is None:
-            return True
-        # price the engine that will actually run.  The engine hint
-        # describes the serving solver; cap requests get their own
-        # ":cap" namespace (the two-pass pipeline does strictly more
-        # work than a plain max solve), and past the fused ceiling the
-        # single-lane cap pipeline is the host one regardless of hint.
-        engine = ""
+    def engine_tag(self, method: str, n: int, lane: str = "",
+                   cost: str = "") -> str:
+        """The EWMA engine namespace of the engine that will actually
+        run ``method`` for this (n, lane, cost).  The engine hint
+        describes the serving solver; cap requests get their own
+        ":cap" namespace (the two-pass pipeline does strictly more
+        work than a plain max solve), and past the fused ceiling the
+        single-lane cap pipeline is the host one regardless of hint."""
         if cost == "cap" and method == "dpconv":
             engine = self.engine_hint.get(method, "")
             if engine and n > self.config.fused_cap_max_n:
                 engine = "host"
-            if engine:
-                engine += ":cap"
-        elif cost == "out" and method == "dpccp":
+            return engine + ":cap" if engine else ""
+        if cost == "out" and method == "dpccp":
             # only the batch lane runs the fused connected-C_out
             # program; every single-lane dpccp request (tiny n, past the
             # ceiling, hyperedges) runs the host enumerator, whose
@@ -207,12 +203,29 @@ class Router:
             engine = self.engine_hint.get(method, "")
             if engine and lane != "batch":
                 engine = "host"
-            if engine:
-                engine += ":out"
-        elif lane == "batch":
-            engine = self.engine_hint.get(method, "")
-        return self.estimate(method, n, engine=engine,
-                             topo=topo) <= budget
+            return engine + ":out" if engine else ""
+        if lane == "batch":
+            return self.engine_hint.get(method, "")
+        return ""
+
+    def price(self, method: str, n: int, lane: str = "", cost: str = "",
+              topo: str = "") -> float:
+        """Deadline-aware latency price of running ``method`` on this
+        request: the EWMA estimate under the engine attribution the
+        serving tier will actually use.  This is what admission compares
+        to the budget — and what the async runtime's batch former and
+        shedding policy consume (``repro.service.runtime``)."""
+        return self.estimate(method, n,
+                             engine=self.engine_tag(method, n, lane,
+                                                    cost),
+                             topo=topo)
+
+    # ----------------------------------------------------------- policy
+    def _admit(self, method: str, n: int, budget: "float | None",
+               lane: str = "", cost: str = "", topo: str = "") -> bool:
+        if budget is None:
+            return True
+        return self.price(method, n, lane, cost, topo) <= budget
 
     def route(self, q: QueryGraph, cost: str,
               latency_budget: "float | None" = None,

@@ -1,0 +1,756 @@
+"""Async deadline-aware serving runtime — the scheduler over PlanServer.
+
+``PlanServer._process`` answers "plan this micro-batch"; this module
+answers "keep answering under load".  The PR-1 serving loop was
+synchronous: a sub-millisecond cache hit queued behind a multi-second
+in-flight batched miss on the same lane (BENCH_serve.json: fused p50
+0.26 ms vs host p99 385 ms).  Mancini et al. (arXiv:2202.13511) make
+the case that optimizer throughput at scale is a *scheduling* problem
+as much as an algorithmic one; this runtime is that scheduling layer on
+top of the one-dispatch fused engines of PRs 2-4:
+
+* **pluggable clock** — every scheduling decision reads a ``Clock``.
+  ``WallClock`` serves real traffic; ``VirtualClock`` makes every
+  decision deterministically testable in this container (the scenario
+  and property tests in tests/test_runtime.py drive it event by event).
+  The runtime never sleeps: it exposes ``next_event_time`` and the
+  driver advances.
+* **SLO classes & deadlines** — ``PlanRequest.slo`` names a class
+  (``RuntimeConfig.slo_classes``) whose budget prices an absolute
+  per-request deadline at admission; ``latency_budget`` (the PR-1 knob)
+  still works and takes precedence.  Telemetry is kept per class.
+* **admission queues per (n, cost) bucket** with an **adaptive batch
+  former**: a bucket closes on size (``max_batch``) or timeout, where
+  the timeout is priced per bucket from the router's existing
+  per-(method, engine[:cost], topology-class) EWMA — wait at most
+  ``wait_solve_frac`` of the estimated solve (waiting longer than the
+  solve costs more than batching saves) and never more than the
+  tightest queued deadline can afford after the solve itself and the
+  executor backlog are budgeted.
+* **cache-hit fast path** — canonicalized hits answer immediately at
+  admission, overtaking every in-flight batched miss (counted in
+  ``stats.overtakes``).
+* **relabeling-aware join-on-completion** — a miss whose full cache key
+  (canonical key, cost, method, params) matches a queued or in-flight
+  solve attaches to it instead of spawning a duplicate; on completion
+  every joined ticket replays the one solve through its *own* inverse
+  permutation, so isomorphic duplicates in flight collapse into one
+  dispatch (``stats.coalesced``).
+* **backpressure & deadline-aware shedding** — past ``max_pending``
+  queued tickets new misses are refused outright; a priced-unmeetable
+  deadline is refused or downgraded to the GOO best-effort lane per the
+  SLO class policy.  Downgraded responses void the deadline contract
+  (they are best-effort by definition); ``deadline_misses`` counts only
+  promised-and-missed completions.
+
+Execution: solves go through ``BatchedSolver.submit`` / ``collect`` so
+batch formation overlaps the executing dispatch.  The ``inline``
+executor runs the solve at start and models occupancy in virtual time
+(a single-executor queue: work starts when the executor frees, exactly
+like the worker thread it stands in for); the ``thread`` executor runs
+``collect`` on a real worker thread so a WallClock front end keeps
+admitting — and fast-path answering — while a dispatch executes.
+
+Bit-parity contract: the runtime reuses PlanServer's canonicalize /
+route / cache / solve pieces verbatim, so responses are bit-identical
+(optima, DP tables, trees) to synchronous ``PlanServer.serve`` on the
+same workload under ANY interleaving — asserted by the property test
+and the smoke.sh runtime gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time
+
+import numpy as np
+
+from repro.service.cache import PlanCache
+from repro.service import router as router_mod
+from repro.service.canon import canonicalize
+
+
+# ------------------------------------------------------------------ clocks
+class Clock:
+    """The runtime's single time source.  ``now`` is monotonic seconds;
+    ``advance`` charges elapsed work time (a no-op on the wall clock,
+    where time passes by itself)."""
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def advance(self, dt: float) -> None:
+        raise NotImplementedError
+
+
+class WallClock(Clock):
+    def __init__(self):
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def advance(self, dt: float) -> None:
+        pass                        # real time advances on its own
+
+
+class VirtualClock(Clock):
+    """Deterministic manual time: the discrete-event tests and the sync
+    ``PlanServer.serve`` driver own every tick."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError("time moves forward")
+        self._t += dt
+
+    def advance_to(self, t: float) -> None:
+        self._t = max(self._t, float(t))
+
+
+# ------------------------------------------------------------- SLO classes
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """A service-level class: the relative deadline budget a request of
+    this class is promised, and what to do when admission prices that
+    promise as unmeetable."""
+    name: str
+    budget_s: "float | None"            # None: best effort, no deadline
+    on_unmeetable: str = "downgrade"    # "downgrade" | "refuse"
+
+    def __post_init__(self):
+        if self.on_unmeetable not in ("downgrade", "refuse"):
+            raise ValueError(self.on_unmeetable)
+
+
+def default_slo_classes() -> dict:
+    return {
+        "interactive": SLOClass("interactive", 0.5),
+        "standard": SLOClass("standard", 5.0),
+        "batch": SLOClass("batch", None),
+    }
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    max_batch: int = 16
+    max_wait: float = 0.005          # hard cap on batch-forming wait
+    wait_solve_frac: float = 0.5     # wait <= frac * priced solve time
+    deadline_safety: float = 2.0     # price estimates with this margin
+    max_pending: int = 1 << 20       # backpressure: refuse misses past it
+    slo_classes: dict = dataclasses.field(
+        default_factory=default_slo_classes)
+
+
+# --------------------------------------------------------------- telemetry
+@dataclasses.dataclass
+class ClassStats:
+    served: int = 0
+    deadline_misses: int = 0
+    downgraded: int = 0
+    shed: int = 0
+    latency: "object" = None        # LatencyHistogram, lazily attached
+
+    def summary(self) -> dict:
+        h = self.latency
+        return {"served": self.served,
+                "deadline_misses": self.deadline_misses,
+                "downgraded": self.downgraded, "shed": self.shed,
+                "p50_ms": round(h.percentile(50) * 1e3, 4),
+                "p95_ms": round(h.percentile(95) * 1e3, 4),
+                "p99_ms": round(h.percentile(99) * 1e3, 4)}
+
+
+@dataclasses.dataclass
+class RuntimeStats:
+    submitted: int = 0
+    served: int = 0
+    fast_path_hits: int = 0
+    overtakes: int = 0          # fast-path answers with a solve in flight
+    coalesced: int = 0          # tickets joined onto an in-flight/queued solve
+    downgraded: int = 0         # deadline-unmeetable -> best-effort lane
+    shed: int = 0               # refused: unmeetable deadline (refuse class)
+    shed_backpressure: int = 0  # refused: pending queue over max_pending
+    batches: int = 0            # batch-lane works started
+    batched_items: int = 0      # solve items across those works (occupancy)
+    solve_s: float = 0.0        # batched-miss execution seconds
+    per_class: dict = dataclasses.field(default_factory=dict)
+    hit_latency: "object" = None    # fast-path LatencyHistogram (lazy)
+
+    @property
+    def mean_batch_occupancy(self) -> float:
+        return self.batched_items / self.batches if self.batches else 0.0
+
+    @property
+    def coalesce_rate(self) -> float:
+        return self.coalesced / self.submitted if self.submitted else 0.0
+
+    @property
+    def shed_rate(self) -> float:
+        return ((self.shed + self.shed_backpressure) / self.submitted
+                if self.submitted else 0.0)
+
+    @property
+    def deadline_misses(self) -> int:
+        return sum(c.deadline_misses for c in self.per_class.values())
+
+    def klass(self, name: str) -> ClassStats:
+        cs = self.per_class.get(name)
+        if cs is None:
+            from repro.service.server import LatencyHistogram
+            cs = ClassStats(latency=LatencyHistogram())
+            self.per_class[name] = cs
+        return cs
+
+    def hits_hist(self):
+        if self.hit_latency is None:
+            from repro.service.server import LatencyHistogram
+            self.hit_latency = LatencyHistogram()
+        return self.hit_latency
+
+    @property
+    def mean_solve_s(self) -> float:
+        """Mean batched-miss execution time — what a fast-path hit
+        overtakes."""
+        return self.solve_s / self.batches if self.batches else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "submitted": self.submitted, "served": self.served,
+            "fast_path_hits": self.fast_path_hits,
+            "overtakes": self.overtakes, "coalesced": self.coalesced,
+            "coalesce_rate": round(self.coalesce_rate, 4),
+            "downgraded": self.downgraded, "shed": self.shed,
+            "shed_backpressure": self.shed_backpressure,
+            "shed_rate": round(self.shed_rate, 4),
+            "batches": self.batches,
+            "mean_batch_occupancy": round(self.mean_batch_occupancy, 3),
+            "deadline_misses": self.deadline_misses,
+            "solve_s": round(self.solve_s, 4),
+            "miss_solve_ms_mean": round(self.mean_solve_s * 1e3, 4),
+            "hit_p99_ms": round(
+                (self.hit_latency.percentile(99) * 1e3)
+                if self.hit_latency is not None else 0.0, 4),
+            "per_class": {k: v.summary()
+                          for k, v in sorted(self.per_class.items())},
+        }
+
+
+# ----------------------------------------------------------------- tickets
+@dataclasses.dataclass
+class Ticket:
+    """One submitted request's handle: filled in place on completion."""
+    request: "object"                   # PlanRequest
+    form: "object"                      # CanonicalForm
+    route: "object | None" = None       # Route that will/did serve it
+    slo: str = "default"
+    submitted: float = 0.0
+    deadline: "float | None" = None
+    downgraded: bool = False
+    done: bool = False
+    refused: bool = False
+    refuse_reason: str = ""
+    error: "BaseException | None" = None   # solve failure, if any
+    response: "object | None" = None    # PlanResponse (None if refused)
+    completed_at: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.completed_at - self.submitted
+
+
+class _Entry:
+    """One canonical solve unit in a bucket: the leader ticket plus any
+    coalesced followers (same full cache key, different labelings)."""
+
+    __slots__ = ("key", "tickets")
+
+    def __init__(self, key, ticket):
+        self.key = key
+        self.tickets = [ticket]
+
+
+class _Bucket:
+    __slots__ = ("entries", "close_at")
+
+    def __init__(self):
+        self.entries: list = []
+        self.close_at: "float | None" = None
+
+
+class _Work:
+    """A closed batch (or a single-lane solve) in execution."""
+
+    __slots__ = ("kind", "entries", "started", "eta", "results",
+                 "timings", "future", "duration", "error", "est")
+
+    def __init__(self, kind, entries, started):
+        self.kind = kind                 # "batch" | "single"
+        self.entries = entries
+        self.started = started
+        self.eta: "float | None" = None  # completion in clock time
+        self.results = None
+        self.timings = None
+        self.future = None
+        self.duration = 0.0
+        self.error: "BaseException | None" = None
+        self.est = 0.0                   # priced estimate (backlog model)
+
+
+# ------------------------------------------------------------------ runtime
+class ServingRuntime:
+    """Event-driven deadline-aware scheduler over one ``PlanServer``.
+
+    ``executor="inline"`` runs solves on the driving thread and models a
+    single-executor queue in clock time — the deterministic mode the
+    sync ``serve`` driver and the VirtualClock tests use.
+    ``executor="thread"`` runs solves on a worker thread (WallClock
+    serving: the async front end keeps answering hits while a dispatch
+    executes).
+
+    ``duration_fn(kind, info) -> float | None`` overrides how long a
+    piece of work *takes* in clock time (``kind`` in ``{"admit",
+    "solve", "single"}``; ``info`` has ``n``/``cost``/``items`` where
+    known).  ``None`` falls back to the measured wall time — the
+    default, which is what the sync driver and the benchmark use;
+    deterministic tests inject constants.
+    """
+
+    def __init__(self, server, clock: "Clock | None" = None,
+                 config: "RuntimeConfig | None" = None,
+                 duration_fn=None, executor: str = "inline"):
+        if executor not in ("inline", "thread"):
+            raise ValueError(f"unknown executor {executor!r}")
+        self.server = server
+        self.clock = clock or WallClock()
+        self.config = config or RuntimeConfig()
+        self.duration_fn = duration_fn
+        self.executor = executor
+        self.stats = RuntimeStats()
+        self._buckets: dict = {}         # (n, cost) -> _Bucket
+        self._by_key: dict = {}          # cache key -> _Entry (pending+flight)
+        self._inflight: list = []        # _Work being executed / in window
+        self._events: list = []          # heap of (t, seq, kind, payload)
+        self._seq = itertools.count()
+        self._exec_free = 0.0            # single-executor queue, clock time
+        self._pending_tickets = 0
+        self._pool = None                # lazy ThreadPoolExecutor
+
+    # ------------------------------------------------------------ helpers
+    def _charge(self, kind: str, measured: float, info: dict) -> float:
+        """Clock-time cost of a piece of work: the injected duration if
+        a ``duration_fn`` gives one, else the measured wall time."""
+        if self.duration_fn is not None:
+            d = self.duration_fn(kind, info)
+            if d is not None:
+                return float(d)
+        return measured
+
+    def _schedule(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    def next_event_time(self) -> "float | None":
+        while self._events:
+            t, _, kind, payload = self._events[0]
+            if kind == "close":
+                b = self._buckets.get(payload)
+                if b is None or b.close_at is None or b.close_at != t:
+                    heapq.heappop(self._events)   # stale timer
+                    continue
+            return t
+        return None
+
+    def _backlog(self) -> float:
+        """Executor backlog in clock seconds: how long until work
+        started *now* would begin.  Inline mode knows it exactly from
+        the modeled executor queue; thread mode prices the in-flight
+        works' EWMA estimates (their real durations aren't known until
+        the worker finishes them)."""
+        if self.executor == "thread":
+            return sum(w.est for w in self._inflight)
+        return max(0.0, self._exec_free - self.clock.now())
+
+    # ------------------------------------------------------------- submit
+    def submit(self, req) -> Ticket:
+        """Admit one request at ``clock.now()``: fast-path answer,
+        coalesce, enqueue, downgrade or refuse.  Never blocks on a
+        solve."""
+        srv = self.server
+        now = self.clock.now()
+        t_wall = time.perf_counter()
+        self.stats.submitted += 1
+
+        card = np.asarray(req.card, np.float64)
+        form = canonicalize(req.q, card)
+        slo = None
+        if getattr(req, "slo", None):
+            slo = self.config.slo_classes.get(req.slo)
+            if slo is None:
+                raise ValueError(f"unknown SLO class {req.slo!r}")
+        ticket = Ticket(request=req, form=form, submitted=now,
+                        slo=slo.name if slo else "default")
+        budget = req.latency_budget
+        if budget is None and slo is not None:
+            budget = slo.budget_s
+        if budget is not None:
+            ticket.deadline = now + budget
+
+        # ---- the shared admission ladder (same helpers as _process, so
+        # the sync/async bit-parity contract has ONE implementation):
+        # primary-route cache probe first — a cached plan replays in
+        # ~zero time, overtaking any in-flight miss
+        primary, resp = srv._primary_probe(req, form)
+        ticket.route = primary
+        if resp is not None:
+            self._finish_ticket(
+                ticket, resp, fast=True,
+                admit_s=self._charge(
+                    "admit", time.perf_counter() - t_wall,
+                    {"n": form.q.n, "cost": req.cost}))
+            return ticket
+
+        # ---- deadline-aware routing (the PR-1 degrade ladder, plus the
+        # runtime's backlog-aware pricing on top)
+        route = primary
+        if budget is not None:
+            route, resp = srv._budget_reroute(req, form, budget, primary)
+            if "deadline" not in route.reason and route.lane == "batch":
+                # the router prices the solve alone; the runtime also
+                # knows the executor backlog and the batch wait it
+                # would add — refuse/degrade if the total cannot land
+                est = srv.router.price(
+                    route.method, form.q.n, route.lane, req.cost,
+                    router_mod.topo_class(form.signature))
+                need = self.config.deadline_safety * est + self._backlog()
+                if need > budget:
+                    route, resp = srv._budget_reroute(req, form, 1e-300,
+                                                      primary)
+            if "deadline" in route.reason:
+                if resp is None and slo is not None \
+                        and slo.on_unmeetable == "refuse":
+                    # (a cached degraded plan beats refusing: it lands
+                    # inside any deadline for free)
+                    return self._refuse(ticket, "deadline unmeetable")
+                ticket.downgraded = True
+                self.stats.downgraded += 1
+                self.stats.klass(ticket.slo).downgraded += 1
+                srv.stats.deadline_fallbacks += 1
+            if resp is not None:
+                ticket.route = route
+                self._finish_ticket(
+                    ticket, resp, fast=True,
+                    admit_s=self._charge(
+                        "admit", time.perf_counter() - t_wall,
+                        {"n": form.q.n, "cost": req.cost}))
+                return ticket
+        ticket.route = route
+
+        # ---- backpressure: a bounded admission queue
+        if self._pending_tickets >= self.config.max_pending:
+            self.stats.shed_backpressure += 1
+            return self._refuse(ticket, "backpressure: queue full",
+                                backpressure=True)
+
+        self.clock.advance(self._charge(
+            "admit", time.perf_counter() - t_wall,
+            {"n": form.q.n, "cost": req.cost}))
+
+        if srv.enable_batch and srv._batch_eligible(route, req.cost):
+            self._enqueue(ticket)
+        else:
+            self._start_single(ticket)
+        return ticket
+
+    def _refuse(self, ticket: Ticket, reason: str,
+                backpressure: bool = False) -> Ticket:
+        ticket.done = True
+        ticket.refused = True
+        ticket.refuse_reason = reason
+        ticket.completed_at = self.clock.now()
+        if not backpressure:
+            self.stats.shed += 1
+        self.stats.klass(ticket.slo).shed += 1
+        return ticket
+
+    # -------------------------------------------------- queue & coalesce
+    def _enqueue(self, ticket: Ticket) -> None:
+        req, form, route = ticket.request, ticket.form, ticket.route
+        key = PlanCache.make_key(form.key, req.cost, route.method,
+                                 route.params)
+        nc = (form.q.n, req.cost)
+        entry = self._by_key.get(key)
+        if entry is not None:
+            # join-on-completion: the same canonical solve is already
+            # queued or in flight — ride it (each ticket still replays
+            # the result through its own inverse permutation).  A
+            # follower with a tighter deadline still gets to shrink the
+            # bucket's wait: its headroom binds like a leader's would.
+            entry.tickets.append(ticket)
+            self.stats.coalesced += 1
+            self._pending_tickets += 1
+            bucket = self._buckets.get(nc)
+            if bucket is not None and entry in bucket.entries:
+                self._tighten(bucket, nc, ticket)
+            return
+        entry = _Entry(key, ticket)
+        self._by_key[key] = entry
+        self._pending_tickets += 1
+        bucket = self._buckets.get(nc)
+        if bucket is None:
+            bucket = self._buckets[nc] = _Bucket()
+        bucket.entries.append(entry)
+        if len(bucket.entries) >= self.config.max_batch:
+            self._close_bucket(nc)
+            return
+        self._tighten(bucket, nc, ticket)
+
+    def _tighten(self, bucket: _Bucket, nc, ticket: Ticket) -> None:
+        close_at = self.clock.now() + self._wait_budget(ticket)
+        if bucket.close_at is None or close_at < bucket.close_at:
+            bucket.close_at = close_at
+            self._schedule(close_at, "close", nc)
+
+    def _wait_budget(self, ticket: Ticket) -> float:
+        """How long this ticket can afford to sit in the batch former:
+        at most ``wait_solve_frac`` of the priced solve (per-bucket
+        adaptive: waiting longer than the solve itself costs more than
+        batching saves), hard-capped by ``max_wait``, and never eating
+        the deadline budget after solve + backlog are accounted."""
+        route, form = ticket.route, ticket.form
+        est = self.server.router.price(
+            route.method, form.q.n, route.lane, ticket.request.cost,
+            router_mod.topo_class(form.signature))
+        w = min(self.config.max_wait, self.config.wait_solve_frac * est)
+        if ticket.deadline is not None:
+            headroom = ((ticket.deadline - self.clock.now())
+                        - self.config.deadline_safety * est
+                        - self._backlog())
+            w = min(w, max(headroom, 0.0))
+        return max(w, 0.0)
+
+    # --------------------------------------------------------- execution
+    def _close_bucket(self, nc) -> None:
+        bucket = self._buckets.pop(nc, None)
+        if bucket is None or not bucket.entries:
+            return
+        n, cost = nc
+        entries = bucket.entries
+        self.stats.batches += 1
+        self.stats.batched_items += len(entries)
+        work = _Work("batch", entries, self.clock.now())
+        items = [(e.tickets[0].form.q, e.tickets[0].form.card,
+                  cost,
+                  router_mod.topo_class(e.tickets[0].form.signature))
+                 for e in entries]
+        self._start(work, items)
+
+    def _start_single(self, ticket: Ticket) -> None:
+        entry = _Entry(None, ticket)
+        self._pending_tickets += 1
+        work = _Work("single", [entry], self.clock.now())
+        self._start(work, None)
+
+    def _start(self, work: _Work, items) -> None:
+        self._inflight.append(work)
+        lead = work.entries[0].tickets[0]
+        work.est = self.server.router.price(
+            lead.route.method, lead.form.q.n, lead.route.lane,
+            lead.request.cost, router_mod.topo_class(lead.form.signature))
+        if self.executor == "thread":
+            work.future = self._ensure_pool().submit(
+                self._execute, work, items)
+            return
+        t_sched = self.clock.now()      # scheduling time, pre-execution
+        measured = self._execute(work, items)
+        info = {"items": len(work.entries),
+                "n": lead.form.q.n, "cost": lead.request.cost}
+        kind = "solve" if work.kind == "batch" else "single"
+        dur = self._charge(kind, measured, info)
+        work.duration = dur
+        # single-executor queue in clock time: work starts when the
+        # executor frees, exactly like the worker thread it stands for.
+        # On a VirtualClock now() hasn't moved during execution, so eta
+        # = start + dur; on a WallClock the solve's wall time already
+        # elapsed — the max() keeps it from being charged twice.
+        start = max(t_sched, self._exec_free)
+        work.eta = max(self.clock.now(), start + dur)
+        self._exec_free = work.eta
+        self._schedule(work.eta, "finish", work)
+
+    def _execute(self, work: _Work, items) -> float:
+        """Run the solve (caller thread or worker thread); returns the
+        measured wall seconds.  A solve failure is CONTAINED: it lands
+        on ``work.error`` (finalize fails the work's tickets loudly and
+        cleans up) instead of wedging the runtime — an exception must
+        never leave a joined entry stuck in ``_by_key`` collecting
+        coalescers that can never complete."""
+        srv = self.server
+        t0 = time.perf_counter()
+        try:
+            if work.kind == "batch":
+                handle = srv.solver.submit(items)
+                work.results = srv.solver.collect(handle)
+                work.timings = handle.timings
+            else:
+                ticket = work.entries[0].tickets[0]
+                work.results = [srv._solve_single(
+                    ticket.form.q, ticket.form.card, ticket.request.cost,
+                    ticket.route)]
+        except BaseException as e:       # noqa: BLE001 — contained, re-raised
+            work.error = e               # at the front end per ticket
+        return time.perf_counter() - t0
+
+    def _ensure_pool(self):
+        if self._pool is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._pool = ThreadPoolExecutor(
+                max_workers=1,
+                thread_name_prefix="plan-runtime-solver")
+        return self._pool
+
+    # -------------------------------------------------------- completion
+    def _finalize(self, work: _Work) -> None:
+        srv = self.server
+        self._inflight.remove(work)
+        now = self.clock.now()
+        if work.error is not None:
+            for entry in work.entries:
+                if entry.key is not None:
+                    self._by_key.pop(entry.key, None)
+                for ticket in entry.tickets:
+                    self._pending_tickets -= 1
+                    ticket.error = work.error
+                    self._refuse(ticket,
+                                 f"solve failed: {work.error!r}")
+            return
+        if work.kind == "batch":
+            if work.timings:
+                srv._observe_batch(work.timings)
+            for entry, res in zip(work.entries, work.results):
+                self._complete_entry(entry, float(res.cost), res.tree,
+                                     dict(res.meta), now)
+        else:
+            entry = work.entries[0]
+            ticket = entry.tickets[0]
+            cost_v, tree, meta = work.results[0]
+            srv._observe_single(ticket.route, ticket.form,
+                                ticket.request.cost, work.duration,
+                                meta)
+            self._complete_entry(entry, cost_v, tree, meta, now)
+
+    def _complete_entry(self, entry, cost_v, tree, meta, now) -> None:
+        srv = self.server
+        if entry.key is not None:
+            self._by_key.pop(entry.key, None)
+        for i, ticket in enumerate(entry.tickets):
+            m = dict(meta)
+            if i:
+                m["coalesced"] = True
+            resp = srv._complete(ticket.request, ticket.form,
+                                 ticket.route, cost_v, tree, m,
+                                 insert=(i == 0))
+            self._pending_tickets -= 1
+            self._finish_ticket(ticket, resp)
+
+    def _finish_ticket(self, ticket: Ticket, resp, fast: bool = False,
+                       admit_s: float = 0.0) -> None:
+        if fast:
+            self.clock.advance(admit_s)
+            self.stats.fast_path_hits += 1
+            self.stats.hits_hist().record(max(admit_s, 1e-9))
+            if self._inflight:      # answered past an executing solve
+                self.stats.overtakes += 1
+        ticket.done = True
+        ticket.completed_at = self.clock.now()
+        ticket.response = resp
+        resp.latency = ticket.latency
+        cs = self.stats.klass(ticket.slo)
+        cs.served += 1
+        cs.latency.record(ticket.latency)
+        self.stats.served += 1
+        if (ticket.deadline is not None and not ticket.downgraded
+                and ticket.completed_at > ticket.deadline):
+            cs.deadline_misses += 1
+        if fast:
+            meta = resp.meta
+            meta["fast_path"] = True
+
+    # ------------------------------------------------------------ driving
+    def poll(self) -> int:
+        """Process every event due at (or before) ``clock.now()``, plus
+        any finished worker-thread solves.  Returns the number of events
+        processed."""
+        done = 0
+        if self.executor == "thread":
+            for work in list(self._inflight):
+                if work.future is not None and work.future.done():
+                    work.duration = work.future.result()
+                    work.future = None
+                    self.stats.solve_s += (work.duration
+                                           if work.kind == "batch" else 0)
+                    self._finalize(work)
+                    done += 1
+        now = self.clock.now()
+        while True:
+            t = self.next_event_time()
+            if t is None or t > now:
+                break
+            _, _, kind, payload = heapq.heappop(self._events)
+            if kind == "close":
+                self._close_bucket(payload)
+            else:
+                if payload.kind == "batch":
+                    self.stats.solve_s += payload.duration
+                self._finalize(payload)
+            done += 1
+        return done
+
+    def run_until(self, t: float) -> None:
+        """Advance a ``VirtualClock`` through every event up to ``t``
+        (events fire AT their times, in order), leaving the clock at
+        ``t``."""
+        while True:
+            et = self.next_event_time()
+            if et is None or et > t:
+                break
+            self.clock.advance_to(et)
+            self.poll()
+        self.clock.advance_to(t)
+
+    def flush(self) -> None:
+        """Close every forming bucket now (partial batches included)."""
+        for nc in list(self._buckets):
+            self._close_bucket(nc)
+
+    def drain(self) -> None:
+        """Flush, then run every queued/in-flight piece of work to
+        completion, advancing a VirtualClock through the events (or
+        waiting them out on a WallClock)."""
+        self.flush()
+        while self._inflight or self._events or self._buckets:
+            t = self.next_event_time()
+            if t is not None:
+                if isinstance(self.clock, VirtualClock):
+                    self.clock.advance_to(t)
+                elif t > self.clock.now():
+                    time.sleep(min(t - self.clock.now(), 0.002))
+            elif self.executor == "thread" and self._inflight:
+                time.sleep(2e-4)
+            elif not self._events:
+                if self._buckets:
+                    self.flush()
+                    continue
+                break
+            if self.poll() == 0 and t is None and not self._inflight:
+                break
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None

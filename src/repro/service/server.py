@@ -14,12 +14,17 @@ Request lifecycle (see the package docstring for the architecture sketch):
    -lane misses run the routed core algorithm directly.  Solved plans are
    inserted into the cache in canonical space.
 
-``serve`` drives a whole request stream through a micro-batching loop:
-requests are admitted in arrival order, a batch closes when it reaches
-``max_batch`` or no further arrival lands within ``max_wait`` of the batch
-opening; completion times use a discrete-event clock (simulated Poisson
-arrivals + measured wall-clock solve time), which is what the latency
-histogram and the throughput counters report.
+``serve`` drives a whole request stream to completion as a thin
+synchronous driver over the event-driven scheduler
+(``repro.service.runtime.ServingRuntime``) on a ``VirtualClock``:
+requests are admitted in arrival order, buckets of same-``(n, cost)``
+misses close on size-or-adaptive-timeout, cache hits answer at
+admission, and completion times play out on the discrete-event clock
+(simulated Poisson arrivals + measured wall-clock solve time) — which
+is what the latency histogram and the throughput counters report.  The
+awaitable front end (``plan_async``) shares the same scheduler on a
+``WallClock`` with a worker-thread executor, so sync and async answers
+are bit-identical.
 """
 from __future__ import annotations
 
@@ -48,6 +53,11 @@ class PlanRequest:
     latency_budget: "float | None" = None
     arrival: float = 0.0
     req_id: int = 0
+    # SLO class name (see runtime.RuntimeConfig.slo_classes): prices an
+    # absolute deadline at admission when no explicit latency_budget is
+    # given, and keys the runtime's per-class telemetry + shed policy.
+    # None = best effort (the PR-1 behavior, no deadline).
+    slo: "str | None" = None
 
 
 @dataclasses.dataclass
@@ -207,48 +217,118 @@ class PlanServer:
     def serve(self, requests: "list[PlanRequest]",
               closed_loop: bool = False
               ) -> "tuple[list[PlanResponse], ServeStats]":
-        """Drive a request stream through the micro-batching loop.
+        """Drive a request stream to completion — a thin synchronous
+        driver over the event-driven scheduler
+        (``repro.service.runtime.ServingRuntime``) on a ``VirtualClock``,
+        so the sync and async front ends share one code path and answers
+        stay bit-identical across them.
 
-        ``closed_loop=True`` ignores arrival times (back-to-back batches
-        of ``max_batch``) — the benchmark's max-throughput mode.  The
-        default honors arrivals with a discrete-event clock: batch wait
-        time comes from the simulated arrivals, solve time from the wall
-        clock.
+        ``closed_loop=True`` ignores arrival times (windows of
+        ``max_batch`` requests are admitted and drained back-to-back) —
+        the benchmark's max-throughput mode.  The default honors
+        arrivals with the runtime's discrete-event clock: batch wait and
+        executor queueing play out in virtual time, solve durations come
+        from the wall clock.
         """
+        from repro.service.runtime import (RuntimeConfig, ServingRuntime,
+                                           VirtualClock)
+
         reqs = sorted(requests, key=lambda r: r.arrival)
-        by_req: dict = {}
-        clock = 0.0
-        wall = 0.0
-        i = 0
-        while i < len(reqs):
-            if closed_loop:
-                batch = reqs[i:i + self.max_batch]
+        t_wall = time.perf_counter()
+        rt = ServingRuntime(
+            self, clock=VirtualClock(),
+            config=RuntimeConfig(max_batch=self.max_batch,
+                                 max_wait=self.max_wait))
+        tickets: dict = {}
+        if closed_loop:
+            for i in range(0, len(reqs), self.max_batch):
+                for r in reqs[i:i + self.max_batch]:
+                    tickets[id(r)] = rt.submit(r)
+                rt.drain()
+        else:
+            for r in reqs:
+                rt.run_until(r.arrival)
+                tickets[id(r)] = rt.submit(r)
+            rt.drain()
+        self.stats.wall_s += time.perf_counter() - t_wall
+        self.stats.batches += rt.stats.batches
+        # served counts answered requests only — refusals are explicit
+        # shed responses below, not throughput
+        self.stats.served += rt.stats.served
+        out = []
+        for r in requests:
+            ticket = tickets[id(r)]
+            if ticket.error is not None:
+                # the runtime contains solve failures so joined tickets
+                # can't wedge; the sync driver still fails loudly
+                raise ticket.error
+            resp = ticket.response
+            if resp is None:        # refused (shed-class SLO only)
+                resp = PlanResponse(
+                    req_id=r.req_id, cost=float("inf"), tree=None,
+                    meta={"shed": ticket.refuse_reason},
+                    route=ticket.route, cache_hit=False,
+                    latency=ticket.latency)
             else:
-                clock = max(clock, reqs[i].arrival)
-                deadline = clock + self.max_wait
-                batch = [reqs[i]]
-                j = i + 1
-                while (j < len(reqs) and len(batch) < self.max_batch
-                       and reqs[j].arrival <= deadline):
-                    batch.append(reqs[j])
-                    j += 1
-                clock = max(clock, batch[-1].arrival)
-            t0 = time.perf_counter()
-            rs = self._process(batch)
-            dt = time.perf_counter() - t0
-            wall += dt
-            completion = (wall if closed_loop else clock + dt)
-            clock = clock + dt if not closed_loop else clock
-            for req, resp in zip(batch, rs):
-                resp.latency = (dt if closed_loop
-                                else completion - req.arrival)
                 self.stats.latency.record(resp.latency)
-                by_req[id(req)] = resp
-            self.stats.batches += 1
-            self.stats.served += len(batch)
-            i += len(batch)
-        self.stats.wall_s += wall
-        return [by_req[id(r)] for r in requests], self.stats
+            out.append(resp)
+        self.last_runtime = rt
+        return out, self.stats
+
+    # --------------------------------------------------- async front end
+    def make_runtime(self, clock=None, config=None, duration_fn=None,
+                     executor: str = "inline"):
+        """A ``ServingRuntime`` scheduling into this server's cache /
+        router / solver (benchmarks and tests drive it directly)."""
+        from repro.service.runtime import ServingRuntime
+        return ServingRuntime(self, clock=clock, config=config,
+                              duration_fn=duration_fn, executor=executor)
+
+    def async_runtime(self):
+        """The server's shared WallClock runtime with a worker-thread
+        executor: the front end keeps admitting (and answering cache
+        hits) while a batched dispatch executes."""
+        rt = getattr(self, "_async_rt", None)
+        if rt is None:
+            from repro.service.runtime import (RuntimeConfig,
+                                               ServingRuntime, WallClock)
+            rt = self._async_rt = ServingRuntime(
+                self, clock=WallClock(),
+                config=RuntimeConfig(max_batch=self.max_batch,
+                                     max_wait=self.max_wait),
+                executor="thread")
+        return rt
+
+    async def plan_async(self, q: QueryGraph, card: np.ndarray,
+                         cost: str = "max",
+                         latency_budget: "float | None" = None,
+                         slo: "str | None" = None) -> PlanResponse:
+        """Awaitable single-request entry over the async runtime.
+        Concurrent callers share the scheduler: their misses batch
+        together, duplicates coalesce, and cache hits overtake in-flight
+        solves.  Raises ``RuntimeError`` if the request is shed."""
+        import asyncio
+
+        rt = self.async_runtime()
+        req = PlanRequest(q=q, card=np.asarray(card, np.float64),
+                          cost=cost, latency_budget=latency_budget,
+                          slo=slo)
+        ticket = rt.submit(req)
+        while not ticket.done:
+            rt.poll()
+            if ticket.done:
+                break
+            nxt = rt.next_event_time()
+            delay = 2e-4 if nxt is None else \
+                min(max(nxt - rt.clock.now(), 0.0), 2e-3)
+            await asyncio.sleep(delay)
+        if ticket.refused:
+            if ticket.error is not None:
+                raise ticket.error
+            raise RuntimeError(f"request shed: {ticket.refuse_reason}")
+        self.stats.served += 1
+        self.stats.latency.record(ticket.latency)
+        return ticket.response
 
     # ---------------------------------------------------------- internals
     def _lookup(self, req: PlanRequest, form: CanonicalForm,
@@ -267,6 +347,71 @@ class PlanServer:
             meta={**entry.meta, "cached": True},
             route=route, cache_hit=True)
 
+    def _batch_eligible(self, route: Route, cost: str) -> bool:
+        """Does this route ride the batched lattice lane?  (The runtime
+        and the inline processor share the predicate.)"""
+        return (route.lane == "batch"
+                and ((route.method == "dpconv"
+                      and cost in ("max", "cap"))
+                     or (route.method == "dpccp" and cost == "out")))
+
+    def _observe_batch(self, timings: list) -> None:
+        """Feed one batched solve's per-chunk timings to the router's
+        latency model — per-``n``, per-engine AND per-topology-class."""
+        for n, cnt, dt, eng, cost, tags in timings:
+            method = "dpccp" if cost == "out" else "dpconv"
+            tag = eng + (":" + cost if cost in ("cap", "out") else "")
+            # a chunk spans several topology classes; each class in
+            # it shared the same solve, so each gets the per-query
+            # mean as its observation — but the engine-level parent
+            # coefficient sees the chunk ONCE, not once per class
+            for i, topo in enumerate(tags or {"": cnt}):
+                self.router.observe(method, n, dt / max(cnt, 1),
+                                    engine=tag, topo=topo,
+                                    parent=(i == 0))
+
+    def _observe_single(self, route: Route, form: CanonicalForm,
+                        cost: str, dt: float, meta: dict) -> None:
+        # dpconv/dpccp solves carry the engine that actually ran in
+        # their meta; tag the observation with it (plus the ':cap' /
+        # ':out' namespace) so a fused tiny-n cap solve never
+        # pollutes the untagged coefficient that prices the slow
+        # host pipeline past the fused ceiling — and vice versa
+        eng = meta.get("engine", "") \
+            if route.method in ("dpconv", "dpccp") else ""
+        if eng and cost == "cap":
+            eng += ":cap"
+        elif eng and cost == "out" and route.method == "dpccp":
+            eng += ":out"
+        self.router.observe(route.method, form.q.n, dt, engine=eng,
+                            topo=router_mod.topo_class(form.signature))
+
+    def _primary_probe(self, req: PlanRequest, form: CanonicalForm
+                       ) -> "tuple[Route, PlanResponse | None]":
+        """The admission ladder's first rung, shared by the inline
+        processor and the runtime: a cached plan replays in ~zero time,
+        so it satisfies any latency budget — probe the cache under the
+        PRIMARY (budget-free) route before considering deadline
+        degradation."""
+        primary = self.router.route(form.q, req.cost, None,
+                                    signature=form.signature)
+        resp = self._lookup(req, form, primary) if self.enable_cache \
+            else None
+        return primary, resp
+
+    def _budget_reroute(self, req: PlanRequest, form: CanonicalForm,
+                        budget: float, primary: Route
+                        ) -> "tuple[Route, PlanResponse | None]":
+        """Second rung: re-route under the budget, and when the method
+        changed probe the cache once more WITHOUT counting a second
+        miss (one request, one miss)."""
+        route = self.router.route(form.q, req.cost, budget,
+                                  signature=form.signature)
+        resp = None
+        if self.enable_cache and route.method != primary.method:
+            resp = self._lookup(req, form, route, count_miss=False)
+        return route, resp
+
     def _process(self, batch: "list[PlanRequest]") -> "list[PlanResponse]":
         responses: "list[PlanResponse | None]" = [None] * len(batch)
         batch_lane: list = []          # (pos, form) for batched DPconv[max]
@@ -275,37 +420,23 @@ class PlanServer:
 
         for pos, req in enumerate(batch):
             form = canonicalize(req.q, np.asarray(req.card, np.float64))
-            # a cached plan replays in ~zero time, so it satisfies any
-            # latency budget: probe the cache under the PRIMARY
-            # (budget-free) route before considering deadline degradation
-            primary = self.router.route(form.q, req.cost, None,
-                                        signature=form.signature)
-            if self.enable_cache:
-                resp = self._lookup(req, form, primary)
-                if resp is not None:
-                    responses[pos] = resp
-                    routes[pos] = primary
-                    continue
+            primary, resp = self._primary_probe(req, form)
+            if resp is not None:
+                responses[pos] = resp
+                routes[pos] = primary
+                continue
             route = primary
             if req.latency_budget is not None:
-                route = self.router.route(form.q, req.cost,
-                                          req.latency_budget,
-                                          signature=form.signature)
+                route, resp = self._budget_reroute(
+                    req, form, req.latency_budget, primary)
                 if "deadline" in route.reason:
                     self.stats.deadline_fallbacks += 1
-                if (self.enable_cache and route.method != primary.method):
-                    resp = self._lookup(req, form, route,
-                                        count_miss=False)
-                    if resp is not None:
-                        responses[pos] = resp
-                        routes[pos] = route
-                        continue
+                if resp is not None:
+                    responses[pos] = resp
+                    routes[pos] = route
+                    continue
             routes[pos] = route
-            if (self.enable_batch and route.lane == "batch"
-                    and ((route.method == "dpconv"
-                          and req.cost in ("max", "cap"))
-                         or (route.method == "dpccp"
-                             and req.cost == "out"))):
+            if self.enable_batch and self._batch_eligible(route, req.cost):
                 batch_lane.append((pos, form))
             else:
                 single_lane.append((pos, form, route))
@@ -315,59 +446,39 @@ class PlanServer:
                       router_mod.topo_class(form.signature))
                      for pos, form in batch_lane]
             results = self.solver.solve(items)
-            for n, cnt, dt, eng, cost, tags in self.solver.last_timings:
-                method = "dpccp" if cost == "out" else "dpconv"
-                tag = eng + (":" + cost if cost in ("cap", "out") else "")
-                # a chunk spans several topology classes; each class in
-                # it shared the same solve, so each gets the per-query
-                # mean as its observation — but the engine-level parent
-                # coefficient sees the chunk ONCE, not once per class
-                for i, topo in enumerate(tags or {"": cnt}):
-                    self.router.observe(method, n, dt / max(cnt, 1),
-                                        engine=tag, topo=topo,
-                                        parent=(i == 0))
+            self._observe_batch(self.solver.last_timings)
             for (pos, form), res in zip(batch_lane, results):
-                self._finish(batch[pos], form, routes[pos], res.cost,
-                             res.tree, res.meta, responses, pos)
+                responses[pos] = self._complete(
+                    batch[pos], form, routes[pos], float(res.cost),
+                    res.tree, dict(res.meta))
 
         for pos, form, route in single_lane:
             t0 = time.perf_counter()
             cost_v, tree, meta = self._solve_single(form.q, form.card,
                                                     batch[pos].cost,
                                                     route)
-            # dpconv/dpccp solves carry the engine that actually ran in
-            # their meta; tag the observation with it (plus the ':cap' /
-            # ':out' namespace) so a fused tiny-n cap solve never
-            # pollutes the untagged coefficient that prices the slow
-            # host pipeline past the fused ceiling — and vice versa
-            eng = meta.get("engine", "") \
-                if route.method in ("dpconv", "dpccp") else ""
-            if eng and batch[pos].cost == "cap":
-                eng += ":cap"
-            elif eng and batch[pos].cost == "out" \
-                    and route.method == "dpccp":
-                eng += ":out"
-            self.router.observe(route.method, form.q.n,
-                                time.perf_counter() - t0,
-                                engine=eng,
-                                topo=router_mod.topo_class(
-                                    form.signature))
-            self._finish(batch[pos], form, route, cost_v, tree, meta,
-                         responses, pos)
+            self._observe_single(route, form, batch[pos].cost,
+                                 time.perf_counter() - t0, meta)
+            responses[pos] = self._complete(batch[pos], form, route,
+                                            cost_v, tree, meta)
         return responses  # type: ignore[return-value]
 
-    def _finish(self, req: PlanRequest, form: CanonicalForm, route: Route,
-                cost_v: float, tree, meta: dict, responses: list,
-                pos: int) -> None:
+    def _complete(self, req: PlanRequest, form: CanonicalForm,
+                  route: Route, cost_v: float, tree, meta: dict,
+                  insert: bool = True) -> PlanResponse:
+        """Finish one solved request: cache the canonical plan
+        (``insert=False`` for coalesced followers — the leader already
+        did), record the route, and relabel the tree back into the
+        request's labeling."""
         meta = dict(meta)
-        key = PlanCache.make_key(form.key, req.cost, route.method,
-                                 route.params)
-        if self.enable_cache:
+        if self.enable_cache and insert:
+            key = PlanCache.make_key(form.key, req.cost, route.method,
+                                     route.params)
             self.cache.insert(key, CachedPlan(cost=cost_v, tree=tree,
                                               meta=meta,
                                               inserted_perm=form.perm))
         self.router.record(route)
-        responses[pos] = PlanResponse(
+        return PlanResponse(
             req_id=req.req_id, cost=cost_v,
             tree=relabel_tree(tree, form.inverse_perm),
             meta=meta, route=route, cache_hit=False)

@@ -67,6 +67,11 @@ class WorkloadSpec:
     rate: float = 200.0          # Poisson arrival rate, requests/second
     budget_frac: float = 0.0     # fraction with tight latency budgets
     budget_s: float = 2e-4
+    # SLO-class mix for the async runtime: (name, weight) pairs naming
+    # classes in runtime.RuntimeConfig.slo_classes.  Empty (default)
+    # assigns no class — and draws nothing from the RNG, so existing
+    # workload streams reproduce bit-for-bit.
+    slo_mix: tuple = ()
 
 
 def make_query(rng: np.random.Generator, spec: WorkloadSpec,
@@ -112,6 +117,7 @@ def make_workload(spec: "WorkloadSpec | None" = None
     costs = [c for c, _ in spec.cost_mix]
     cost_p = np.array([p for _, p in spec.cost_mix])
     cost_p /= cost_p.sum()
+    slos, slo_p = _slo_dist(spec)
 
     reqs: list = []
     clock = 0.0
@@ -131,8 +137,23 @@ def make_workload(spec: "WorkloadSpec | None" = None
                   else None)
         reqs.append(PlanRequest(q=q, card=card, cost=cost,
                                 latency_budget=budget, arrival=clock,
-                                req_id=i))
+                                req_id=i,
+                                slo=_draw_slo(rng, slos, slo_p)))
     return reqs
+
+
+def _slo_dist(spec: WorkloadSpec):
+    if not spec.slo_mix:
+        return None, None
+    names = [s for s, _ in spec.slo_mix]
+    p = np.array([w for _, w in spec.slo_mix], np.float64)
+    return names, p / p.sum()
+
+
+def _draw_slo(rng, slos, slo_p):
+    if slos is None:
+        return None
+    return str(rng.choice(slos, p=slo_p))
 
 
 # ------------------------------------------------------------ replay lane
@@ -165,6 +186,7 @@ def make_einsum_workload(spec: "WorkloadSpec | None" = None,
     costs = [c for c, _ in spec.cost_mix]
     cost_p = np.array([p for _, p in spec.cost_mix])
     cost_p /= cost_p.sum()
+    slos, slo_p = _slo_dist(spec)
 
     def fresh_variant(c):
         """The same template at a jittered scale: one index dim scaled
@@ -191,5 +213,6 @@ def make_einsum_workload(spec: "WorkloadSpec | None" = None,
                   else None)
         reqs.append(PlanRequest(q=q, card=card, cost=cost,
                                 latency_budget=budget, arrival=clock,
-                                req_id=i))
+                                req_id=i,
+                                slo=_draw_slo(rng, slos, slo_p)))
     return reqs

@@ -13,8 +13,9 @@ from repro.core.ccap import ccap, ccap_batch
 from repro.core.dpconv import optimize_batch
 from repro.core.dpconv_max import dpconv_max, dpconv_max_batch, \
     dpconv_max_ref
-from repro.core.querygraph import (chain, clique, make_cardinalities,
-                                   random_sparse, star)
+from repro.core.querygraph import (chain, clique, cycle,
+                                   make_cardinalities, random_sparse,
+                                   star)
 
 MAKERS = [clique, chain, star, lambda k: random_sparse(k, 2, seed=5)]
 
@@ -107,6 +108,56 @@ def test_fused_cap_rejects_non_dpsub_pass2():
     # auto quietly takes the host pipeline for the dpccp pass
     r = ccap(q, card, engine_pass2="dpccp")
     assert r.engine == "host"
+
+
+@pytest.mark.parametrize("n", [5, 6, 7])
+def test_fused_connected_cap_matches_host_dpccp_pipeline(n):
+    """The cap-lane connectivity gate: pass 2 under the connected-split
+    masks is bit-identical to the host dpconv_max + dpccp(prune_gamma)
+    pipeline — gamma, C_out AND tree — including the cap-infeasible
+    case (no cross-product-free plan attains the full-lattice gamma*),
+    where both sides report +inf."""
+    from repro.core.dpccp import dpccp
+    qs = [chain(n), star(n), cycle(n), random_sparse(n, 2, seed=5)]
+    cards = [make_cardinalities(q, seed=20 + i)
+             for i, q in enumerate(qs)]
+    fc = engine.fused_ccap(np.stack(cards), n, qs=qs)
+    assert fc.dispatches == 1
+    for b, (q, card) in enumerate(zip(qs, cards)):
+        gamma = dpconv_max(q, card, engine="host",
+                           extract_tree=False).optimum
+        assert fc.gammas[b] == gamma
+        dp, _ = dpccp(q, card, mode="out", prune_gamma=gamma)
+        if np.isfinite(dp[-1]):
+            assert fc.couts[b] == dp[-1]
+            host_tree = jointree.extract_tree_out(dp, card, n)
+            assert repr(fc.trees[b]) == repr(host_tree)
+            assert all(q.is_connected(m)
+                       for m in fc.trees[b].internal_masks())
+        else:
+            assert not np.isfinite(fc.couts[b])
+
+
+def test_ccap_connected_host_and_fused_agree():
+    q = chain(6)
+    card = make_cardinalities(q, seed=3)
+    # guard the instance choice: the connected cap must be feasible for
+    # the ccap entry (its assertion fires otherwise) — slack 2 makes the
+    # DPccp space comfortably admissible on this seed
+    f = ccap(q, card, connected=True, gamma_slack=2.0)
+    h = ccap(q, card, connected=True, engine="host", gamma_slack=2.0)
+    assert f.engine == "fused" and f.dispatches == 1
+    assert h.engine == "host"
+    assert (f.gamma, f.cout) == (h.gamma, h.cout)
+    assert repr(f.tree) == repr(h.tree)
+    # more search space never hurts: the full-lattice cap C_out is a
+    # lower bound on the cross-product-free one
+    full = ccap(q, card, gamma_slack=2.0)
+    assert full.cout <= f.cout
+    # the fused route refuses what DPccp semantics cannot express
+    with pytest.raises(ValueError):
+        ccap(q, card, connected=True, engine="fused",
+             engine_pass1="dpsub")
 
 
 def test_optimize_batch_cap_lane():

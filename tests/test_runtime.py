@@ -1,0 +1,302 @@
+"""Deterministic scenario + property tests for the async serving
+runtime (``repro.service.runtime``) under ``VirtualClock``.
+
+Every scheduling decision is driven event by event on manual time with
+injected durations, so each scenario reproduces bit-for-bit in this
+container; the property test then asserts the scheduling layer's prime
+contract — ANY interleaving of requests yields responses bitwise-equal
+to synchronous ``PlanServer.serve`` on the same workload — under both
+real hypothesis and the conftest shim.
+"""
+import asyncio
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import engine as engine_mod
+from repro.core.querygraph import permute_card, relabel
+from repro.service import (PlanRequest, PlanServer, RuntimeConfig,
+                           SLOClass, VirtualClock, WorkloadSpec,
+                           make_workload)
+
+DUR = {"admit": 0.0, "solve": 1.0, "single": 0.01}
+
+
+def _dur(kind, info):
+    return DUR[kind]
+
+
+def _spec(**kw):
+    base = dict(n_requests=24, seed=0, n_range=(6, 7), pool_size=6,
+                rate=500.0)
+    base.update(kw)
+    return WorkloadSpec(**base)
+
+
+def _mk(max_batch=8, **cfg_kw):
+    srv = PlanServer(max_batch=max_batch)
+    clk = VirtualClock()
+    cfg = RuntimeConfig(max_batch=max_batch, **cfg_kw)
+    return srv, clk, srv.make_runtime(clock=clk, config=cfg,
+                                      duration_fn=_dur)
+
+
+def _batch_miss(reqs):
+    """A request the router sends to the batched lattice lane."""
+    return next(r for r in reqs if r.cost == "max" and r.q.n >= 6)
+
+
+# ------------------------------------------------------------- scenarios
+def test_hit_overtakes_inflight_miss():
+    """A canonicalized cache hit answers immediately while a batched
+    miss is mid-solve — the exact head-of-line blocking the runtime
+    exists to remove."""
+    reqs = make_workload(_spec())
+    srv, clk, rt = _mk()
+    hot = reqs[0]
+    srv.serve([hot], closed_loop=True)          # prime the plan cache
+    miss = _batch_miss(reqs[1:])
+    t_miss = rt.submit(miss)
+    rt.flush()                                  # solve starts: eta = 1.0
+    assert not t_miss.done and len(rt._inflight) == 1
+    clk.advance_to(0.5)
+    rt.poll()
+    t_hit = rt.submit(hot)                      # arrives mid-flight
+    assert t_hit.done and t_hit.response.cache_hit
+    assert t_hit.completed_at == 0.5
+    assert rt.stats.fast_path_hits == 1 and rt.stats.overtakes == 1
+    rt.drain()
+    assert t_miss.done and t_miss.completed_at == 1.0
+    assert t_hit.completed_at < t_miss.completed_at
+
+
+def test_coalescing_joins_relabeled_duplicates_on_one_solve():
+    """Two in-flight requests that are relabelings of one canonical form
+    collapse into ONE solve; each response replays through its own
+    inverse permutation."""
+    reqs = make_workload(_spec())
+    miss = _batch_miss(reqs)
+    perm = np.random.default_rng(3).permutation(miss.q.n)
+    dup = dataclasses.replace(miss, q=relabel(miss.q, perm),
+                              card=permute_card(miss.card, miss.q.n,
+                                                perm),
+                              req_id=999)
+    srv, clk, rt = _mk()
+    engine_mod.reset_stats()
+    ta = rt.submit(miss)
+    tb = rt.submit(dup)
+    rt.drain()
+    assert rt.stats.coalesced == 1 and rt.stats.batches == 1
+    assert engine_mod.stats().solves == 1       # one fused dispatch
+    assert float(ta.response.cost) == float(tb.response.cost)
+    assert tb.response.meta.get("coalesced") is True
+    # relabeling-aware: each tree lives in its requester's labeling and
+    # realizes the shared optimum bit-exactly there
+    assert ta.response.tree.mask == miss.q.full_mask
+    assert tb.response.tree.mask == dup.q.full_mask
+    assert ta.response.tree.cost_max(miss.card) == float(ta.response.cost)
+    assert tb.response.tree.cost_max(dup.card) == float(tb.response.cost)
+
+
+def test_timeout_closes_partial_batch():
+    """A bucket with fewer than max_batch entries closes when its
+    EWMA-priced wait expires — no request waits forever for a full
+    batch."""
+    reqs = make_workload(_spec())
+    miss = _batch_miss(reqs)
+    srv, clk, rt = _mk(max_batch=8)
+    t = rt.submit(miss)
+    assert not t.done and rt.next_event_time() is not None
+    close_at = rt.next_event_time()
+    assert close_at <= RuntimeConfig().max_wait     # adaptive, capped
+    clk.advance_to(close_at)
+    rt.poll()                                   # timer fires, solve runs
+    assert rt.stats.batches == 1
+    assert rt.stats.mean_batch_occupancy == 1.0
+    rt.run_until(close_at + DUR["solve"])
+    assert t.done and t.completed_at == close_at + DUR["solve"]
+
+
+def test_shed_on_unmeetable_deadline_refuse_and_downgrade():
+    """An unmeetable priced deadline is refused or downgraded to the
+    best-effort lane per the SLO class policy — and a downgraded
+    response voids the deadline contract (not a 'miss')."""
+    classes = {
+        "strict": SLOClass("strict", 1e-12, on_unmeetable="refuse"),
+        "loose": SLOClass("loose", 1e-12, on_unmeetable="downgrade"),
+    }
+    reqs = make_workload(_spec())
+    miss = _batch_miss(reqs)
+    srv, clk, rt = _mk(slo_classes=classes)
+    t_ref = rt.submit(dataclasses.replace(miss, slo="strict"))
+    assert t_ref.done and t_ref.refused and t_ref.response is None
+    assert rt.stats.shed == 1
+    t_dg = rt.submit(dataclasses.replace(miss, slo="loose", req_id=1))
+    rt.drain()
+    assert t_dg.done and not t_dg.refused
+    assert t_dg.response.route.method == "goo"
+    assert t_dg.downgraded and rt.stats.downgraded == 1
+    assert rt.stats.deadline_misses == 0        # downgrade != promise
+    assert np.isfinite(t_dg.response.cost)
+    assert rt.stats.per_class["strict"].shed == 1
+    assert rt.stats.per_class["loose"].downgraded == 1
+
+
+def test_met_deadline_class_has_zero_misses():
+    """Requests admitted under a generous SLO budget complete inside it
+    (virtual time: solve 1s, budget 10s)."""
+    classes = {"std": SLOClass("std", 10.0)}
+    reqs = [dataclasses.replace(r, slo="std")
+            for r in make_workload(_spec(n_requests=12))]
+    srv, clk, rt = _mk(slo_classes=classes)
+    ts = [rt.submit(r) for r in reqs]
+    rt.drain()
+    assert all(t.done and not t.refused for t in ts)
+    cs = rt.stats.per_class["std"]
+    assert cs.served == len(reqs) and cs.deadline_misses == 0
+
+
+def test_backpressure_refuses_past_max_pending():
+    reqs = make_workload(_spec())
+    misses = [r for r in reqs if r.cost == "max" and r.q.n >= 6][:3]
+    # distinct canonical forms needed (identical ones would coalesce,
+    # which is admission, not backpressure)
+    srv, clk, rt = _mk(max_batch=16, max_pending=1)
+    t0 = rt.submit(misses[0])
+    seen = {t0.form.key}
+    t_over = None
+    for m in misses[1:]:
+        t = rt.submit(m)
+        if t.form.key in seen:
+            continue
+        t_over = t
+        break
+    assert t_over is not None and t_over.refused
+    assert rt.stats.shed_backpressure == 1
+    rt.drain()
+    assert t0.done and t0.response is not None
+
+
+def test_sync_serve_is_runtime_backed_and_sheds_visibly():
+    """The sync driver runs over the same scheduler; a refuse-class
+    request surfaces as an explicit shed response, never a silent
+    drop."""
+    reqs = make_workload(_spec(n_requests=8))
+    srv = PlanServer(max_batch=4)
+    resps, stats = srv.serve(list(reqs), closed_loop=True)
+    assert srv.last_runtime.stats.served == len(reqs)
+    assert [r.req_id for r in resps] == [r.req_id for r in reqs]
+    srv2 = PlanServer(max_batch=4)
+    srv2_reqs = [dataclasses.replace(reqs[0], slo="x")]
+    with pytest.raises(ValueError):             # unknown class is loud
+        srv2.serve(srv2_reqs, closed_loop=True)
+
+
+def test_solve_error_fails_tickets_without_wedging_the_runtime():
+    """A solve exception is contained: the work's tickets (coalescers
+    included) fail loudly and the runtime keeps serving — no entry is
+    left stuck in flight collecting joiners that can never complete."""
+    reqs = make_workload(_spec())
+    miss = _batch_miss(reqs)
+    srv, clk, rt = _mk()
+    boom = RuntimeError("boom")
+
+    def exploding_submit(items, extract_tree=True):
+        raise boom
+
+    srv.solver.submit = exploding_submit
+    ta = rt.submit(miss)
+    tb = rt.submit(dataclasses.replace(miss, req_id=1))  # coalesces
+    rt.drain()
+    assert ta.done and ta.refused and ta.error is boom
+    assert tb.done and tb.refused and tb.error is boom
+    assert not rt._inflight and not rt._by_key
+    # the runtime still serves after the failure
+    del srv.solver.submit                   # restore the class method
+    other = next(r for r in reqs if r.cost == "max" and r.q.n >= 6
+                 and r.q.edges != miss.q.edges)
+    tc = rt.submit(other)
+    rt.drain()
+    assert tc.done and not tc.refused and tc.response is not None
+    # and the sync driver surfaces the error instead of a silent drop
+    srv2 = PlanServer(max_batch=4)
+    srv2.solver.submit = exploding_submit
+    with pytest.raises(RuntimeError, match="boom"):
+        srv2.serve([miss], closed_loop=True)
+
+
+# ---------------------------------------------------------- async façade
+def test_plan_async_concurrent_parity_and_coalesce():
+    """The WallClock/thread front end: concurrent awaiters batch,
+    coalesce and stay bit-identical to single-query optimize."""
+    from repro.core.dpconv import optimize
+
+    reqs = make_workload(_spec(n_requests=6, seed=3))
+    miss = _batch_miss(reqs)
+    perm = np.random.default_rng(5).permutation(miss.q.n)
+    dup_q = relabel(miss.q, perm)
+    dup_card = permute_card(miss.card, miss.q.n, perm)
+    srv = PlanServer(max_batch=4)
+
+    async def main():
+        return await asyncio.gather(
+            srv.plan_async(miss.q, miss.card, cost="max"),
+            srv.plan_async(dup_q, dup_card, cost="max"),
+            srv.plan_async(miss.q, miss.card, cost="max"),
+        )
+
+    try:
+        r1, r2, r3 = asyncio.run(main())
+    finally:
+        srv.async_runtime().close()
+    ref = optimize(miss.q, miss.card, cost="max", engine="host")
+    assert float(r1.cost) == float(ref.cost) == float(r2.cost)
+    assert float(r3.cost) == float(ref.cost)
+    assert r1.tree.cost_max(miss.card) == float(ref.cost)
+    assert r2.tree.cost_max(dup_card) == float(ref.cost)
+    rt = srv.async_runtime()
+    # three awaiters, one canonical form: at least one join or hit
+    assert rt.stats.coalesced + rt.stats.fast_path_hits >= 1
+    assert rt.stats.served == 3
+
+
+# ------------------------------------------------------- property: parity
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2 ** 20), st.integers(0, 2 ** 20))
+def test_any_interleaving_matches_sync_serve(wl_seed, order_seed):
+    """THE runtime contract: scheduling (submission order, clock skew,
+    batch shapes, coalescing, fast paths) never changes answers — every
+    response is bitwise-equal (cost) and tree-identical to synchronous
+    ``PlanServer.serve`` on the same workload."""
+    spec = _spec(n_requests=16, seed=wl_seed % 997, n_range=(5, 7),
+                 pool_size=5)
+    reqs = make_workload(spec)
+    ref_srv = PlanServer(max_batch=8)
+    refs, _ = ref_srv.serve(list(reqs), closed_loop=True)
+    by_id = {r.req_id: r for r in refs}
+
+    rng = random.Random(order_seed)
+    order = list(reqs)
+    rng.shuffle(order)
+    srv = PlanServer(max_batch=8)
+    clk = VirtualClock()
+    rt = srv.make_runtime(clock=clk,
+                          config=RuntimeConfig(max_batch=8))
+    tickets = []
+    for r in order:
+        clk.advance(rng.random() * 2e-3)
+        rt.poll()
+        tickets.append(rt.submit(r))
+    rt.drain()
+    for t in tickets:
+        ref = by_id[t.request.req_id]
+        assert t.done and t.response is not None
+        assert float(t.response.cost) == float(ref.cost)
+        if ref.tree is None:
+            assert t.response.tree is None
+        else:
+            assert repr(t.response.tree) == repr(ref.tree)
