@@ -141,4 +141,24 @@ print(f"  runtime: {rs.fast_path_hits} fast-path hits "
       f"({rs.overtakes} overtaking an in-flight solve), "
       f"{rs.coalesced} coalesced, {rs.batches} batched solves, "
       f"mean occupancy {rs.mean_batch_occupancy:.1f}")
+
+# --- 5. observability: per-request provenance + the metrics registry
+print("\nobservability (repro.obs):")
+resp = server.plan_one(fresh[0].q, fresh[0].card, cost="max",
+                       explain=True)
+exp = resp.explain
+print(f"  explain: lane={exp['lane']} method={exp['method']} "
+      f"engine_tag={exp['engine_tag']} cache_hit={exp['cache_hit']} "
+      f"reason={exp['reason']!r}")
+trs = rt.tracer.stats()
+print(f"  tracer: {trs['requests']} requests traced, "
+      f"{trs['spans_opened']} spans, {trs['unclosed_spans']} unclosed, "
+      f"{trs['lane_shape_mismatches']} lane-shape mismatches")
+print(f"  flight recorder: {rt.recorder.snapshot()['counts']}")
+from repro.obs import span_phase_summary  # noqa: E402
+
+for phase, row in span_phase_summary(server.registry).items():
+    if row["count"]:
+        print(f"    {phase:<12} n={row['count']:<4} "
+              f"p50={row['p50_ms']:.3f}ms p95={row['p95_ms']:.3f}ms")
 rt.close()

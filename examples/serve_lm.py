@@ -47,6 +47,17 @@ def plan_contraction_orders() -> None:
     print(f"[planner] cache hit rate {cs.hit_rate:.0%} "
           f"({cs.relabel_hits} relabeled), "
           f"latency p99 {stats.latency.percentile(99) * 1e3:.2f}ms")
+    # the sync driver threads the same span tracer as the async path:
+    # per-phase latency breakdown straight from the server's registry
+    rt = srv.last_runtime
+    trs = rt.tracer.stats()
+    from repro.obs import span_phase_summary
+    phases = span_phase_summary(srv.registry)
+    disp = phases.get("dispatch", {"count": 0})
+    print(f"[planner] obs: {trs['requests']} span trees "
+          f"({trs['unclosed_spans']} unclosed), dispatch p95 "
+          f"{disp.get('p95_ms', 0.0):.2f}ms over {disp['count']} solves; "
+          f"recorder {rt.recorder.snapshot()['counts']}")
 
 
 if __name__ == "__main__":

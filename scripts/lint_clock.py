@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Clock-discipline lint: scheduling code must read time through the
+runtime's ``Clock`` abstraction, never the wall directly.
+
+Why it exists: the serving runtime's determinism contract (VirtualClock
+tests, bit-parity with the sync path, deterministic span trees) breaks
+silently if a scheduling decision reads ``time.time()`` or an
+unannotated ``time.perf_counter()``.  The rules:
+
+* ``time.time(`` — always an error in scheduled scope (it is not even
+  monotonic; nothing in the serving stack may use it).
+* ``time.perf_counter(`` / ``time.monotonic(`` — allowed ONLY at sites
+  annotated with a ``# timing:`` marker on the same or the preceding
+  line, declaring the site as one of the two legitimate uses:
+
+      # timing: measured-duration (...)   measuring how long real work
+                                          took, to charge it to a Clock
+      # timing: clock-source              inside a Clock implementation
+
+Scope: ``src/repro/service``, ``src/repro/obs``, and the engine's
+profiling hooks in ``src/repro/core/engine.py``.  Run from CI and
+``scripts/smoke.sh``:
+
+    python scripts/lint_clock.py            # exit 1 on violations
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCOPE = ("src/repro/service", "src/repro/obs", "src/repro/core/engine.py")
+
+FORBIDDEN = re.compile(r"\btime\.time\(")
+GUARDED = re.compile(r"\btime\.(perf_counter|monotonic)\(")
+MARKER = re.compile(r"#\s*timing:\s*(measured-duration|clock-source)")
+
+
+def lint_file(path: str) -> "list[str]":
+    errors = []
+    with open(path) as f:
+        lines = f.readlines()
+    for i, line in enumerate(lines):
+        code = line.split("#", 1)[0]
+        rel = os.path.relpath(path, REPO)
+        if FORBIDDEN.search(code):
+            errors.append(f"{rel}:{i + 1}: time.time() in scheduling "
+                          f"scope — read the runtime Clock instead")
+        if GUARDED.search(code):
+            here = MARKER.search(line)
+            prev = MARKER.search(lines[i - 1]) if i else None
+            if not here and not prev:
+                errors.append(
+                    f"{rel}:{i + 1}: unannotated "
+                    f"{GUARDED.search(code).group(0)}) — add a "
+                    f"'# timing: measured-duration' or "
+                    f"'# timing: clock-source' marker, or go through "
+                    f"the Clock")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for scope in SCOPE:
+        root = os.path.join(REPO, scope)
+        if os.path.isfile(root):
+            errors += lint_file(root)
+            continue
+        for dirpath, _, names in os.walk(root):
+            for name in sorted(names):
+                if name.endswith(".py"):
+                    errors += lint_file(os.path.join(dirpath, name))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"lint_clock: {len(errors)} violation(s) in {SCOPE}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

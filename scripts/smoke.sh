@@ -8,7 +8,12 @@
 # the one-dispatch / no-host-recursion invariants, and on the
 # probe-rounds reduction; the explicit checks below re-assert the
 # fused-cap and fused-out gates from the written summary so a benchmark
-# refactor can't silently drop them.
+# refactor can't silently drop them.  The obs gates assert telemetry
+# integrity: zero unclosed/open spans after drain, every span tree on
+# its lane's taxonomy, the flight recorder capturing exactly the
+# shed/downgraded/deadline-missed set, and span tracing costing < 5%
+# of plans/sec; scripts/lint_clock.py enforces the Clock-only timing
+# discipline the deterministic traces depend on.
 #
 #     scripts/smoke.sh            # full tier-1 + quick serve bench
 #     scripts/smoke.sh --quick    # bench + summary gates only (CI runs
@@ -28,6 +33,10 @@ done
 if [[ -z "${SMOKE_SKIP_TESTS:-}" ]]; then
   python -m pytest -x -q
 fi
+
+# clock discipline: scheduling code reads time through the Clock
+# abstraction only (annotated measured-duration sites excepted)
+python scripts/lint_clock.py
 
 scripts/bench.sh
 
@@ -64,8 +73,30 @@ assert rt["one_dispatch"] and rt["host_extractions"] == 0, \
 assert rt["hit_p99_ms"] < rt["miss_solve_ms_mean"], \
     f"fast-path hit p99 {rt['hit_p99_ms']}ms not under the mean " \
     f"batched solve {rt['miss_solve_ms_mean']}ms"
+obs = s["obs"]
+assert obs["requests_traced"] > 0, "obs row traced nothing"
+assert obs["unclosed_spans"] == 0 and obs["open_spans"] == 0, \
+    f"span leak: {obs['unclosed_spans']} unclosed, " \
+    f"{obs['open_spans']} open after drain"
+assert obs["lane_shape_mismatches"] == 0, \
+    f"{obs['lane_shape_mismatches']} span trees off their lane taxonomy"
+assert obs["recorder_shed_exact"] and obs["recorder_miss_exact"] \
+    and obs["recorder_downgrade_exact"], \
+    f"flight recorder capture not exact: {obs['recorder']}"
+# tracing must stay under 5% of plans/sec.  The relative number comes
+# from subtracting two sub-100ms wall timings, so on a runner with
+# noisy neighbors it can inflate arbitrarily even when the tracer did
+# not regress — the absolute per-request cost (true value ~10-20us vs
+# ~300us/plan) is the noise-tolerant tripwire for the same regression
+# class, so either bound passing means tracing is cheap.
+assert obs["overhead_frac"] < 0.05 \
+    or obs["span_overhead_us_per_request"] < 30.0, \
+    f"span tracing cost {obs['overhead_frac']:.1%} of plans/sec " \
+    f"({obs['span_overhead_us_per_request']}us/request; gate: <5% " \
+    f"or <30us)"
 print("smoke gates: fused-cap + fused-out parity/dispatch/extraction "
       "+ probe rounds + runtime (sync-parity/deadlines/coalesce/"
-      "fast-path) OK")
+      "fast-path) + obs (zero span leaks, lane shapes, exact recorder "
+      "capture, <5% tracing overhead) OK")
 PY
 echo "smoke: OK"

@@ -160,23 +160,37 @@ def ccap_batch(
     extract_tree: bool = True,
     engine: str = "fused",
     gamma_batch: int = 1,
+    connected: bool = False,
 ) -> "list[CcapResult]":
     """Solve B same-``n`` C_cap instances in lockstep — the serving
     batch-lane entry point.  ``engine="fused"`` runs the whole batch
     (both passes + extraction) in ONE device dispatch; ``"host"`` loops
-    the reference pipeline per query (parity/fallback)."""
+    the reference pipeline per query (parity/fallback).
+
+    ``connected=True`` is the batched no-cross-products cap: pass 2 on
+    the DPccp search space, gated per query by ``qs``'s connectivity
+    masks (``engine.fused_ccap(qs=...)``).  Any non-fusable member
+    (hyperedges / disconnected) drops the whole chunk to the per-query
+    host pipeline — the server's router keeps such queries off the
+    batch lane, so this is a safety net, not a steady-state path.
+    """
     cards = np.asarray(cards, np.float64)
     B = cards.shape[0]
     assert cards.shape[1] == 1 << n
-    if engine in ("fused", "auto"):
+    fusable = not connected or all(
+        not q.hyperedges and q.is_connected(q.full_mask) for q in qs)
+    if engine in ("fused", "auto") and fusable:
         fc = engine_mod.fused_ccap(cards, n, gamma_slack=gamma_slack,
                                    extract_tree=extract_tree,
-                                   gamma_batch=gamma_batch)
+                                   gamma_batch=gamma_batch,
+                                   qs=list(qs) if connected else None)
         out = []
         for b in range(B):
             cout = float(fc.couts[b])
             assert np.isfinite(cout), \
-                "cap infeasible — gamma below C_max optimum?"
+                ("connected cap infeasible — no cross-product-free plan "
+                 "attains gamma; raise gamma_slack" if connected else
+                 "cap infeasible — gamma below C_max optimum?")
             out.append(CcapResult(gamma=float(fc.gammas[b]), cout=cout,
                                   tree=fc.trees[b],
                                   passes={"pass1_fsc_passes": fc.rounds},
@@ -184,5 +198,6 @@ def ccap_batch(
                                   dispatches=fc.dispatches))
         return out
     return [ccap(q, cards[b], gamma_slack=gamma_slack,
-                 extract_tree=extract_tree, engine="host")
+                 extract_tree=extract_tree, engine="host",
+                 connected=connected)
             for b, q in enumerate(qs)]

@@ -38,7 +38,9 @@ serve_bench parity sweep).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
 
 import jax
@@ -48,26 +50,91 @@ import numpy as np
 from repro.core import jointree, lattice
 from repro.core.bitset import popcounts
 from repro.core.lattice import BACKENDS  # noqa: F401  (re-export)
+from repro.obs import metrics as obs_metrics
 
 
 # ----------------------------------------------------------------- telemetry
-@dataclasses.dataclass
 class EngineStats:
-    dispatches: int = 0        # device executions (counted at exe call)
-    solves: int = 0            # batched solves served
-    queries: int = 0           # real (un-padded) queries planned
-    rounds: int = 0            # total while-loop rounds across solves
-    exec_cache_hits: int = 0   # executable reused without re-tracing
-    exec_cache_misses: int = 0  # shape-bucket combos compiled
-    prewarmed: int = 0         # executables compiled by prewarm()
-    host_extractions: int = 0  # per-solve host recursions (must stay 0)
+    """Engine counters, registry-backed and thread-safe.
+
+    Counts now live as ``engine.<field>`` counters in a
+    ``MetricsRegistry`` (the process-default one for the module-global
+    instance), so increments from the runtime's worker-thread executor
+    are atomic instead of racing ``+=`` on a bare dataclass.  Field
+    reads (``stats().dispatches``) and ``as_dict()`` keep the exact
+    shape every existing caller expects.
+    """
+
+    FIELDS = (
+        "dispatches",          # device executions (counted at exe call)
+        "solves",              # batched solves served
+        "queries",             # real (un-padded) queries planned
+        "rounds",              # total while-loop rounds across solves
+        "exec_cache_hits",     # executable reused without re-tracing
+        "exec_cache_misses",   # shape-bucket combos compiled
+        "prewarmed",           # executables compiled by prewarm()
+        "host_extractions",    # per-solve host recursions (must stay 0)
+    )
+
+    def __init__(self, registry: "obs_metrics.MetricsRegistry | None"
+                 = None):
+        self.registry = registry or obs_metrics.MetricsRegistry()
+        self._c = {f: self.registry.counter("engine." + f)
+                   for f in self.FIELDS}
+
+    def inc(self, field: str, k: int = 1) -> None:
+        self._c[field].inc(k)
+
+    def __getattr__(self, name):
+        # only reached for names not set in __init__ — the counter reads
+        if name in EngineStats.FIELDS:
+            return self._c[name].value
+        raise AttributeError(name)
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        return {f: self._c[f].value for f in self.FIELDS}
+
+    def reset(self) -> None:
+        for c in self._c.values():
+            c.reset()
 
 
-_STATS = EngineStats()
+@dataclasses.dataclass
+class DispatchRecord:
+    """Per-dispatch profile: one row per device execution, ring-buffered.
+
+    The serving runtime marks the ring before handing work to the
+    solver (``dispatch_mark``) and collects the records that landed
+    while it waited (``dispatches_since``), attributing compile/execute
+    split, while-loop rounds and XLA flops/bytes to the request spans
+    that were blocked on that dispatch.
+    """
+    seq: int                   # monotone id (ring position survives wrap)
+    cost: str                  # "max" | "cap" | "cap_conn" | "out"
+    n: int
+    B: int                    # padded batch bucket
+    C: int                    # candidate bucket (0 for the out program)
+    backend: str
+    key: tuple                 # full executable-cache bucket key
+    aot_cache_hit: bool        # executable reused (no compile this call)
+    compile_s: float           # 0.0 on a cache hit
+    execute_s: float           # blocked-until-ready device wall time
+    rounds: int = 0            # while-loop rounds (filled post-solve)
+    flops: float = 0.0         # xla_cost_analysis, whole program
+    bytes_accessed: float = 0.0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["key"] = list(self.key)
+        return d
+
+
+_STATS = EngineStats(obs_metrics.default_registry())
 _EXEC_CACHE: dict = {}
+_EXEC_META: dict = {}          # key -> {"compile_s", "flops", ...}
+_PROFILE: collections.deque = collections.deque(maxlen=512)
+_PROFILE_LOCK = threading.Lock()
+_PROFILE_SEQ = 0
 
 
 def stats() -> EngineStats:
@@ -75,12 +142,37 @@ def stats() -> EngineStats:
 
 
 def reset_stats() -> None:
-    global _STATS
-    _STATS = EngineStats()
+    _STATS.reset()
+
+
+def dispatch_mark() -> int:
+    """Current profile sequence number; pass to ``dispatches_since``."""
+    with _PROFILE_LOCK:
+        return _PROFILE_SEQ
+
+
+def dispatches_since(mark: int) -> "list[DispatchRecord]":
+    """Profile records appended after ``mark`` (oldest first), as far
+    back as the ring still holds them."""
+    with _PROFILE_LOCK:
+        return [r for r in _PROFILE if r.seq > mark]
+
+
+def _profile_append(rec: DispatchRecord) -> None:
+    global _PROFILE_SEQ
+    with _PROFILE_LOCK:
+        _PROFILE_SEQ += 1
+        rec.seq = _PROFILE_SEQ
+        _PROFILE.append(rec)
+    h = _STATS.registry.histogram
+    h("engine.execute_s").observe(rec.execute_s)
+    if not rec.aot_cache_hit:
+        h("engine.compile_s").observe(rec.compile_s)
 
 
 def clear_executable_cache() -> None:
     _EXEC_CACHE.clear()
+    _EXEC_META.clear()
 
 
 # ------------------------------------------------------------------ results
@@ -135,13 +227,23 @@ def get_executable(n: int, B: int, C: int, backend: str = "xla",
     tracing work — the steady-state serving path never re-enters the
     tracer.
     """
+    return _executable(n, B, C, backend, direct_layers, extract, cost,
+                       gamma_batch)[0]
+
+
+def _executable(n: int, B: int, C: int, backend: str, direct_layers: int,
+                extract: bool, cost: str, gamma_batch: int):
+    """Cache lookup + compile with profiling: returns ``(exe, meta,
+    hit)`` where ``meta`` carries the bucket key, one-time compile
+    seconds, XLA flops/bytes and the lattice program card."""
     key = (n, B, C, backend, direct_layers, bool(extract), cost,
            gamma_batch)
     exe = _EXEC_CACHE.get(key)
     if exe is not None:
-        _STATS.exec_cache_hits += 1
-        return exe
-    _STATS.exec_cache_misses += 1
+        _STATS.inc("exec_cache_hits")
+        return exe, _EXEC_META[key], True
+    _STATS.inc("exec_cache_misses")
+    t0 = time.perf_counter()  # timing: measured-duration (compile wall)
     args = [
         jax.ShapeDtypeStruct((B, 1 << n), jnp.float64),
         jax.ShapeDtypeStruct((B, C), jnp.float64),
@@ -175,8 +277,24 @@ def get_executable(n: int, B: int, C: int, backend: str = "xla",
     else:
         raise ValueError(f"unknown fused cost {cost!r}")
     exe = jax.jit(fn).lower(*args).compile()
+    meta = {"key": key,
+            # timing: measured-duration (AOT compile)
+            "compile_s": time.perf_counter() - t0,
+            "program": lattice.program_card(n, cost, backend=backend,
+                                            gamma_batch=gamma_batch,
+                                            extract=bool(extract)),
+            "flops": 0.0, "bytes_accessed": 0.0}
+    try:  # lazy: costmodel pulls in the model stack; optional here
+        from repro.launch.costmodel import xla_cost_analysis
+        ca = xla_cost_analysis(exe)
+        meta["flops"] = float(ca.get("flops", 0.0) or 0.0)
+        meta["bytes_accessed"] = float(ca.get("bytes accessed", 0.0)
+                                       or 0.0)
+    except Exception:
+        pass
     _EXEC_CACHE[key] = exe
-    return exe
+    _EXEC_META[key] = meta
+    return exe, meta, False
 
 
 def candidate_bucket(n: int) -> int:
@@ -203,7 +321,7 @@ def prewarm(ns, max_batch: int = 16, backend: str = "xla",
     canonical candidate bucket.  Returns ``{"compiled": k, "seconds":
     s}``; already-cached buckets are free.
     """
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # timing: measured-duration (prewarm wall)
     before = _STATS.exec_cache_misses
     for n in ns:
         b = 1
@@ -217,19 +335,42 @@ def prewarm(ns, max_batch: int = 16, backend: str = "xla",
                                    gamma_batch)
             b *= 2
     compiled = _STATS.exec_cache_misses - before
-    _STATS.prewarmed += compiled
+    _STATS.inc("prewarmed", compiled)
     return {"compiled": compiled,
+            # timing: measured-duration (prewarm)
             "seconds": time.perf_counter() - t0}
 
 
 # -------------------------------------------------------------- entry point
-def _run(exe, *args):
+def _run(exe, *args, record: "DispatchRecord | None" = None):
     """The single device-execution site: every XLA invocation the engine
     ever makes goes through here, so ``stats().dispatches`` is a real
     execution count (the dispatches-per-solve acceptance check would
-    catch a future change that sneaks in a second call per solve)."""
-    _STATS.dispatches += 1
-    return exe(*args)
+    catch a future change that sneaks in a second call per solve).
+
+    With a ``record``, the call blocks until the outputs are ready so
+    ``execute_s`` is real device wall time (the fused solvers consume
+    the outputs on the host immediately anyway), and the record lands
+    in the profile ring.
+    """
+    _STATS.inc("dispatches")
+    t0 = time.perf_counter()  # timing: measured-duration (execute wall)
+    out = exe(*args)
+    if record is not None:
+        jax.block_until_ready(out)
+        record.execute_s = time.perf_counter() - t0  # timing: measured-duration
+        _profile_append(record)
+    return out
+
+
+def _record(cost: str, n: int, Bp: int, C: int, backend: str,
+            meta: dict, hit: bool) -> DispatchRecord:
+    return DispatchRecord(seq=0, cost=cost, n=n, B=Bp, C=C,
+                          backend=backend, key=meta["key"],
+                          aot_cache_hit=hit,
+                          compile_s=0.0 if hit else meta["compile_s"],
+                          execute_s=0.0, flops=meta["flops"],
+                          bytes_accessed=meta["bytes_accessed"])
 
 
 def candidate_table(card: np.ndarray, n: int) -> np.ndarray:
@@ -293,12 +434,13 @@ def fused_dpconv_max(cards: np.ndarray, n: int, direct_layers: int = 4,
     assert gamma_batch >= 1
     cards_pad, cand_pad, hi0, Bp, C = _pad_candidates(cards, n)
 
-    exe = get_executable(n, Bp, C, backend, direct_layers, extract_tree,
-                         "max", gamma_batch)
+    exe, emeta, hit = _executable(n, Bp, C, backend, direct_layers,
+                                  extract_tree, "max", gamma_batch)
+    prof = _record("max", n, Bp, C, backend, emeta, hit)
     disp0 = _STATS.dispatches
     rec0 = jointree.recursive_extractions()
     out = _run(exe, jnp.asarray(cards_pad), jnp.asarray(cand_pad),
-               jnp.asarray(hi0))
+               jnp.asarray(hi0), record=prof)
     trees: list = [None] * B
     dpn = None
     if extract_tree:
@@ -309,13 +451,15 @@ def fused_dpconv_max(cards: np.ndarray, n: int, direct_layers: int = 4,
         opt, rounds = out
     opt = np.asarray(opt, np.float64)[:B]
     rounds = int(rounds)
+    prof.rounds = rounds
 
     # the "zero per-solve host recursions" invariant: tree assembly must
     # not have fallen back to the recursive Alg. 2 extractors
-    _STATS.host_extractions += jointree.recursive_extractions() - rec0
-    _STATS.solves += 1
-    _STATS.queries += B
-    _STATS.rounds += rounds
+    _STATS.inc("host_extractions",
+               jointree.recursive_extractions() - rec0)
+    _STATS.inc("solves")
+    _STATS.inc("queries", B)
+    _STATS.inc("rounds", rounds)
     return FusedSolve(optima=opt, trees=trees, rounds=rounds,
                       passes=rounds + (1 if extract_tree else 0),
                       dispatches=_STATS.dispatches - disp0,
@@ -358,10 +502,13 @@ def fused_out(qs: list, cards: np.ndarray, n: int,
         conn_pad = np.concatenate(
             [conn, np.repeat(conn[:1], Bp - B, axis=0)], axis=0)
 
-    exe = get_executable(n, Bp, 0, "xla", 4, extract_tree, "out", 1)
+    exe, emeta, hit = _executable(n, Bp, 0, "xla", 4, extract_tree,
+                                  "out", 1)
+    prof = _record("out", n, Bp, 0, "xla", emeta, hit)
     disp0 = _STATS.dispatches
     rec0 = jointree.recursive_extractions()
-    out = _run(exe, jnp.asarray(cards_pad), jnp.asarray(conn_pad))
+    out = _run(exe, jnp.asarray(cards_pad), jnp.asarray(conn_pad),
+               record=prof)
     trees: list = [None] * B
     dpn = None
     if extract_tree:
@@ -370,9 +517,10 @@ def fused_out(qs: list, cards: np.ndarray, n: int,
         trees = _trees_from_arrays(np.asarray(nodes), np.asarray(lidx), B)
     else:
         (cout,) = out
-    _STATS.host_extractions += jointree.recursive_extractions() - rec0
-    _STATS.solves += 1
-    _STATS.queries += B
+    _STATS.inc("host_extractions",
+               jointree.recursive_extractions() - rec0)
+    _STATS.inc("solves")
+    _STATS.inc("queries", B)
     return FusedOutSolve(couts=np.asarray(cout, np.float64)[:B],
                          trees=trees,
                          dispatches=_STATS.dispatches - disp0,
@@ -424,22 +572,26 @@ def fused_ccap(cards: np.ndarray, n: int, gamma_slack: float = 1.0,
         extra = (jnp.asarray(conn_pad),)
         cost = "cap_conn"
 
-    exe = get_executable(n, Bp, C, backend, direct_layers, extract_tree,
-                         cost, gamma_batch)
+    exe, emeta, hit = _executable(n, Bp, C, backend, direct_layers,
+                                  extract_tree, cost, gamma_batch)
+    prof = _record(cost, n, Bp, C, backend, emeta, hit)
     disp0 = _STATS.dispatches
     rec0 = jointree.recursive_extractions()
     out = _run(exe, jnp.asarray(cards_pad), jnp.asarray(cand_pad),
-               jnp.asarray(hi0), jnp.float64(gamma_slack), *extra)
+               jnp.asarray(hi0), jnp.float64(gamma_slack), *extra,
+               record=prof)
     trees = [None] * B
     if extract_tree:
         gamma, cout, nodes, lidx, rounds = out
         trees = _trees_from_arrays(np.asarray(nodes), np.asarray(lidx), B)
     else:
         gamma, cout, rounds = out
-    _STATS.host_extractions += jointree.recursive_extractions() - rec0
-    _STATS.solves += 1
-    _STATS.queries += B
-    _STATS.rounds += int(rounds)
+    prof.rounds = int(rounds)
+    _STATS.inc("host_extractions",
+               jointree.recursive_extractions() - rec0)
+    _STATS.inc("solves")
+    _STATS.inc("queries", B)
+    _STATS.inc("rounds", int(rounds))
     return FusedCapSolve(gammas=np.asarray(gamma, np.float64)[:B],
                          couts=np.asarray(cout, np.float64)[:B],
                          trees=trees, rounds=int(rounds),

@@ -581,3 +581,37 @@ def build_cap_program(n: int, direct_layers: int, backend: str,
         return gamma, cout, nodes, lidx, rounds
 
     return fn
+
+
+def program_card(n: int, cost: str, backend: str = "xla",
+                 gamma_batch: int = 1, extract: bool = True) -> dict:
+    """Static description of one whole-solve lattice program.
+
+    Consumed by the engine's per-dispatch profiling records
+    (``engine.DispatchRecord`` meta): the structural facts an operator
+    wants next to a slow dispatch — which semiring passes run, how many
+    DP layers, the subset-lattice width, the search arity — without
+    re-deriving them from the program builders.
+    """
+    semirings = {
+        "max": ["feasibility(count)"],
+        "cap": ["feasibility(count)", "(min,+)"],
+        "cap_conn": ["feasibility(count)", "(min,+) connected"],
+        "out": ["(min,+) connected"],
+    }
+    if cost not in semirings:
+        raise ValueError(f"unknown fused cost {cost!r}")
+    searched = cost != "out"
+    card = {
+        "cost": cost,
+        "backend": backend if searched else "xla",
+        "semirings": semirings[cost],
+        "layers": n - 1,                # DP layers per value sweep
+        "subset_lattice": 1 << n,       # cells per query per layer
+        "search": (f"lockstep {gamma_batch + 1}-ary" if searched
+                   else "none"),
+        "extract": bool(extract),
+    }
+    card["dtype"] = (str(np.dtype(transforms(backend).dtype))
+                     if searched else "float64")
+    return card

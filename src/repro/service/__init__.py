@@ -74,9 +74,19 @@ examples, benchmarks):
   Poisson arrivals) and the einsum contraction-log replay lane
   (``make_einsum_workload``).
 
+Observability (``repro.obs``) threads through every layer: the server
+binds a ``MetricsRegistry`` (cache/router/solver/engine/runtime
+providers), the runtime mints a per-request span tree on its ``Clock``
+(admit → queue_wait → coalesce/fast_path → dispatch with the engine's
+compile/execute split → extract → respond) and a ``FlightRecorder``
+keeps every shed/downgraded/deadline-missed request for postmortems.
+``PlanRequest(explain=True)`` returns the provenance on the response.
+
 Benchmark: ``benchmarks/serve_bench.py`` (``--quick`` for the CI gate in
 ``scripts/smoke.sh``).  Demo: ``examples/planner_demo.py``.
 """
+from repro.obs import (FlightRecorder, MetricsRegistry,  # noqa: F401
+                       Tracer)
 from repro.service.batch import (BatchedSolver, BatchPolicy,  # noqa: F401
                                  SolveHandle)
 from repro.service.cache import CachedPlan, CacheStats, PlanCache  # noqa: F401

@@ -194,9 +194,14 @@ class BatchedSolver:
         engine = self.policy.engine
         G = self.policy.gamma_batch
         backend = "pallas" if self._use_pallas(n) else "xla"
-        # the batch lane carries three costs; "out" chunks run DPccp
-        # semantics (connected csg/cmp pairs, no cross products)
+        # the batch lane carries four costs; "out" chunks run DPccp
+        # semantics (connected csg/cmp pairs, no cross products), and
+        # "cap_conn" is the cap lane with the no-cross-products pass 2
+        # (PlanRequest.connected): solved as cost="cap" + connected=True,
+        # but grouped/priced/cached under its own lane-cost label
         method = "dpccp" if cost == "out" else "dpconv"
+        solve_cost, conn_kw = (("cap", {"connected": True})
+                               if cost == "cap_conn" else (cost, {}))
         if len(qs) == 1:
             # BatchPolicy.engine is "fused" | "host", and all three
             # optimize entry points (dpconv_max, ccap, dpccp) understand
@@ -206,8 +211,8 @@ class BatchedSolver:
                 kw["gamma_batch"] = G   # out's (min,+) sweep never probes
                 if cost == "max":   # cap's (min,+) pass is f64/xla-only
                     kw["backend"] = backend
-            res = optimize(qs[0], cards[0], cost=cost, method=method,
-                           extract_tree=extract_tree, **kw)
+            res = optimize(qs[0], cards[0], cost=solve_cost, method=method,
+                           extract_tree=extract_tree, **kw, **conn_kw)
             res.meta["batched"] = False
             res.meta["chunk"] = 1
             return [res]
@@ -227,11 +232,11 @@ class BatchedSolver:
                     res.meta["batched"] = False
                     res.meta["chunk"] = 1
                 return results
-        elif cost == "cap":
+        elif solve_cost == "cap":
             if engine == "fused":
                 results = optimize_batch(qs, cards, cost="cap",
                                          extract_tree=extract_tree,
-                                         gamma_batch=G)
+                                         gamma_batch=G, **conn_kw)
             else:
                 # the host cap pipeline has no lockstep form: these are
                 # B independent solves sharing only the wall-clock
@@ -239,7 +244,7 @@ class BatchedSolver:
                 # solve (per-solve counters weight by 1/chunk)
                 results = [optimize(q, c, cost="cap",
                                     extract_tree=extract_tree,
-                                    engine="host")
+                                    engine="host", **conn_kw)
                            for q, c in zip(qs, cards)]
                 for res in results:
                     res.meta["backend"] = backend
@@ -288,8 +293,8 @@ class BatchedSolver:
 
     def solve(self, items: list, extract_tree: bool = True) -> list:
         """``items``: list of (q, card[, cost[, tag]]) tuples; cost is
-        "max", "cap" or "out" (all three lattice batch-lane costs).
-        Returns PlanResults aligned with the input order."""
+        "max", "cap", "cap_conn" or "out" (the lattice batch-lane
+        costs).  Returns PlanResults aligned with the input order."""
         with self._lock:
             return self._solve_locked(items, extract_tree)
 
@@ -313,12 +318,12 @@ class BatchedSolver:
                 tags: dict = {}
                 for g in part:
                     tags[g[3]] = tags.get(g[3], 0) + 1
-                t0 = time.perf_counter()
+                t0 = time.perf_counter()   # timing: measured-duration (chunk solve)
                 results = self._solve_chunk(qs, cards, n, cost,
                                             extract_tree)
                 for idx, res in zip(idxs, results):
                     out[idx] = res
-                dt = time.perf_counter() - t0
+                dt = time.perf_counter() - t0  # timing: measured-duration
                 self.total_solve_s += dt
                 self.total_solved += chunk
                 # attribute to the engine that actually ran, not the

@@ -74,6 +74,16 @@ class Route:
     def cache_params(self) -> tuple:
         return self.params
 
+    @property
+    def lane_cost(self) -> str:
+        """The lane-level cost label: the request cost, except that a
+        connected (no-cross-products) cap is its own lane —
+        ``"cap_conn"`` — for batching, EWMA pricing and the solver's
+        chunk grouping.  Cache keys already separate via ``params``."""
+        if self.cost == "cap" and dict(self.params).get("connected"):
+            return "cap_conn"
+        return self.cost
+
     def kw(self) -> dict:
         return dict(self.params)
 
@@ -188,11 +198,14 @@ class Router:
         ":cap" namespace (the two-pass pipeline does strictly more
         work than a plain max solve), and past the fused ceiling the
         single-lane cap pipeline is the host one regardless of hint."""
-        if cost == "cap" and method == "dpconv":
+        if cost in ("cap", "cap_conn") and method == "dpconv":
+            # the connected cap gets its own ":cap_conn" namespace: its
+            # pass 2 sweeps the DPccp search space under per-query
+            # connectivity masks — different work, different coefficient
             engine = self.engine_hint.get(method, "")
             if engine and n > self.config.fused_cap_max_n:
                 engine = "host"
-            return engine + ":cap" if engine else ""
+            return engine + ":" + cost if engine else ""
         if cost == "out" and method == "dpccp":
             # only the batch lane runs the fused connected-C_out
             # program; every single-lane dpccp request (tiny n, past the
@@ -229,12 +242,21 @@ class Router:
 
     def route(self, q: QueryGraph, cost: str,
               latency_budget: "float | None" = None,
-              signature: str = "") -> Route:
+              signature: str = "", connected: bool = False) -> Route:
+        """``connected`` is the request-level no-cross-products flag
+        (``PlanRequest.connected``, meaningful for ``cost="cap"``): the
+        route's params carry ``("connected", True)`` — a distinct cache
+        key — and admission prices against the ``:cap_conn`` EWMA
+        namespace via ``Route.lane_cost``.  Non-simple or disconnected
+        graphs (where the fused connectivity-masked pass is undefined)
+        stay on the single lane's host pipeline."""
         cfg = self.config
         n = q.n
         m = len(q.edges)
         density = 2.0 * m / (n * (n - 1)) if n > 1 else 1.0
         topo = topo_class(signature)
+        connected = bool(connected) and cost == "cap"
+        lane_cost = "cap_conn" if connected else cost
 
         def mk(method, lane, params=(), reason=""):
             # NB: ``decisions`` is updated by the server for the route a
@@ -243,7 +265,8 @@ class Router:
             return Route(cost, method, lane, tuple(params), reason)
 
         def degrade(primary, lane, params=(), reason=""):
-            if self._admit(primary, n, latency_budget, lane, cost, topo):
+            if self._admit(primary, n, latency_budget, lane, lane_cost,
+                           topo):
                 return mk(primary, lane, params, reason)
             if cost in ("out", "smj") and primary != "approx" \
                     and self._admit("approx", n, latency_budget,
@@ -278,12 +301,21 @@ class Router:
                            (("eps", cfg.approx_eps),),
                            f"n={n} > exact ceiling: (1+eps) approx")
         if cost == "cap":
+            params = (("connected", True),) if connected else ()
+            if connected and (q.hyperedges
+                              or not q.is_connected(q.full_mask)):
+                return degrade("dpconv", "single", params,
+                               "no-cross-products C_cap: host pipeline "
+                               "(non-simple/disconnected graph)")
             if cfg.small_n < n <= cfg.fused_cap_max_n:
-                return degrade("dpconv", "batch", (),
-                               "C_cap fused lattice program, batched "
-                               "lane")
-            return degrade("dpconv", "single", (),
-                           "C_cap two-pass pipeline")
+                return degrade("dpconv", "batch", params,
+                               ("connected C_cap fused lattice program, "
+                                "batched lane" if connected else
+                                "C_cap fused lattice program, batched "
+                                "lane"))
+            return degrade("dpconv", "single", params,
+                           "connected C_cap two-pass pipeline"
+                           if connected else "C_cap two-pass pipeline")
         if cost == "smj":
             if n <= cfg.exact_out_max_n:
                 return degrade("dpsub", "single", (),

@@ -66,6 +66,9 @@ import time
 
 import numpy as np
 
+from repro.core import engine as engine_mod
+from repro.obs.recorder import FlightRecorder
+from repro.obs.trace import Tracer
 from repro.service.cache import PlanCache
 from repro.service import router as router_mod
 from repro.service.canon import canonicalize
@@ -86,10 +89,10 @@ class Clock:
 
 class WallClock(Clock):
     def __init__(self):
-        self._t0 = time.monotonic()
+        self._t0 = time.monotonic()   # timing: clock-source
 
     def now(self) -> float:
-        return time.monotonic() - self._t0
+        return time.monotonic() - self._t0   # timing: clock-source
 
     def advance(self, dt: float) -> None:
         pass                        # real time advances on its own
@@ -144,6 +147,7 @@ class RuntimeConfig:
     wait_solve_frac: float = 0.5     # wait <= frac * priced solve time
     deadline_safety: float = 2.0     # price estimates with this margin
     max_pending: int = 1 << 20       # backpressure: refuse misses past it
+    trace: bool = True               # per-request span trees (repro.obs)
     slo_classes: dict = dataclasses.field(
         default_factory=default_slo_classes)
 
@@ -259,6 +263,15 @@ class Ticket:
     error: "BaseException | None" = None   # solve failure, if any
     response: "object | None" = None    # PlanResponse (None if refused)
     completed_at: float = 0.0
+    # --- tracing (repro.obs): the request's span tree and lane flags.
+    # The flags reconstruct the lane's expected span count so the tracer
+    # can self-check every tree's shape (obs satellite #5's smoke gate).
+    span: "object | None" = None        # root Span (or NULL_SPAN)
+    spans: dict = dataclasses.field(default_factory=dict)
+    queued: bool = False                # sat in a forming bucket
+    coalesced_join: bool = False        # joined another entry's solve
+    dispatched: bool = False            # a dispatch span was opened
+    price_est: float = 0.0              # router's solve estimate at start
 
     @property
     def latency(self) -> float:
@@ -288,7 +301,8 @@ class _Work:
     """A closed batch (or a single-lane solve) in execution."""
 
     __slots__ = ("kind", "entries", "started", "eta", "results",
-                 "timings", "future", "duration", "error", "est")
+                 "timings", "future", "duration", "error", "est",
+                 "profile")
 
     def __init__(self, kind, entries, started):
         self.kind = kind                 # "batch" | "single"
@@ -301,6 +315,7 @@ class _Work:
         self.duration = 0.0
         self.error: "BaseException | None" = None
         self.est = 0.0                   # priced estimate (backlog model)
+        self.profile = ()                # engine DispatchRecords attributed
 
 
 # ------------------------------------------------------------------ runtime
@@ -333,7 +348,17 @@ class ServingRuntime:
         self.duration_fn = duration_fn
         self.executor = executor
         self.stats = RuntimeStats()
-        self._buckets: dict = {}         # (n, cost) -> _Bucket
+        self.recorder = FlightRecorder()
+        self.tracer = Tracer(self.clock,
+                             registry=getattr(server, "registry", None),
+                             recorder=self.recorder,
+                             enabled=self.config.trace)
+        reg = getattr(server, "registry", None)
+        if reg is not None:
+            reg.register_provider("runtime", self.stats.as_dict)
+            reg.register_provider("tracer", self.tracer.stats)
+            reg.register_provider("recorder", self.recorder.snapshot)
+        self._buckets: dict = {}         # (n, lane_cost) -> _Bucket
         self._by_key: dict = {}          # cache key -> _Entry (pending+flight)
         self._inflight: list = []        # _Work being executed / in window
         self._events: list = []          # heap of (t, seq, kind, payload)
@@ -376,6 +401,19 @@ class ServingRuntime:
             return sum(w.est for w in self._inflight)
         return max(0.0, self._exec_free - self.clock.now())
 
+    @staticmethod
+    def _expected_spans(ticket: Ticket, fast: bool = False,
+                        refused: bool = False) -> int:
+        """How many spans this ticket's lane SHOULD have produced — the
+        tracer compares against the actual tree (shape self-check).
+        fast path: request/admit/fast_path/respond.  Miss: request +
+        admit + optional queue_wait + optional coalesce + dispatch,
+        then extract+respond (served) or shed (refused)."""
+        if fast:
+            return 4
+        n = 2 + ticket.queued + ticket.coalesced_join + ticket.dispatched
+        return n + (1 if refused else 2)
+
     # ------------------------------------------------------------- submit
     def submit(self, req) -> Ticket:
         """Admit one request at ``clock.now()``: fast-path answer,
@@ -383,7 +421,7 @@ class ServingRuntime:
         solve."""
         srv = self.server
         now = self.clock.now()
-        t_wall = time.perf_counter()
+        t_wall = time.perf_counter()   # timing: measured-duration (admit)
         self.stats.submitted += 1
 
         card = np.asarray(req.card, np.float64)
@@ -395,6 +433,10 @@ class ServingRuntime:
                 raise ValueError(f"unknown SLO class {req.slo!r}")
         ticket = Ticket(request=req, form=form, submitted=now,
                         slo=slo.name if slo else "default")
+        ticket.span = self.tracer.request(
+            at=now, req_id=req.req_id, slo=ticket.slo, cost=req.cost,
+            n=form.q.n)
+        ticket.spans["admit"] = ticket.span.child("admit", at=now)
         budget = req.latency_budget
         if budget is None and slo is not None:
             budget = slo.budget_s
@@ -411,6 +453,7 @@ class ServingRuntime:
             self._finish_ticket(
                 ticket, resp, fast=True,
                 admit_s=self._charge(
+                    # timing: measured-duration (admit)
                     "admit", time.perf_counter() - t_wall,
                     {"n": form.q.n, "cost": req.cost}))
             return ticket
@@ -425,7 +468,7 @@ class ServingRuntime:
                 # knows the executor backlog and the batch wait it
                 # would add — refuse/degrade if the total cannot land
                 est = srv.router.price(
-                    route.method, form.q.n, route.lane, req.cost,
+                    route.method, form.q.n, route.lane, route.lane_cost,
                     router_mod.topo_class(form.signature))
                 need = self.config.deadline_safety * est + self._backlog()
                 if need > budget:
@@ -446,6 +489,7 @@ class ServingRuntime:
                 self._finish_ticket(
                     ticket, resp, fast=True,
                     admit_s=self._charge(
+                        # timing: measured-duration (admit)
                         "admit", time.perf_counter() - t_wall,
                         {"n": form.q.n, "cost": req.cost}))
                 return ticket
@@ -458,8 +502,10 @@ class ServingRuntime:
                                 backpressure=True)
 
         self.clock.advance(self._charge(
+            # timing: measured-duration (admit)
             "admit", time.perf_counter() - t_wall,
             {"n": form.q.n, "cost": req.cost}))
+        ticket.spans["admit"].close(lane=route.lane, method=route.method)
 
         if srv.enable_batch and srv._batch_eligible(route, req.cost):
             self._enqueue(ticket)
@@ -476,6 +522,21 @@ class ServingRuntime:
         if not backpressure:
             self.stats.shed += 1
         self.stats.klass(ticket.slo).shed += 1
+        root = ticket.span
+        if root is not None:
+            now = self.clock.now()
+            for s in ticket.spans.values():
+                s.close(at=now)
+            root.child("shed", at=now, reason=reason,
+                       backpressure=backpressure).close(at=now)
+            self.tracer.finish(
+                root, expected_spans=self._expected_spans(ticket,
+                                                          refused=True))
+        # always-on incident capture, traced or not (recorder tentpole d)
+        self.recorder.incident(
+            "shed", root if self.tracer.enabled else None,
+            reason=reason, req_id=ticket.request.req_id, slo=ticket.slo,
+            backpressure=backpressure, at=ticket.completed_at)
         return ticket
 
     # -------------------------------------------------- queue & coalesce
@@ -483,7 +544,10 @@ class ServingRuntime:
         req, form, route = ticket.request, ticket.form, ticket.route
         key = PlanCache.make_key(form.key, req.cost, route.method,
                                  route.params)
-        nc = (form.q.n, req.cost)
+        # bucket on the LANE cost ("cap_conn" when the connected flag is
+        # set): a connected-cap solve must never share a lockstep batch
+        # with an unconstrained cap solve — different lattice programs.
+        nc = (form.q.n, route.lane_cost)
         entry = self._by_key.get(key)
         if entry is not None:
             # join-on-completion: the same canonical solve is already
@@ -494,13 +558,27 @@ class ServingRuntime:
             entry.tickets.append(ticket)
             self.stats.coalesced += 1
             self._pending_tickets += 1
+            ticket.coalesced_join = True
+            ticket.span.child(
+                "coalesce", followers=len(entry.tickets) - 1,
+                leader_req=entry.tickets[0].request.req_id).close()
             bucket = self._buckets.get(nc)
             if bucket is not None and entry in bucket.entries:
+                ticket.queued = True
+                ticket.spans["queue_wait"] = ticket.span.child("queue_wait")
                 self._tighten(bucket, nc, ticket)
+            else:
+                # joined a solve already executing: no queue wait — the
+                # dispatch span covers the remaining in-flight time
+                ticket.dispatched = True
+                ticket.spans["dispatch"] = ticket.span.child(
+                    "dispatch", joined_in_flight=True)
             return
         entry = _Entry(key, ticket)
         self._by_key[key] = entry
         self._pending_tickets += 1
+        ticket.queued = True
+        ticket.spans["queue_wait"] = ticket.span.child("queue_wait")
         bucket = self._buckets.get(nc)
         if bucket is None:
             bucket = self._buckets[nc] = _Bucket()
@@ -524,7 +602,7 @@ class ServingRuntime:
         the deadline budget after solve + backlog are accounted."""
         route, form = ticket.route, ticket.form
         est = self.server.router.price(
-            route.method, form.q.n, route.lane, ticket.request.cost,
+            route.method, form.q.n, route.lane, route.lane_cost,
             router_mod.topo_class(form.signature))
         w = min(self.config.max_wait, self.config.wait_solve_frac * est)
         if ticket.deadline is not None:
@@ -561,7 +639,20 @@ class ServingRuntime:
         lead = work.entries[0].tickets[0]
         work.est = self.server.router.price(
             lead.route.method, lead.form.q.n, lead.route.lane,
-            lead.request.cost, router_mod.topo_class(lead.form.signature))
+            lead.route.lane_cost,
+            router_mod.topo_class(lead.form.signature))
+        now = self.clock.now()
+        for entry in work.entries:
+            for t in entry.tickets:
+                t.price_est = work.est
+                qw = t.spans.get("queue_wait")
+                if qw is not None:
+                    qw.close(at=now)
+                if "dispatch" not in t.spans:
+                    t.dispatched = True
+                    t.spans["dispatch"] = t.span.child(
+                        "dispatch", at=now, kind=work.kind,
+                        items=len(work.entries), est_s=work.est)
         if self.executor == "thread":
             work.future = self._ensure_pool().submit(
                 self._execute, work, items)
@@ -591,7 +682,8 @@ class ServingRuntime:
         never leave a joined entry stuck in ``_by_key`` collecting
         coalescers that can never complete."""
         srv = self.server
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()   # timing: measured-duration (solve)
+        mark = engine_mod.dispatch_mark()
         try:
             if work.kind == "batch":
                 handle = srv.solver.submit(items)
@@ -604,7 +696,10 @@ class ServingRuntime:
                     ticket.route)]
         except BaseException as e:       # noqa: BLE001 — contained, re-raised
             work.error = e               # at the front end per ticket
-        return time.perf_counter() - t0
+        # attribute the engine's per-dispatch profile records (AOT
+        # cache hit, compile/execute split, rounds, flops) to this work
+        work.profile = engine_mod.dispatches_since(mark)
+        return time.perf_counter() - t0  # timing: measured-duration
 
     def _ensure_pool(self):
         if self._pool is None:
@@ -615,11 +710,42 @@ class ServingRuntime:
         return self._pool
 
     # -------------------------------------------------------- completion
+    def _dispatch_attrs(self, work: _Work) -> dict:
+        """Aggregate the work's attributed engine DispatchRecords into
+        the dispatch span's attributes (tentpole c: compile/execute
+        split, rounds, AOT cache hits, flops — per request)."""
+        lead = work.entries[0].tickets[0]
+        attrs = {"engine_tag": self.server.router.engine_tag(
+                     lead.route.method, lead.form.q.n, lead.route.lane,
+                     lead.route.lane_cost),
+                 "duration_s": work.duration, "est_s": work.est,
+                 "items": len(work.entries)}
+        prof = work.profile
+        if prof:
+            attrs.update(
+                dispatches=len(prof),
+                aot_cache_hits=sum(r.aot_cache_hit for r in prof),
+                compile_s=sum(r.compile_s for r in prof),
+                execute_s=sum(r.execute_s for r in prof),
+                rounds=sum(r.rounds for r in prof),
+                flops=sum(r.flops for r in prof),
+                bytes_accessed=sum(r.bytes_accessed for r in prof))
+        return attrs
+
     def _finalize(self, work: _Work) -> None:
         srv = self.server
         self._inflight.remove(work)
         now = self.clock.now()
+        attrs = self._dispatch_attrs(work)
+        for entry in work.entries:
+            for t in entry.tickets:
+                d = t.spans.get("dispatch")
+                if d is not None:
+                    d.close(at=now, **attrs)
         if work.error is not None:
+            self.recorder.incident(
+                "error", None, error=repr(work.error), work_kind=work.kind,
+                items=len(work.entries), at=now)
             for entry in work.entries:
                 if entry.key is not None:
                     self._by_key.pop(entry.key, None)
@@ -652,20 +778,26 @@ class ServingRuntime:
             m = dict(meta)
             if i:
                 m["coalesced"] = True
+            ex = ticket.span.child("extract", insert=(i == 0))
             resp = srv._complete(ticket.request, ticket.form,
                                  ticket.route, cost_v, tree, m,
                                  insert=(i == 0))
+            ex.close()
             self._pending_tickets -= 1
             self._finish_ticket(ticket, resp)
 
     def _finish_ticket(self, ticket: Ticket, resp, fast: bool = False,
                        admit_s: float = 0.0) -> None:
+        root = ticket.span
         if fast:
             self.clock.advance(admit_s)
             self.stats.fast_path_hits += 1
             self.stats.hits_hist().record(max(admit_s, 1e-9))
-            if self._inflight:      # answered past an executing solve
+            overtake = bool(self._inflight)
+            if overtake:            # answered past an executing solve
                 self.stats.overtakes += 1
+            ticket.spans["admit"].close()
+            root.child("fast_path", overtake=overtake).close()
         ticket.done = True
         ticket.completed_at = self.clock.now()
         ticket.response = resp
@@ -674,12 +806,41 @@ class ServingRuntime:
         cs.served += 1
         cs.latency.record(ticket.latency)
         self.stats.served += 1
-        if (ticket.deadline is not None and not ticket.downgraded
-                and ticket.completed_at > ticket.deadline):
+        missed = (ticket.deadline is not None and not ticket.downgraded
+                  and ticket.completed_at > ticket.deadline)
+        if missed:
             cs.deadline_misses += 1
         if fast:
             meta = resp.meta
             meta["fast_path"] = True
+        root.child("respond", latency_s=ticket.latency).close()
+        self.tracer.finish(
+            root, expected_spans=self._expected_spans(ticket, fast=fast))
+        live = root if self.tracer.enabled else None
+        if missed:
+            self.recorder.incident(
+                "deadline_miss", live, req_id=ticket.request.req_id,
+                slo=ticket.slo, late_s=ticket.completed_at - ticket.deadline)
+        if ticket.downgraded:
+            self.recorder.incident(
+                "downgraded", live, req_id=ticket.request.req_id,
+                slo=ticket.slo, reason=ticket.route.reason)
+        if getattr(ticket.request, "explain", False):
+            e = resp.explain if isinstance(resp.explain, dict) else \
+                self.server._explain_base(ticket.request, ticket.form,
+                                          ticket.route, cache_hit=fast)
+            e.update({
+                "slo": ticket.slo, "deadline": ticket.deadline,
+                "fast_path": fast, "degraded": ticket.downgraded,
+                "coalesced": bool(resp.meta.get("coalesced")),
+                "queued": ticket.queued,
+                "price_est_s": ticket.price_est,
+                "latency_s": ticket.latency,
+                "deadline_missed": missed,
+                "spans": root.count(),
+                "span_tree": root.shape() if self.tracer.enabled else None,
+            })
+            resp.explain = e
 
     # ------------------------------------------------------------ driving
     def poll(self) -> int:

@@ -37,6 +37,7 @@ from repro.core import best_effort
 from repro.core import engine as engine_mod
 from repro.core.dpconv import optimize
 from repro.core.querygraph import QueryGraph
+from repro.obs.metrics import MetricsRegistry
 from repro.service.batch import BatchedSolver, BatchPolicy
 from repro.service.cache import CachedPlan, PlanCache
 from repro.service.canon import CanonicalForm, canonicalize, relabel_tree
@@ -58,6 +59,14 @@ class PlanRequest:
     # given, and keys the runtime's per-class telemetry + shed policy.
     # None = best effort (the PR-1 behavior, no deadline).
     slo: "str | None" = None
+    # no-cross-products flag (meaningful for cost="cap"): pass 2 runs on
+    # the DPccp search space.  Routed/priced/cached as its own lane
+    # ("cap_conn") — see router.Route.lane_cost.
+    connected: bool = False
+    # opt-in provenance: the response's ``explain`` dict records the
+    # lane taken, degradation steps, cache key, coalesce group and the
+    # EWMA price vs the actual latency
+    explain: bool = False
 
 
 @dataclasses.dataclass
@@ -69,6 +78,7 @@ class PlanResponse:
     route: Route
     cache_hit: bool
     latency: float = 0.0
+    explain: "dict | None" = None
 
 
 # --------------------------------------------------------------- telemetry
@@ -135,7 +145,9 @@ class PlanServer:
                  router: "Router | None" = None,
                  batch_policy: "BatchPolicy | None" = None,
                  enable_cache: bool = True,
-                 enable_batch: bool = True):
+                 enable_batch: bool = True,
+                 registry: "MetricsRegistry | None" = None,
+                 trace: bool = True):
         self.cache = PlanCache(cache_capacity)
         self.router = router or Router()
         self.solver = BatchedSolver(batch_policy
@@ -152,6 +164,32 @@ class PlanServer:
         self.enable_cache = enable_cache
         self.enable_batch = enable_batch
         self.stats = ServeStats()
+        # --- observability: one registry per server; every layer's
+        # existing stats object shows up in snapshots as a provider,
+        # and runtimes bind their Tracers to it (trace.* histograms)
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self.trace = trace
+        self.registry.register_provider("cache", self.cache.stats.as_dict)
+        self.registry.register_provider(
+            "router", lambda: {"decisions": dict(self.router.decisions),
+                               "engine_hint":
+                                   dict(self.router.engine_hint)})
+        self.registry.register_provider(
+            "serve", lambda: {"served": self.stats.served,
+                              "batches": self.stats.batches,
+                              "deadline_fallbacks":
+                                  self.stats.deadline_fallbacks,
+                              "wall_s": self.stats.wall_s,
+                              "latency": self.stats.latency.summary()})
+        self.registry.register_provider(
+            "solver", lambda: {"batches_run": self.solver.batches_run,
+                               "queries_batched":
+                                   self.solver.queries_batched,
+                               "total_solve_s": self.solver.total_solve_s,
+                               "total_solved": self.solver.total_solved})
+        self.registry.register_provider(
+            "engine", lambda: engine_mod.stats().as_dict())
 
     # ------------------------------------------------------------ prewarm
     def prewarm(self, ns, costs=("max", "cap", "out")) -> dict:
@@ -204,11 +242,14 @@ class PlanServer:
 
     # ------------------------------------------------------- single entry
     def plan_one(self, q: QueryGraph, card: np.ndarray, cost: str = "max",
-                 latency_budget: "float | None" = None) -> PlanResponse:
+                 latency_budget: "float | None" = None,
+                 connected: bool = False,
+                 explain: bool = False) -> PlanResponse:
         """Plan one query through the full cache/route/solve path.  This
         is the entry the planner layer (einsum_path / datajoin) uses."""
         req = PlanRequest(q=q, card=np.asarray(card, np.float64),
-                          cost=cost, latency_budget=latency_budget)
+                          cost=cost, latency_budget=latency_budget,
+                          connected=connected, explain=explain)
         resp = self._process([req])[0]
         self.stats.served += 1
         return resp
@@ -234,11 +275,12 @@ class PlanServer:
                                            VirtualClock)
 
         reqs = sorted(requests, key=lambda r: r.arrival)
-        t_wall = time.perf_counter()
+        t_wall = time.perf_counter()   # timing: measured-duration (serve)
         rt = ServingRuntime(
             self, clock=VirtualClock(),
             config=RuntimeConfig(max_batch=self.max_batch,
-                                 max_wait=self.max_wait))
+                                 max_wait=self.max_wait,
+                                 trace=self.trace))
         tickets: dict = {}
         if closed_loop:
             for i in range(0, len(reqs), self.max_batch):
@@ -250,7 +292,7 @@ class PlanServer:
                 rt.run_until(r.arrival)
                 tickets[id(r)] = rt.submit(r)
             rt.drain()
-        self.stats.wall_s += time.perf_counter() - t_wall
+        self.stats.wall_s += time.perf_counter() - t_wall  # timing: measured-duration
         self.stats.batches += rt.stats.batches
         # served counts answered requests only — refusals are explicit
         # shed responses below, not throughput
@@ -341,11 +383,28 @@ class PlanServer:
         if entry is None:
             return None
         self.router.record(route)
-        return PlanResponse(
+        resp = PlanResponse(
             req_id=req.req_id, cost=entry.cost,
             tree=relabel_tree(entry.tree, form.inverse_perm),
             meta={**entry.meta, "cached": True},
             route=route, cache_hit=True)
+        if req.explain:
+            resp.explain = self._explain_base(req, form, route,
+                                              cache_hit=True)
+        return resp
+
+    def _explain_base(self, req: PlanRequest, form: CanonicalForm,
+                      route: Route, cache_hit: bool) -> dict:
+        """The provenance skeleton for an opt-in ``explain`` response;
+        the runtime extends it with lane/coalesce/price fields."""
+        key = PlanCache.make_key(form.key, req.cost, route.method,
+                                 route.params)
+        return {"lane": route.lane, "method": route.method,
+                "lane_cost": route.lane_cost, "reason": route.reason,
+                "engine_tag": self.router.engine_tag(
+                    route.method, form.q.n, route.lane, route.lane_cost),
+                "cache_key": repr(key), "cache_hit": cache_hit,
+                "params": dict(route.params)}
 
     def _batch_eligible(self, route: Route, cost: str) -> bool:
         """Does this route ride the batched lattice lane?  (The runtime
@@ -360,7 +419,8 @@ class PlanServer:
         latency model — per-``n``, per-engine AND per-topology-class."""
         for n, cnt, dt, eng, cost, tags in timings:
             method = "dpccp" if cost == "out" else "dpconv"
-            tag = eng + (":" + cost if cost in ("cap", "out") else "")
+            tag = eng + (":" + cost
+                         if cost in ("cap", "cap_conn", "out") else "")
             # a chunk spans several topology classes; each class in
             # it shared the same solve, so each gets the per-query
             # mean as its observation — but the engine-level parent
@@ -380,7 +440,7 @@ class PlanServer:
         eng = meta.get("engine", "") \
             if route.method in ("dpconv", "dpccp") else ""
         if eng and cost == "cap":
-            eng += ":cap"
+            eng += ":" + route.lane_cost    # ":cap" or ":cap_conn"
         elif eng and cost == "out" and route.method == "dpccp":
             eng += ":out"
         self.router.observe(route.method, form.q.n, dt, engine=eng,
@@ -394,7 +454,8 @@ class PlanServer:
         PRIMARY (budget-free) route before considering deadline
         degradation."""
         primary = self.router.route(form.q, req.cost, None,
-                                    signature=form.signature)
+                                    signature=form.signature,
+                                    connected=req.connected)
         resp = self._lookup(req, form, primary) if self.enable_cache \
             else None
         return primary, resp
@@ -406,7 +467,8 @@ class PlanServer:
         changed probe the cache once more WITHOUT counting a second
         miss (one request, one miss)."""
         route = self.router.route(form.q, req.cost, budget,
-                                  signature=form.signature)
+                                  signature=form.signature,
+                                  connected=req.connected)
         resp = None
         if self.enable_cache and route.method != primary.method:
             resp = self._lookup(req, form, route, count_miss=False)
@@ -442,7 +504,9 @@ class PlanServer:
                 single_lane.append((pos, form, route))
 
         if batch_lane:
-            items = [(form.q, form.card, batch[pos].cost,
+            # the solver groups by lane-cost, so a connected cap chunk
+            # ("cap_conn") never mixes with plain cap solves
+            items = [(form.q, form.card, routes[pos].lane_cost,
                       router_mod.topo_class(form.signature))
                      for pos, form in batch_lane]
             results = self.solver.solve(items)
@@ -453,11 +517,12 @@ class PlanServer:
                     res.tree, dict(res.meta))
 
         for pos, form, route in single_lane:
-            t0 = time.perf_counter()
+            t0 = time.perf_counter()   # timing: measured-duration (solve)
             cost_v, tree, meta = self._solve_single(form.q, form.card,
                                                     batch[pos].cost,
                                                     route)
             self._observe_single(route, form, batch[pos].cost,
+                                 # timing: measured-duration
                                  time.perf_counter() - t0, meta)
             responses[pos] = self._complete(batch[pos], form, route,
                                             cost_v, tree, meta)
@@ -478,10 +543,14 @@ class PlanServer:
                                               meta=meta,
                                               inserted_perm=form.perm))
         self.router.record(route)
-        return PlanResponse(
+        resp = PlanResponse(
             req_id=req.req_id, cost=cost_v,
             tree=relabel_tree(tree, form.inverse_perm),
             meta=meta, route=route, cache_hit=False)
+        if req.explain:
+            resp.explain = self._explain_base(req, form, route,
+                                              cache_hit=False)
+        return resp
 
     def _solve_single(self, q: QueryGraph, card: np.ndarray, cost: str,
                       route: Route) -> tuple:
@@ -500,6 +569,12 @@ class PlanServer:
             engine = self.solver.policy.engine
             if (cost == "cap"
                     and q.n > self.router.config.fused_cap_max_n):
+                engine = "host"
+            if (cost == "cap" and kw.get("connected")
+                    and (q.hyperedges
+                         or not q.is_connected(q.full_mask))):
+                # the fused connectivity-masked pass is undefined here;
+                # the host pipeline (dpccp prune_gamma) handles it
                 engine = "host"
             kw.setdefault("engine", engine)
             if kw["engine"] == "fused":
