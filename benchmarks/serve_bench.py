@@ -58,6 +58,15 @@ Four extra sections ride along:
   runtime's shed/downgrade/miss stats, per-phase p50/p95 from the
   ``trace.*`` histograms) are emitted into ``BENCH_serve.json`` for the
   ``scripts/smoke.sh`` telemetry gates;
+* **faults** — the resilience row (always on): a seeded ~1% chaos mix
+  (dispatch raise/hang/garbage, compile, cache, worker faults) plus a
+  deterministic breaker-opening burst is injected into a VirtualClock
+  runtime; every request must resolve bit-correct / certified-degraded
+  / typed-error (``wrong_plans`` and ``unresolved`` are hard gates), at
+  least one breaker lane must open AND close again, and the zero-fault
+  overhead of the always-on layer (plan verification + watchdog
+  bookkeeping) is priced against a runtime with both disabled —
+  ``scripts/smoke.sh`` gates on all of it;
 * **cold start** — the executable cache is cleared and a sub-workload
   is served cold with and without ``PlanServer.prewarm``, measuring the
   cold-bucket p99 spike the prewarm satellite exists to kill.
@@ -483,6 +492,128 @@ def run_runtime_sweep(spec_seed: int, n_requests: int,
     return row, obs_row, checked, bad
 
 
+def run_faults_row(spec_seed: int, n_requests: int,
+                   batch_size: int) -> dict:
+    """The resilience row — emitted unconditionally, the smoke gate
+    reads it.  Two measurements:
+
+    1. **chaos classification** — the ~1% chaos mix (every seam:
+       dispatch raise/hang/garbage, compile, cache, worker) plus a
+       deterministic 2-failure burst injected into a VirtualClock
+       runtime with constant injected durations, so the fault schedule
+       replays bit-for-bit.  Every ticket must resolve as a bit-correct
+       exact plan (vs the fault-free sync serve), a certified degraded
+       plan, or a typed error — ``wrong_plans`` and ``unresolved`` are
+       hard smoke gates.  The burst (with ``failure_threshold=1`` and a
+       tiny cooldown) forces at least one breaker open -> half-open ->
+       closed round trip per run.
+    2. **zero-fault overhead** — the same stream through the default
+       runtime (verification + watchdog on, no injector) vs a runtime
+       with the resilience layer's per-dispatch work disabled
+       (``verify_plans=False, watchdog_factor=0``), min over five
+       interleaved replays: what the always-on layer costs when nothing
+       fails.
+    """
+    from repro.service import faults
+
+    spec = WorkloadSpec(n_requests=n_requests, seed=spec_seed,
+                        n_range=(5, 8), pool_size=6, rate=2000.0)
+    reqs = make_workload(spec)
+    # fault-free ground truth (and jit/executable warmup for the shapes)
+    ref_srv = _make_server(batch_size, cache=True)
+    ref_resps, _ = ref_srv.serve(list(reqs), closed_loop=True)
+    ref = {r.req_id: r for r in ref_resps}
+
+    # ---- 1. chaos run: deterministic virtual time + injected durations
+    chaos = faults.FaultPlan.chaos(seed=spec_seed, rate=0.01)
+    plan = dataclasses.replace(chaos, specs=chaos.specs + (
+        # deterministic burst: two consecutive dispatch failures mid-
+        # stream guarantee a breaker opens even at the 1% chaos rate
+        faults.FaultSpec("dispatch", "raise", rate=1.0, after=10,
+                         max_fires=2),))
+    dur = {"admit": 0.0, "solve": 0.002, "single": 0.001}
+    srv = _make_server(batch_size, cache=False)  # every request solves
+    cfg = RuntimeConfig(
+        max_batch=batch_size,
+        breaker=faults.BreakerConfig(failure_threshold=1,
+                                     cooldown_s=0.002))
+    rt = srv.make_runtime(clock=VirtualClock(), config=cfg,
+                          duration_fn=lambda kind, info: dur[kind],
+                          injector=faults.FaultInjector(plan))
+    tickets = []
+    for r in sorted(reqs, key=lambda r: r.arrival):
+        rt.run_until(r.arrival)
+        tickets.append(rt.submit(r))
+    rt.drain()
+    unresolved = sum(not t.done for t in tickets)
+    recovered = sum(t.done and t.faulted and t.status == "exact"
+                    for t in tickets)
+    degraded = sum(t.status == "degraded" for t in tickets)
+    errors = sum(t.status == "error" for t in tickets)
+    wrong = 0
+    for t in tickets:
+        if t.status != "exact" or t.response is None:
+            continue
+        r0 = ref[t.request.req_id]
+        if r0.status == "exact" \
+                and float(t.response.cost) != float(r0.cost):
+            wrong += 1
+            print(f"  FAULTS WRONG PLAN req={t.request.req_id}: "
+                  f"chaos={t.response.cost!r} ref={r0.cost!r}",
+                  file=sys.stderr)
+    fstats = rt.fstats.as_dict()
+    brk = rt.breakers.snapshot()
+    inj = rt.injector.snapshot()
+    rt.close()
+
+    # ---- 2. zero-fault overhead: resilience on vs off, interleaved
+    def _replay(base: bool) -> float:
+        s = _make_server(batch_size, cache=True)
+        c = RuntimeConfig(max_batch=batch_size, verify_plans=not base,
+                          watchdog_factor=0.0 if base else 8.0)
+        r_ = s.make_runtime(clock=VirtualClock(), config=c)
+        gc.collect()
+        gc.disable()
+        try:
+            t0 = time.perf_counter()
+            for r in sorted(reqs, key=lambda r: r.arrival):
+                r_.run_until(r.arrival)
+                r_.submit(r)
+            r_.drain()
+            return time.perf_counter() - t0
+        finally:
+            gc.enable()
+
+    _replay(False), _replay(True)          # first-touch warmup, untimed
+    pairs = [(_replay(False), _replay(True)) for _ in range(5)]
+    t_full = min(t for t, _ in pairs)
+    t_base = min(b for _, b in pairs)
+    overhead = max(0.0, (t_full - t_base) / t_base) if t_base > 0 else 0.0
+    return {
+        "config": f"faults/chaos=1%/batch={batch_size}/cache=off",
+        "n_requests": len(reqs),
+        "faults_armed": inj["armed"],
+        "faults_fired": inj["fired"],
+        "unresolved": unresolved,
+        "recovered": recovered,
+        "recovered_frac": round(recovered / len(reqs), 4),
+        "degraded": degraded,
+        "degraded_frac": round(degraded / len(reqs), 4),
+        "errors": errors,
+        "error_frac": round(errors / len(reqs), 4),
+        "wrong_plans": wrong,
+        "fstats": fstats,
+        "breaker_opens": brk["opens"],
+        "breaker_closes": brk["closes"],
+        "breaker_open_lanes": brk["open_lanes"],
+        "overhead_wall_s": round(t_full, 4),
+        "baseline_wall_s": round(t_base, 4),
+        "overhead_frac": round(overhead, 4),
+        "overhead_us_per_request": round(
+            max(0.0, t_full - t_base) / max(len(reqs), 1) * 1e6, 2),
+    }
+
+
 def run_cold_start(reqs, batch_size: int, gamma: int = 1) -> dict:
     """The prewarm satellite's measurement: serve a cold sub-workload
     (executable cache cleared) with and without ``PlanServer.prewarm``.
@@ -787,6 +918,33 @@ def main(argv=None) -> int:
               "(unclosed/open spans, lane-shape mismatch, or recorder "
               "capture not exact)", file=sys.stderr)
 
+    # ------------------------------------------------ resilience row
+    faults_row = run_faults_row(args.seed + 4, min(160, n_requests),
+                                max(batch_sizes))
+    rows.append(faults_row)
+    print(f"{faults_row['config']},,,,"
+          f"fired={faults_row['faults_fired']};"
+          f"recovered={faults_row['recovered']};"
+          f"degraded={faults_row['degraded']};"
+          f"errors={faults_row['errors']};"
+          f"breaker_opens={faults_row['breaker_opens']};"
+          f"breaker_closes={faults_row['breaker_closes']};"
+          f"overhead={faults_row['overhead_frac']}", flush=True)
+    if faults_row["wrong_plans"] or faults_row["unresolved"]:
+        invariant_fail += 1
+        print("#   INVARIANT VIOLATION: chaos run produced "
+              f"{faults_row['wrong_plans']} wrong plans and left "
+              f"{faults_row['unresolved']} requests unresolved",
+              file=sys.stderr)
+    if not (faults_row["faults_fired"] and faults_row["breaker_opens"]
+            and faults_row["breaker_closes"]):
+        invariant_fail += 1
+        print("#   INVARIANT VIOLATION: the chaos schedule did not "
+              "exercise the breaker round trip (fired="
+              f"{faults_row['faults_fired']}, opens="
+              f"{faults_row['breaker_opens']}, closes="
+              f"{faults_row['breaker_closes']})", file=sys.stderr)
+
     # -------------------------------------------- cold start / prewarm
     cold = {}
     if not args.skip_cold:
@@ -890,6 +1048,7 @@ def main(argv=None) -> int:
                      "mean_batch_occupancy", "deadline_misses",
                      "hit_p99_ms", "miss_solve_ms_mean", "per_class")},
         "obs": obs_row,
+        "faults": faults_row,
         "out_lane": {
             "queries": out_row["queries_on_lane"],
             "parity_checked": out_row["parity_checked"],

@@ -17,6 +17,11 @@ unannotated ``time.perf_counter()``.  The rules:
                                           took, to charge it to a Clock
       # timing: clock-source              inside a Clock implementation
 
+* STRICT modules allow NO ``time.*`` at all, markers included: the
+  resilience layer (``service/faults.py``) times breaker cooldowns,
+  quarantine TTLs, and fault schedules exclusively off the injected
+  Clock — any wall read there breaks bit-for-bit chaos replay.
+
 Scope: ``src/repro/service``, ``src/repro/obs``, and the engine's
 profiling hooks in ``src/repro/core/engine.py``.  Run from CI and
 ``scripts/smoke.sh``:
@@ -31,6 +36,9 @@ import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SCOPE = ("src/repro/service", "src/repro/obs", "src/repro/core/engine.py")
+# modules where even annotated wall reads are forbidden (determinism:
+# every timestamp must come from the injected Clock)
+STRICT = ("src/repro/service/faults.py",)
 
 FORBIDDEN = re.compile(r"\btime\.time\(")
 GUARDED = re.compile(r"\btime\.(perf_counter|monotonic)\(")
@@ -41,9 +49,16 @@ def lint_file(path: str) -> "list[str]":
     errors = []
     with open(path) as f:
         lines = f.readlines()
+    rel0 = os.path.relpath(path, REPO)
+    strict = rel0.replace(os.sep, "/") in STRICT
     for i, line in enumerate(lines):
         code = line.split("#", 1)[0]
         rel = os.path.relpath(path, REPO)
+        if strict and re.search(r"\btime\.\w+\(", code):
+            errors.append(f"{rel}:{i + 1}: time.* in a STRICT "
+                          f"Clock-only module — every timestamp must "
+                          f"come from the injected Clock")
+            continue
         if FORBIDDEN.search(code):
             errors.append(f"{rel}:{i + 1}: time.time() in scheduling "
                           f"scope — read the runtime Clock instead")

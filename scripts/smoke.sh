@@ -13,7 +13,12 @@
 # its lane's taxonomy, the flight recorder capturing exactly the
 # shed/downgraded/deadline-missed set, and span tracing costing < 5%
 # of plans/sec; scripts/lint_clock.py enforces the Clock-only timing
-# discipline the deterministic traces depend on.
+# discipline the deterministic traces depend on.  The faults gates
+# assert the resilience contract on the bench's seeded chaos row: every
+# request resolves (bit-correct, certified-degraded, or typed error),
+# zero wrong-plan escapes, at least one breaker open->close round trip,
+# and < 2% zero-fault overhead for the always-on layer; plus a repo
+# hygiene check that no .pyc/__pycache__ artifact is ever tracked.
 #
 #     scripts/smoke.sh            # full tier-1 + quick serve bench
 #     scripts/smoke.sh --quick    # bench + summary gates only (CI runs
@@ -94,9 +99,34 @@ assert obs["overhead_frac"] < 0.05 \
     f"span tracing cost {obs['overhead_frac']:.1%} of plans/sec " \
     f"({obs['span_overhead_us_per_request']}us/request; gate: <5% " \
     f"or <30us)"
+f = s["faults"]
+assert f["faults_fired"] > 0, "chaos row injected nothing"
+assert f["unresolved"] == 0, \
+    f"{f['unresolved']} requests never resolved under chaos"
+assert f["wrong_plans"] == 0, \
+    f"{f['wrong_plans']} silently wrong plans escaped under chaos"
+assert f["breaker_opens"] > 0 and f["breaker_closes"] > 0, \
+    f"breaker round trip not exercised (opens={f['breaker_opens']}, " \
+    f"closes={f['breaker_closes']})"
+# the always-on resilience work (plan verification + watchdog
+# bookkeeping) must be ~free when nothing fails; same two-bound noise
+# tolerance as the tracing gate above.
+assert f["overhead_frac"] < 0.02 \
+    or f["overhead_us_per_request"] < 30.0, \
+    f"zero-fault resilience overhead {f['overhead_frac']:.1%} " \
+    f"({f['overhead_us_per_request']}us/request; gate: <2% or <30us)"
 print("smoke gates: fused-cap + fused-out parity/dispatch/extraction "
       "+ probe rounds + runtime (sync-parity/deadlines/coalesce/"
       "fast-path) + obs (zero span leaks, lane shapes, exact recorder "
-      "capture, <5% tracing overhead) OK")
+      "capture, <5% tracing overhead) + faults (chaos resolves every "
+      "request, zero wrong plans, breaker round trip, <2% zero-fault "
+      "overhead) OK")
 PY
+
+# repo hygiene: compiled artifacts must never be tracked
+if git ls-files | grep -E '(^|/)__pycache__/|\.pyc$' >/dev/null; then
+  echo "smoke: FAIL — tracked .pyc/__pycache__ artifacts:" >&2
+  git ls-files | grep -E '(^|/)__pycache__/|\.pyc$' >&2
+  exit 1
+fi
 echo "smoke: OK"

@@ -175,6 +175,20 @@ def clear_executable_cache() -> None:
     _EXEC_META.clear()
 
 
+_COMPILE_FAULT_HOOK = None
+
+
+def set_compile_fault_hook(hook) -> None:
+    """Chaos/test seam for AOT compilation: ``hook(n=..., B=..., C=...,
+    backend=..., cost=...)`` is called on every executable-cache MISS,
+    before tracing starts, and may raise to model a compile failure
+    (``repro.service.faults`` wires its injector here).  ``None``
+    clears.  Warm buckets never hit the seam — exactly like the real
+    failure mode, which only exists on the compile path."""
+    global _COMPILE_FAULT_HOOK
+    _COMPILE_FAULT_HOOK = hook
+
+
 # ------------------------------------------------------------------ results
 @dataclasses.dataclass
 class FusedSolve:
@@ -242,6 +256,8 @@ def _executable(n: int, B: int, C: int, backend: str, direct_layers: int,
     if exe is not None:
         _STATS.inc("exec_cache_hits")
         return exe, _EXEC_META[key], True
+    if _COMPILE_FAULT_HOOK is not None:
+        _COMPILE_FAULT_HOOK(n=n, B=B, C=C, backend=backend, cost=cost)
     _STATS.inc("exec_cache_misses")
     t0 = time.perf_counter()  # timing: measured-duration (compile wall)
     args = [

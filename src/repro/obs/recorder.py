@@ -21,7 +21,8 @@ from __future__ import annotations
 import collections
 import json
 
-INCIDENT_KINDS = ("shed", "downgraded", "deadline_miss", "error")
+INCIDENT_KINDS = ("shed", "downgraded", "deadline_miss", "error",
+                  "watchdog", "quarantine")
 
 
 class FlightRecorder:

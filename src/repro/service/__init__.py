@@ -73,6 +73,14 @@ examples, benchmarks):
   cardinality-regime templates, Zipf repeats, random relabelings,
   Poisson arrivals) and the einsum contraction-log replay lane
   (``make_einsum_workload``).
+* ``faults``   — the resilience layer: typed ``PlanError`` taxonomy,
+  seeded deterministic fault injection (``FaultPlan``/``FaultInjector``
+  at the dispatch/compile/cache/worker seams), per-engine-lane circuit
+  breakers (``BreakerBoard``), poisoned-key ``Quarantine``, and the
+  counters behind the runtime's failure ladder (retry with deadline-
+  capped backoff -> host-exact failover -> GOO best-effort with a cost
+  certificate -> typed error).  Every response carries
+  ``PlanResponse.status`` in {"exact", "degraded", "error"}.
 
 Observability (``repro.obs``) threads through every layer: the server
 binds a ``MetricsRegistry`` (cache/router/solver/engine/runtime
@@ -92,6 +100,13 @@ from repro.service.batch import (BatchedSolver, BatchPolicy,  # noqa: F401
 from repro.service.cache import CachedPlan, CacheStats, PlanCache  # noqa: F401
 from repro.service.canon import (CanonicalForm, canonicalize,  # noqa: F401
                                  relabel_tree, topology_signature)
+from repro.service.faults import (BreakerBoard, BreakerConfig,  # noqa: F401
+                                  CacheBackendError, CompileError,
+                                  EngineError, FaultInjector, FaultPlan,
+                                  FaultSpec, FaultStats, PlanError,
+                                  PlanTimeoutError, Quarantine,
+                                  QuarantinedError, ShedError,
+                                  WorkerDied)
 from repro.service.router import Route, Router, RouterConfig  # noqa: F401
 from repro.service.runtime import (Clock, RuntimeConfig,  # noqa: F401
                                    RuntimeStats, ServingRuntime,

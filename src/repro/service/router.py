@@ -240,6 +240,16 @@ class Router:
             return True
         return self.price(method, n, lane, cost, topo) <= budget
 
+    def failure_fallback(self, cost: str, reason: str) -> Route:
+        """The FAILURE-driven terminal rung of the ladder — distinct
+        from ``route()``'s deadline-driven degradation: when a lane's
+        circuit breaker is open or a solve has exhausted its retries
+        and the host-exact rung too, the runtime reroutes onto GOO
+        best-effort.  The response carries a cost certificate and is
+        marked ``degraded``; it is cached under the goo method key, so
+        it can never shadow an exact plan."""
+        return Route(cost, "goo", "single", (), "failure: " + reason)
+
     def route(self, q: QueryGraph, cost: str,
               latency_budget: "float | None" = None,
               signature: str = "", connected: bool = False) -> Route:

@@ -70,6 +70,7 @@ from repro.core import engine as engine_mod
 from repro.obs.recorder import FlightRecorder
 from repro.obs.trace import Tracer
 from repro.service.cache import PlanCache
+from repro.service import faults as faults_mod
 from repro.service import router as router_mod
 from repro.service.canon import canonicalize
 
@@ -150,6 +151,22 @@ class RuntimeConfig:
     trace: bool = True               # per-request span trees (repro.obs)
     slo_classes: dict = dataclasses.field(
         default_factory=default_slo_classes)
+    # --- resilience (repro.service.faults).  Retries are per solve
+    # unit on its current ladder rung, with capped exponential backoff
+    # that never eats past the tightest ticket's deadline headroom.
+    max_retries: int = 2
+    retry_backoff: float = 1e-3      # first backoff; doubles per attempt
+    retry_backoff_cap: float = 0.05
+    # a dispatch is declared hung after max(watchdog_min, factor * the
+    # EWMA-priced solve).  The floor guards the cold-EWMA case (tiny
+    # first estimates would otherwise abandon healthy dispatches);
+    # factor <= 0 disables the watchdog entirely.
+    watchdog_factor: float = 8.0
+    watchdog_min: float = 2.0
+    verify_plans: bool = True        # plan-cost recheck (garbage guard)
+    quarantine_ttl: float = 30.0     # poisoned-key containment TTL
+    breaker: "faults_mod.BreakerConfig" = dataclasses.field(
+        default_factory=faults_mod.BreakerConfig)
 
 
 # --------------------------------------------------------------- telemetry
@@ -272,6 +289,10 @@ class Ticket:
     coalesced_join: bool = False        # joined another entry's solve
     dispatched: bool = False            # a dispatch span was opened
     price_est: float = 0.0              # router's solve estimate at start
+    # --- resilience: the response contract and its provenance
+    status: str = "exact"               # "exact" | "degraded" | "error"
+    faulted: bool = False               # saw a failure/retry/failover
+    extra_spans: int = 0                # beyond-taxonomy spans (retries)
 
     @property
     def latency(self) -> float:
@@ -280,13 +301,19 @@ class Ticket:
 
 class _Entry:
     """One canonical solve unit in a bucket: the leader ticket plus any
-    coalesced followers (same full cache key, different labelings)."""
+    coalesced followers (same full cache key, different labelings).
 
-    __slots__ = ("key", "tickets")
+    ``rung`` is the entry's position on the FAILURE ladder (0: routed
+    lane, 1: host-exact, 2: GOO best-effort); ``attempts`` counts
+    completed solve attempts on the current rung."""
+
+    __slots__ = ("key", "tickets", "attempts", "rung")
 
     def __init__(self, key, ticket):
         self.key = key
         self.tickets = [ticket]
+        self.attempts = 0
+        self.rung = 0
 
 
 class _Bucket:
@@ -302,7 +329,8 @@ class _Work:
 
     __slots__ = ("kind", "entries", "started", "eta", "results",
                  "timings", "future", "duration", "error", "est",
-                 "profile")
+                 "profile", "breaker_key", "probe", "engine", "fault",
+                 "hung_at", "abandoned", "finalized")
 
     def __init__(self, kind, entries, started):
         self.kind = kind                 # "batch" | "single"
@@ -316,6 +344,14 @@ class _Work:
         self.error: "BaseException | None" = None
         self.est = 0.0                   # priced estimate (backlog model)
         self.profile = ()                # engine DispatchRecords attributed
+        # --- resilience bookkeeping
+        self.breaker_key = ""            # engine-lane breaker key ("": none)
+        self.probe = False               # half-open breaker probe dispatch
+        self.engine: "str | None" = None  # ladder engine override ("host")
+        self.fault = None                # armed FaultSpec (hang/garbage)
+        self.hung_at: "float | None" = None  # watchdog deadline
+        self.abandoned = False           # watchdog rerouted the tickets
+        self.finalized = False           # finish already processed
 
 
 # ------------------------------------------------------------------ runtime
@@ -339,7 +375,8 @@ class ServingRuntime:
 
     def __init__(self, server, clock: "Clock | None" = None,
                  config: "RuntimeConfig | None" = None,
-                 duration_fn=None, executor: str = "inline"):
+                 duration_fn=None, executor: str = "inline",
+                 injector: "faults_mod.FaultInjector | None" = None):
         if executor not in ("inline", "thread"):
             raise ValueError(f"unknown executor {executor!r}")
         self.server = server
@@ -349,6 +386,21 @@ class ServingRuntime:
         self.executor = executor
         self.stats = RuntimeStats()
         self.recorder = FlightRecorder()
+        # --- resilience (repro.service.faults): per-lane breakers,
+        # poisoned-key quarantine, counters, and (tests/chaos only) the
+        # seeded fault injector wired to the runtime's real seams
+        self.injector = injector
+        self.breakers = faults_mod.BreakerBoard(self.clock,
+                                                self.config.breaker)
+        self.quarantine = faults_mod.Quarantine(
+            self.clock, self.config.quarantine_ttl)
+        self.fstats = faults_mod.FaultStats()
+        self._hook_installed = False
+        if injector is not None:
+            # the engine's AOT compile seam is process-global; one
+            # injector-driven runtime at a time (tests + chaos bench)
+            engine_mod.set_compile_fault_hook(injector.compile_fault)
+            self._hook_installed = True
         self.tracer = Tracer(self.clock,
                              registry=getattr(server, "registry", None),
                              recorder=self.recorder,
@@ -358,14 +410,24 @@ class ServingRuntime:
             reg.register_provider("runtime", self.stats.as_dict)
             reg.register_provider("tracer", self.tracer.stats)
             reg.register_provider("recorder", self.recorder.snapshot)
+            reg.register_provider("faults", self._faults_snapshot)
         self._buckets: dict = {}         # (n, lane_cost) -> _Bucket
         self._by_key: dict = {}          # cache key -> _Entry (pending+flight)
         self._inflight: list = []        # _Work being executed / in window
+        self._zombies: list = []         # abandoned thread works (watchdog)
         self._events: list = []          # heap of (t, seq, kind, payload)
         self._seq = itertools.count()
         self._exec_free = 0.0            # single-executor queue, clock time
         self._pending_tickets = 0
         self._pool = None                # lazy ThreadPoolExecutor
+
+    def _faults_snapshot(self) -> dict:
+        snap = {**self.fstats.as_dict(),
+                "breakers": self.breakers.snapshot(),
+                "quarantine": self.quarantine.snapshot()}
+        if self.injector is not None:
+            snap["injector"] = self.injector.snapshot()
+        return snap
 
     # ------------------------------------------------------------ helpers
     def _charge(self, kind: str, measured: float, info: dict) -> float:
@@ -388,6 +450,10 @@ class ServingRuntime:
                 if b is None or b.close_at is None or b.close_at != t:
                     heapq.heappop(self._events)   # stale timer
                     continue
+            elif kind == "watchdog" and (payload.finalized
+                                         or payload.abandoned):
+                heapq.heappop(self._events)       # work already resolved
+                continue
             return t
         return None
 
@@ -408,10 +474,13 @@ class ServingRuntime:
         tracer compares against the actual tree (shape self-check).
         fast path: request/admit/fast_path/respond.  Miss: request +
         admit + optional queue_wait + optional coalesce + dispatch,
-        then extract+respond (served) or shed (refused)."""
+        then extract+respond (served) or shed (refused).  Retried and
+        failed-over solves open one extra dispatch span per additional
+        attempt (``ticket.extra_spans``)."""
         if fast:
             return 4
-        n = 2 + ticket.queued + ticket.coalesced_join + ticket.dispatched
+        n = (2 + ticket.queued + ticket.coalesced_join
+             + ticket.dispatched + ticket.extra_spans)
         return n + (1 if refused else 2)
 
     # ------------------------------------------------------------- submit
@@ -446,8 +515,19 @@ class ServingRuntime:
         # ---- the shared admission ladder (same helpers as _process, so
         # the sync/async bit-parity contract has ONE implementation):
         # primary-route cache probe first — a cached plan replays in
-        # ~zero time, overtaking any in-flight miss
-        primary, resp = srv._primary_probe(req, form)
+        # ~zero time, overtaking any in-flight miss.  An injected cache
+        # backend error fails OPEN: it degrades to a miss (the solve
+        # path still answers), never to a request failure.
+        if (self.injector is not None
+                and self.injector.arm("cache") is not None):
+            self.fstats.cache_faults += 1
+            ticket.faulted = True
+            primary = srv.router.route(
+                form.q, req.cost, None, signature=form.signature,
+                connected=req.connected)
+            resp = None
+        else:
+            primary, resp = srv._primary_probe(req, form)
         ticket.route = primary
         if resp is not None:
             self._finish_ticket(
@@ -457,6 +537,19 @@ class ServingRuntime:
                     "admit", time.perf_counter() - t_wall,
                     {"n": form.q.n, "cost": req.cost}))
             return ticket
+
+        # ---- quarantine: a poisoned canonical key (repeated solo solve
+        # failures) is refused with a typed error until its TTL expires.
+        # The probe above still serves cached plans — quarantine guards
+        # the SOLVE path, where the key has proven it kills workers.
+        if self.quarantine.active((form.key, req.cost)):
+            self.fstats.quarantine_refusals += 1
+            return self._fail_ticket(
+                ticket,
+                faults_mod.QuarantinedError(
+                    "canonical key quarantined after repeated solo "
+                    "solve failures", req_id=req.req_id),
+                kind="quarantine")
 
         # ---- deadline-aware routing (the PR-1 degrade ladder, plus the
         # runtime's backlog-aware pricing on top)
@@ -501,13 +594,46 @@ class ServingRuntime:
             return self._refuse(ticket, "backpressure: queue full",
                                 backpressure=True)
 
+        # ---- failure-driven ladder at admission: an OPEN lane breaker
+        # reroutes before the solve is queued (fused -> host-exact ->
+        # GOO best-effort); a HALF-OPEN lane admits a solo probe whose
+        # outcome restores or re-opens the lane.  Zero-fault runs never
+        # touch breaker state: allow() on an unknown lane is a dict get.
+        engine_override: "str | None" = None
+        probe = False
+        if route.method != "goo":
+            ok, probe = self.breakers.allow(
+                self._breaker_key(route, form.q.n))
+            if not ok:
+                self.fstats.breaker_rejections += 1
+                ticket.faulted = True
+                ok, probe = self.breakers.allow(
+                    f"host:{route.lane_cost}:n={form.q.n}")
+                if ok:
+                    self.fstats.failover_host += 1
+                    engine_override = "host"
+                else:
+                    self.fstats.breaker_rejections += 1
+                    self.fstats.failover_goo += 1
+                    probe = False
+                    route = srv.router.failure_fallback(
+                        req.cost, "lane breaker open")
+                    ticket.route = route
+
         self.clock.advance(self._charge(
             # timing: measured-duration (admit)
             "admit", time.perf_counter() - t_wall,
             {"n": form.q.n, "cost": req.cost}))
         ticket.spans["admit"].close(lane=route.lane, method=route.method)
 
-        if srv.enable_batch and srv._batch_eligible(route, req.cost):
+        if engine_override is not None:
+            self._start_single(ticket, engine=engine_override,
+                               probe=probe)
+        elif probe:
+            # half-open probe: solo dispatch, skip the batch former so
+            # one probe risks one request
+            self._start_single(ticket, probe=True)
+        elif srv.enable_batch and srv._batch_eligible(route, req.cost):
             self._enqueue(ticket)
         else:
             self._start_single(ticket)
@@ -518,6 +644,10 @@ class ServingRuntime:
         ticket.done = True
         ticket.refused = True
         ticket.refuse_reason = reason
+        ticket.status = "error"
+        if ticket.error is None:
+            ticket.error = faults_mod.ShedError(
+                reason, backpressure=backpressure)
         ticket.completed_at = self.clock.now()
         if not backpressure:
             self.stats.shed += 1
@@ -537,6 +667,36 @@ class ServingRuntime:
             "shed", root if self.tracer.enabled else None,
             reason=reason, req_id=ticket.request.req_id, slo=ticket.slo,
             backpressure=backpressure, at=ticket.completed_at)
+        return ticket
+
+    def _fail_ticket(self, ticket: Ticket, err: BaseException,
+                     kind: str = "error") -> Ticket:
+        """Terminal typed failure (quarantine refusal, or a solve that
+        exhausted the whole failure ladder): the ticket resolves to a
+        typed error — never an exception out of the event loop, and
+        never counted as a deadline/backpressure shed."""
+        err = faults_mod.as_plan_error(err)
+        ticket.done = True
+        ticket.refused = True
+        ticket.error = err
+        ticket.status = "error"
+        ticket.refuse_reason = f"{kind}: {err}"
+        ticket.completed_at = self.clock.now()
+        self.fstats.typed_errors += 1
+        root = ticket.span
+        if root is not None:
+            now = self.clock.now()
+            for s in ticket.spans.values():
+                s.close(at=now)
+            root.child("shed", at=now, reason=ticket.refuse_reason,
+                       error=type(err).__name__).close(at=now)
+            self.tracer.finish(
+                root, expected_spans=self._expected_spans(ticket,
+                                                          refused=True))
+        self.recorder.incident(
+            kind, root if self.tracer.enabled else None,
+            reason=ticket.refuse_reason, req_id=ticket.request.req_id,
+            slo=ticket.slo, at=ticket.completed_at)
         return ticket
 
     # -------------------------------------------------- queue & coalesce
@@ -628,11 +788,33 @@ class ServingRuntime:
                  for e in entries]
         self._start(work, items)
 
-    def _start_single(self, ticket: Ticket) -> None:
+    def _start_single(self, ticket: Ticket, engine: "str | None" = None,
+                      probe: bool = False) -> None:
         entry = _Entry(None, ticket)
+        if engine == "host":
+            entry.rung = 1      # admission failover: next stop is GOO
         self._pending_tickets += 1
         work = _Work("single", [entry], self.clock.now())
+        work.engine = engine
+        work.probe = probe
         self._start(work, None)
+
+    def _breaker_key(self, route, n: int,
+                     engine: "str | None" = None) -> str:
+        """Engine-lane breaker key: ``fused:n=8``, ``fused:cap_conn:
+        n=6``, ``host:cap:n=15``, ``dpsub:n=5``... — per-n buckets of
+        the engine tag the dispatch will actually run."""
+        if engine == "host":
+            return f"host:{route.lane_cost}:n={n}"
+        tag = self.server.router.engine_tag(
+            route.method, n, route.lane, route.lane_cost) or route.method
+        return f"{tag}:n={n}"
+
+    def _hung_threshold(self, work: _Work) -> float:
+        f = self.config.watchdog_factor
+        if f <= 0:
+            return 0.0
+        return max(self.config.watchdog_min, f * work.est)
 
     def _start(self, work: _Work, items) -> None:
         self._inflight.append(work)
@@ -641,6 +823,9 @@ class ServingRuntime:
             lead.route.method, lead.form.q.n, lead.route.lane,
             lead.route.lane_cost,
             router_mod.topo_class(lead.form.signature))
+        if lead.route.method != "goo":
+            work.breaker_key = self._breaker_key(
+                lead.route, lead.form.q.n, engine=work.engine)
         now = self.clock.now()
         for entry in work.entries:
             for t in entry.tickets:
@@ -648,12 +833,24 @@ class ServingRuntime:
                 qw = t.spans.get("queue_wait")
                 if qw is not None:
                     qw.close(at=now)
-                if "dispatch" not in t.spans:
+                d = t.spans.get("dispatch")
+                if d is None or not d.open:
+                    if d is not None:
+                        # retry / ladder failover: a fresh dispatch
+                        # attempt, accounted so the lane-shape self-
+                        # check still pins the tree exactly
+                        t.extra_spans += 1
                     t.dispatched = True
                     t.spans["dispatch"] = t.span.child(
                         "dispatch", at=now, kind=work.kind,
-                        items=len(work.entries), est_s=work.est)
+                        items=len(work.entries), est_s=work.est,
+                        attempt=entry.attempts, rung=entry.rung,
+                        engine=work.engine or "")
         if self.executor == "thread":
+            wd = self._hung_threshold(work)
+            if wd:
+                work.hung_at = now + self._backlog() + wd
+                self._schedule(work.hung_at, "watchdog", work)
             work.future = self._ensure_pool().submit(
                 self._execute, work, items)
             return
@@ -663,6 +860,12 @@ class ServingRuntime:
                 "n": lead.form.q.n, "cost": lead.request.cost}
         kind = "solve" if work.kind == "batch" else "single"
         dur = self._charge(kind, measured, info)
+        wd = self._hung_threshold(work)
+        if work.fault is not None and work.fault.kind == "hang":
+            # injected stall: the dispatch "completes" far past the
+            # hung threshold — the watchdog reroutes the tickets and
+            # the zombie's eventual finish is dropped
+            dur = max(dur, work.fault.hang_s or (4.0 * wd if wd else 1.0))
         work.duration = dur
         # single-executor queue in clock time: work starts when the
         # executor frees, exactly like the worker thread it stands for.
@@ -673,6 +876,12 @@ class ServingRuntime:
         work.eta = max(self.clock.now(), start + dur)
         self._exec_free = work.eta
         self._schedule(work.eta, "finish", work)
+        if wd:
+            work.hung_at = start + wd
+            if work.eta > work.hung_at:
+                # only actually-hung works get a watchdog event: the
+                # zero-fault path schedules nothing extra
+                self._schedule(work.hung_at, "watchdog", work)
 
     def _execute(self, work: _Work, items) -> float:
         """Run the solve (caller thread or worker thread); returns the
@@ -685,6 +894,7 @@ class ServingRuntime:
         t0 = time.perf_counter()   # timing: measured-duration (solve)
         mark = engine_mod.dispatch_mark()
         try:
+            self._inject_before(work)
             if work.kind == "batch":
                 handle = srv.solver.submit(items)
                 work.results = srv.solver.collect(handle)
@@ -693,13 +903,45 @@ class ServingRuntime:
                 ticket = work.entries[0].tickets[0]
                 work.results = [srv._solve_single(
                     ticket.form.q, ticket.form.card, ticket.request.cost,
-                    ticket.route)]
-        except BaseException as e:       # noqa: BLE001 — contained, re-raised
-            work.error = e               # at the front end per ticket
+                    ticket.route, engine=work.engine)]
+            self._inject_after(work)
+        except BaseException as e:       # noqa: BLE001 — contained: the
+            work.error = e               # failure ladder reroutes per entry
         # attribute the engine's per-dispatch profile records (AOT
         # cache hit, compile/execute split, rounds, flops) to this work
         work.profile = engine_mod.dispatches_since(mark)
         return time.perf_counter() - t0  # timing: measured-duration
+
+    def _inject_before(self, work: _Work) -> None:
+        """Arm the pre-solve fault seams (chaos/test runs only).  The
+        GOO rung is exempt: it runs plain host python, not a solver
+        dispatch — it is the ladder's reliable floor."""
+        inj = self.injector
+        if inj is None:
+            return
+        if work.entries[0].tickets[0].route.method == "goo":
+            return
+        if inj.arm("worker") is not None:
+            raise faults_mod.WorkerDied("injected: executor worker died")
+        spec = inj.arm("dispatch")
+        if spec is not None:
+            if spec.kind == "raise":
+                raise faults_mod.EngineError("injected: dispatch raised")
+            work.fault = spec           # hang / garbage: applied later
+
+    def _inject_after(self, work: _Work) -> None:
+        """Apply a ``garbage`` fault: corrupt the first result's
+        reported optimum.  The plan-cost recheck in ``_finalize`` must
+        catch it before it reaches the cache or a caller."""
+        spec = work.fault
+        if spec is None or spec.kind != "garbage":
+            return
+        if work.kind == "batch":
+            res = work.results[0]
+            res.cost = float(res.cost) * 1.5 + 1.0
+        else:
+            cost_v, tree, meta = work.results[0]
+            work.results[0] = (float(cost_v) * 1.5 + 1.0, tree, meta)
 
     def _ensure_pool(self):
         if self._pool is None:
@@ -734,33 +976,38 @@ class ServingRuntime:
 
     def _finalize(self, work: _Work) -> None:
         srv = self.server
+        if work.abandoned:
+            # a zombie completed: the watchdog already rerouted its
+            # tickets — drop the late result on the floor
+            self.fstats.zombie_completions += 1
+            return
         self._inflight.remove(work)
+        work.finalized = True
         now = self.clock.now()
+        if work.kind == "batch":
+            self.stats.solve_s += work.duration
+        if work.error is not None:
+            self._fail_work(work, work.error)
+            return
         attrs = self._dispatch_attrs(work)
         for entry in work.entries:
             for t in entry.tickets:
                 d = t.spans.get("dispatch")
                 if d is not None:
                     d.close(at=now, **attrs)
-        if work.error is not None:
-            self.recorder.incident(
-                "error", None, error=repr(work.error), work_kind=work.kind,
-                items=len(work.entries), at=now)
-            for entry in work.entries:
-                if entry.key is not None:
-                    self._by_key.pop(entry.key, None)
-                for ticket in entry.tickets:
-                    self._pending_tickets -= 1
-                    ticket.error = work.error
-                    self._refuse(ticket,
-                                 f"solve failed: {work.error!r}")
-            return
+        # garbage detector: the cheap plan-cost recheck — a result whose
+        # reported optimum disagrees with its own tree never reaches the
+        # cache (``_complete_entry`` inserts) or a caller
+        bad: list = []
         if work.kind == "batch":
             if work.timings:
                 srv._observe_batch(work.timings)
             for entry, res in zip(work.entries, work.results):
-                self._complete_entry(entry, float(res.cost), res.tree,
-                                     dict(res.meta), now)
+                if self._verify(entry, float(res.cost), res.tree):
+                    self._complete_entry(entry, float(res.cost),
+                                         res.tree, dict(res.meta), now)
+                else:
+                    bad.append(entry)
         else:
             entry = work.entries[0]
             ticket = entry.tickets[0]
@@ -768,7 +1015,175 @@ class ServingRuntime:
             srv._observe_single(ticket.route, ticket.form,
                                 ticket.request.cost, work.duration,
                                 meta)
-            self._complete_entry(entry, cost_v, tree, meta, now)
+            if self._verify(entry, float(cost_v), tree):
+                self._complete_entry(entry, cost_v, tree, meta, now)
+            else:
+                bad.append(entry)
+        if not bad:
+            if work.breaker_key:
+                self.breakers.on_success(work.breaker_key,
+                                         probe=work.probe)
+            return
+        self.fstats.garbage_caught += len(bad)
+        if work.breaker_key:
+            self.breakers.on_failure(work.breaker_key, probe=work.probe)
+        err = faults_mod.EngineError(
+            "garbage output: plan-cost recheck failed against the "
+            "returned tree")
+        self.recorder.incident(
+            "error", None, error=repr(err), work_kind=work.kind,
+            items=len(bad), at=now)
+        solo = work.kind == "single" or len(work.entries) == 1
+        for entry in bad:
+            self._descend(entry, err, solo=solo)
+
+    def _verify(self, entry: _Entry, cost_v: float, tree) -> bool:
+        """Recompute the claimed optimum from the returned tree.
+        ``C_max`` must match bitwise (the parity contract); cap/out
+        trees realize their reported cost to float tolerance; approx/
+        GOO (certified, not bit-exact) and tree-less results are not
+        checkable here."""
+        if not self.config.verify_plans or tree is None:
+            return True
+        lead = entry.tickets[0]
+        if lead.route.method in ("goo", "approx"):
+            return True
+        cost = lead.request.cost
+        card = lead.form.card
+        try:
+            if cost == "max":
+                return float(tree.cost_max(card)) == cost_v
+            if cost in ("cap", "out"):
+                got = float(tree.cost_out(card))
+            elif cost == "smj":
+                got = float(tree.cost_smj(card))
+            else:
+                return True
+        except Exception:                # noqa: BLE001 — a tree that
+            return False                 # can't price itself IS garbage
+        return abs(got - cost_v) <= 1e-9 * max(1.0, abs(cost_v))
+
+    # ------------------------------------------------- failure ladder
+    def _fail_work(self, work: _Work, err: BaseException,
+                   hung: bool = False) -> None:
+        """Entry point for a failed (or hung) dispatch: record the lane
+        breaker, then send every solve unit down the failure ladder
+        (isolation retry -> same-rung backoff retry -> host-exact ->
+        GOO best-effort -> typed error)."""
+        err = faults_mod.as_plan_error(err)
+        if work in self._inflight:
+            self._inflight.remove(work)
+        now = self.clock.now()
+        if hung:
+            work.abandoned = True
+            if self.executor == "thread":
+                self._zombies.append(work)
+            elif work.eta is not None:
+                # recycle the modeled executor: the hung worker is
+                # killed and replaced; the zombie's remaining occupancy
+                # is refunded so later works don't queue behind it
+                self._exec_free = max(
+                    now, self._exec_free - max(work.eta - now, 0.0))
+        else:
+            work.finalized = True
+        if work.breaker_key:
+            self.breakers.on_failure(work.breaker_key, probe=work.probe)
+        self.recorder.incident(
+            "watchdog" if hung else "error", None, error=repr(err),
+            work_kind=work.kind, items=len(work.entries), at=now)
+        for entry in work.entries:
+            for t in entry.tickets:
+                d = t.spans.get("dispatch")
+                if d is not None:
+                    d.close(at=now, error=repr(err), hung=hung)
+        solo = work.kind == "single" or len(work.entries) == 1
+        for entry in list(work.entries):
+            self._descend(entry, err, solo=solo)
+
+    def _descend(self, entry: _Entry, err: "faults_mod.PlanError",
+                 solo: bool) -> None:
+        """One solve unit's next step on the failure ladder."""
+        cfg = self.config
+        lead = entry.tickets[0]
+        now = self.clock.now()
+        for t in entry.tickets:
+            t.faulted = True
+        entry.attempts += 1
+        if not solo:
+            # a batch failed: retry each unit SOLO first — isolation
+            # both recovers the healthy peers and identifies the
+            # poisoned one (it does not consume a backoff retry)
+            entry.attempts = 0
+            self.fstats.isolation_retries += 1
+            self._schedule(now, "retry", entry)
+            return
+        if entry.attempts <= cfg.max_retries:
+            backoff = min(
+                cfg.retry_backoff * (2 ** max(entry.attempts - 1, 0)),
+                cfg.retry_backoff_cap)
+            if self._retry_affordable(entry, backoff):
+                self.fstats.retries += 1
+                self._schedule(now + backoff, "retry", entry)
+                return
+            self.fstats.retry_denied_headroom += 1
+        if entry.rung == 0:
+            # repeated SOLO failure on the primary rung: the canonical
+            # key is poisoned — quarantine it so it can never take down
+            # batch peers again (attempts >= 2 means it failed alone at
+            # least once; a headroom-denied first retry proves nothing)
+            if entry.attempts >= 2:
+                qk = (lead.form.key, lead.request.cost)
+                self.quarantine.add(qk, reason=repr(err))
+                self.fstats.quarantined += 1
+                self.recorder.incident(
+                    "quarantine", None, req_id=lead.request.req_id,
+                    reason=repr(err), at=now)
+            entry.rung = 1
+            entry.attempts = 0
+            ok, probe = self.breakers.allow(
+                f"host:{lead.route.lane_cost}:n={lead.form.q.n}")
+            if ok:
+                self.fstats.failover_host += 1
+                self._start_entry(entry, probe=probe)
+                return
+            self.fstats.breaker_rejections += 1
+        if entry.rung <= 1:
+            entry.rung = 2
+            entry.attempts = 0
+            self.fstats.failover_goo += 1
+            route = self.server.router.failure_fallback(
+                lead.request.cost, type(err).__name__)
+            for t in entry.tickets:
+                t.route = route
+            self._start_entry(entry)
+            return
+        # the GOO floor itself failed: terminal typed error
+        if entry.key is not None:
+            self._by_key.pop(entry.key, None)
+        for t in entry.tickets:
+            self._pending_tickets -= 1
+            self._fail_ticket(t, err)
+
+    def _retry_affordable(self, entry: _Entry, backoff: float) -> bool:
+        """Never retry past remaining headroom: the backoff plus the
+        safety-priced solve must land inside every promised deadline."""
+        deadlines = [t.deadline for t in entry.tickets
+                     if t.deadline is not None and not t.downgraded]
+        if not deadlines:
+            return True
+        est = entry.tickets[0].price_est
+        need = (self.clock.now() + backoff + self._backlog()
+                + self.config.deadline_safety * est)
+        return need <= min(deadlines)
+
+    def _start_entry(self, entry: _Entry, probe: bool = False) -> None:
+        """(Re)dispatch one solve unit solo — retries and ladder rungs
+        all land here, single-flight for the whole coalesced group."""
+        work = _Work("single", [entry], self.clock.now())
+        if entry.rung == 1:
+            work.engine = "host"
+        work.probe = probe
+        self._start(work, None)
 
     def _complete_entry(self, entry, cost_v, tree, meta, now) -> None:
         srv = self.server
@@ -801,6 +1216,7 @@ class ServingRuntime:
         ticket.done = True
         ticket.completed_at = self.clock.now()
         ticket.response = resp
+        ticket.status = getattr(resp, "status", "exact")
         resp.latency = ticket.latency
         cs = self.stats.klass(ticket.slo)
         cs.served += 1
@@ -853,10 +1269,13 @@ class ServingRuntime:
                 if work.future is not None and work.future.done():
                     work.duration = work.future.result()
                     work.future = None
-                    self.stats.solve_s += (work.duration
-                                           if work.kind == "batch" else 0)
                     self._finalize(work)
                     done += 1
+            for work in list(self._zombies):
+                if work.future is None or work.future.done():
+                    self._zombies.remove(work)
+                    work.future = None
+                    self.fstats.zombie_completions += 1
         now = self.clock.now()
         while True:
             t = self.next_event_time()
@@ -865,9 +1284,19 @@ class ServingRuntime:
             _, _, kind, payload = heapq.heappop(self._events)
             if kind == "close":
                 self._close_bucket(payload)
+            elif kind == "retry":
+                self._start_entry(payload)
+            elif kind == "watchdog":
+                if not (payload.finalized or payload.abandoned):
+                    self.fstats.watchdog_fires += 1
+                    self._fail_work(
+                        payload,
+                        faults_mod.PlanTimeoutError(
+                            "watchdog: dispatch declared hung",
+                            est_s=payload.est,
+                            threshold_s=self._hung_threshold(payload)),
+                        hung=True)
             else:
-                if payload.kind == "batch":
-                    self.stats.solve_s += payload.duration
                 self._finalize(payload)
             done += 1
         return done
@@ -915,3 +1344,6 @@ class ServingRuntime:
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
+        if self._hook_installed:
+            engine_mod.set_compile_fault_hook(None)
+            self._hook_installed = False

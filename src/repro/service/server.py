@@ -41,6 +41,7 @@ from repro.obs.metrics import MetricsRegistry
 from repro.service.batch import BatchedSolver, BatchPolicy
 from repro.service.cache import CachedPlan, PlanCache
 from repro.service.canon import CanonicalForm, canonicalize, relabel_tree
+from repro.service import faults
 from repro.service import router as router_mod
 from repro.service.router import Route, Router
 
@@ -79,6 +80,15 @@ class PlanResponse:
     cache_hit: bool
     latency: float = 0.0
     explain: "dict | None" = None
+    # resilience contract (repro.service.faults): every request resolves
+    # to exactly one of these —
+    #   "exact"    bit-identical to the synchronous exact solve
+    #   "degraded" certified best-effort (GOO lane, deadline- or
+    #              failure-driven; meta carries the cost certificate)
+    #   "error"    typed refusal: ``error`` holds the PlanError, the old
+    #              ``meta["shed"]`` / cost=inf fields stay for back-compat
+    status: str = "exact"
+    error: "Exception | None" = None
 
 
 # --------------------------------------------------------------- telemetry
@@ -300,17 +310,21 @@ class PlanServer:
         out = []
         for r in requests:
             ticket = tickets[id(r)]
-            if ticket.error is not None:
-                # the runtime contains solve failures so joined tickets
-                # can't wedge; the sync driver still fails loudly
-                raise ticket.error
             resp = ticket.response
-            if resp is None:        # refused (shed-class SLO only)
+            if resp is None:
+                # refused: shed-class SLO, quarantine, or a solve that
+                # exhausted the failure ladder.  The sync driver never
+                # re-raises — every request gets a typed error response
+                # (meta["shed"] + cost=inf kept for back-compat).
+                err = ticket.error if ticket.error is not None \
+                    else faults.ShedError(ticket.refuse_reason)
                 resp = PlanResponse(
                     req_id=r.req_id, cost=float("inf"), tree=None,
-                    meta={"shed": ticket.refuse_reason},
+                    meta={"shed": ticket.refuse_reason,
+                          "error": repr(err)},
                     route=ticket.route, cache_hit=False,
-                    latency=ticket.latency)
+                    latency=ticket.latency,
+                    status="error", error=err)
             else:
                 self.stats.latency.record(resp.latency)
             out.append(resp)
@@ -319,12 +333,15 @@ class PlanServer:
 
     # --------------------------------------------------- async front end
     def make_runtime(self, clock=None, config=None, duration_fn=None,
-                     executor: str = "inline"):
+                     executor: str = "inline", injector=None):
         """A ``ServingRuntime`` scheduling into this server's cache /
-        router / solver (benchmarks and tests drive it directly)."""
+        router / solver (benchmarks and tests drive it directly).
+        ``injector`` wires a seeded ``faults.FaultInjector`` into the
+        runtime's fault seams (chaos tests and the faults bench row)."""
         from repro.service.runtime import ServingRuntime
         return ServingRuntime(self, clock=clock, config=config,
-                              duration_fn=duration_fn, executor=executor)
+                              duration_fn=duration_fn, executor=executor,
+                              injector=injector)
 
     def async_runtime(self):
         """The server's shared WallClock runtime with a worker-thread
@@ -348,7 +365,9 @@ class PlanServer:
         """Awaitable single-request entry over the async runtime.
         Concurrent callers share the scheduler: their misses batch
         together, duplicates coalesce, and cache hits overtake in-flight
-        solves.  Raises ``RuntimeError`` if the request is shed."""
+        solves.  Raises a typed ``faults.PlanError`` (``ShedError``,
+        ``QuarantinedError``, ``EngineError``...) if the request cannot
+        be answered."""
         import asyncio
 
         rt = self.async_runtime()
@@ -366,8 +385,9 @@ class PlanServer:
             await asyncio.sleep(delay)
         if ticket.refused:
             if ticket.error is not None:
-                raise ticket.error
-            raise RuntimeError(f"request shed: {ticket.refuse_reason}")
+                raise faults.as_plan_error(ticket.error)
+            raise faults.ShedError(
+                f"request shed: {ticket.refuse_reason}")
         self.stats.served += 1
         self.stats.latency.record(ticket.latency)
         return ticket.response
@@ -387,7 +407,9 @@ class PlanServer:
             req_id=req.req_id, cost=entry.cost,
             tree=relabel_tree(entry.tree, form.inverse_perm),
             meta={**entry.meta, "cached": True},
-            route=route, cache_hit=True)
+            route=route, cache_hit=True,
+            status=("degraded" if entry.meta.get("best_effort")
+                    else "exact"))
         if req.explain:
             resp.explain = self._explain_base(req, form, route,
                                               cache_hit=True)
@@ -546,19 +568,34 @@ class PlanServer:
         resp = PlanResponse(
             req_id=req.req_id, cost=cost_v,
             tree=relabel_tree(tree, form.inverse_perm),
-            meta=meta, route=route, cache_hit=False)
+            meta=meta, route=route, cache_hit=False,
+            status=("degraded" if (route.method == "goo"
+                                   or meta.get("best_effort"))
+                    else "exact"))
         if req.explain:
             resp.explain = self._explain_base(req, form, route,
                                               cache_hit=False)
         return resp
 
     def _solve_single(self, q: QueryGraph, card: np.ndarray, cost: str,
-                      route: Route) -> tuple:
+                      route: Route, engine: "str | None" = None) -> tuple:
+        """``engine`` overrides the policy engine for this one solve —
+        the runtime's failure ladder uses it to reroute a broken fused
+        lane onto the host-exact rung (same method, same cache key,
+        bit-identical optimum)."""
         if route.method == "goo":
             tree = best_effort.goo(q, card)
             fn = {"max": tree.cost_max, "out": tree.cost_out,
                   "smj": tree.cost_smj, "cap": tree.cost_out}[cost]
-            return float(fn(card)), tree, {"best_effort": True}
+            val = float(fn(card))
+            # the certificate makes a degraded response auditable: the
+            # bound is recomputed from the returned tree itself, so a
+            # caller can verify it without trusting the solver
+            return val, tree, {"best_effort": True,
+                               "certificate": {
+                                   "kind": "goo", "cost_fn": cost,
+                                   "upper_bound": val,
+                                   "recomputed_from_tree": True}}
         kw = route.kw()
         if route.method == "dpconv":
             # the whole serving tier follows BatchPolicy.engine — also
@@ -566,7 +603,7 @@ class PlanServer:
             # really is the pre-fused path.  Past the fused-cap ceiling
             # the device (min,+) pass's gather tables outgrow their
             # worth; those requests pin the host pipeline.
-            engine = self.solver.policy.engine
+            engine = engine or self.solver.policy.engine
             if (cost == "cap"
                     and q.n > self.router.config.fused_cap_max_n):
                 engine = "host"
@@ -582,5 +619,7 @@ class PlanServer:
                 # strategy-keyed) executable buckets prewarm compiled
                 kw.setdefault("gamma_batch",
                               self.solver.policy.gamma_batch)
+        elif route.method == "dpccp" and engine:
+            kw.setdefault("engine", engine)
         res = optimize(q, card, cost=cost, method=route.method, **kw)
         return float(res.cost), res.tree, dict(res.meta)

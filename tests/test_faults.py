@@ -1,0 +1,435 @@
+"""Resilience-layer tests (``repro.service.faults`` + the runtime's
+failure ladder) — all on ``VirtualClock`` with injected durations, so
+every chaos schedule replays bit-for-bit.
+
+Covers: the breaker FSM, quarantine TTLs, deterministic fault
+injection, watchdog-declared hangs with zombie accounting, garbage
+containment by the plan-cost recheck, deadline-capped retries, the
+admission-time breaker reroute, and the chaos property — ANY seeded
+fault schedule resolves every request to a bit-correct exact plan, a
+certified degraded plan, or a typed ``PlanError``; never a deadlock,
+never a silently wrong plan.
+"""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.service import (PlanServer, RuntimeConfig, VirtualClock,
+                           WorkloadSpec, faults, make_workload)
+
+DUR = {"admit": 0.0, "solve": 1.0, "single": 0.01}
+
+
+def _dur(kind, info):
+    return DUR[kind]
+
+
+def _spec(**kw):
+    base = dict(n_requests=24, seed=0, n_range=(6, 7), pool_size=6,
+                rate=500.0)
+    base.update(kw)
+    return WorkloadSpec(**base)
+
+
+def _mk(max_batch=8, plan=None, **cfg_kw):
+    srv = PlanServer(max_batch=max_batch)
+    clk = VirtualClock()
+    cfg = RuntimeConfig(max_batch=max_batch, **cfg_kw)
+    inj = faults.FaultInjector(plan) if plan is not None else None
+    rt = srv.make_runtime(clock=clk, config=cfg, duration_fn=_dur,
+                          injector=inj)
+    return srv, clk, rt
+
+
+def _batch_miss(reqs):
+    return next(r for r in reqs if r.cost == "max" and r.q.n >= 6)
+
+
+def _ref_cost(req):
+    from repro.core.dpconv import optimize
+    return float(optimize(req.q, req.card, cost=req.cost).cost)
+
+
+# -------------------------------------------------------- breaker FSM
+def test_breaker_fsm_closed_open_halfopen_roundtrip():
+    clk = VirtualClock()
+    cfg = faults.BreakerConfig(failure_threshold=3, cooldown_s=1.0,
+                               half_open_probes=1)
+    b = faults.BreakerBoard(clk, cfg)
+    key = "fused:n=8"
+    # unknown lanes admit without materializing state
+    assert b.allow(key) == (True, False) and not b.lanes
+    # consecutive failures below threshold keep the lane closed
+    b.on_failure(key)
+    b.on_failure(key)
+    assert b.state(key) == "closed" and b.allow(key) == (True, False)
+    # a success resets the consecutive count
+    b.on_success(key)
+    b.on_failure(key)
+    b.on_failure(key)
+    assert b.state(key) == "closed"
+    b.on_failure(key)                       # third consecutive: open
+    assert b.state(key) == "open" and b.opens == 1
+    assert b.allow(key) == (False, False)
+    assert b.open_lanes() == [key]
+    # cooldown elapses -> half-open, exactly one probe admitted
+    clk.advance(1.0)
+    assert b.allow(key) == (True, True)
+    assert b.state(key) == "half_open"
+    assert b.allow(key) == (False, False)   # probe budget spent
+    # probe failure -> straight back to open, fresh cooldown
+    b.on_failure(key, probe=True)
+    assert b.state(key) == "open" and b.opens == 2
+    assert b.allow(key) == (False, False)
+    clk.advance(0.5)
+    assert b.allow(key) == (False, False)   # cooldown restarted
+    clk.advance(0.5)
+    assert b.allow(key) == (True, True)
+    # probe success -> closed; the round trip is counted
+    b.on_success(key, probe=True)
+    assert b.state(key) == "closed" and b.closes == 1
+    assert b.allow(key) == (True, False)
+    snap = b.snapshot()
+    assert snap["opens"] == 2 and snap["closes"] == 1
+    assert snap["open_lanes"] == []
+    assert snap["lanes"][key]["state"] == "closed"
+
+
+def test_breaker_non_probe_success_does_not_close_half_open():
+    clk = VirtualClock()
+    b = faults.BreakerBoard(clk, faults.BreakerConfig(
+        failure_threshold=1, cooldown_s=0.1))
+    b.on_failure("k")
+    clk.advance(0.2)
+    assert b.allow("k") == (True, True)
+    b.on_success("k", probe=False)          # e.g. an unrelated lane hit
+    assert b.state("k") == "half_open"
+    b.on_success("k", probe=True)
+    assert b.state("k") == "closed"
+
+
+# -------------------------------------------------------- quarantine
+def test_quarantine_ttl_expiry():
+    clk = VirtualClock()
+    q = faults.Quarantine(clk, ttl_s=5.0)
+    assert not q.active("k")
+    q.add("k", reason="boom")
+    assert q.active("k") and q.hits == 1
+    clk.advance(4.999)
+    assert q.active("k")
+    clk.advance(0.001)                      # now >= expiry
+    assert not q.active("k") and q.expired == 1
+    assert not q.active("k")                # stays expired
+    snap = q.snapshot()
+    assert snap == {"ttl_s": 5.0, "live": 0, "added": 1, "hits": 2,
+                    "expired": 1}
+
+
+# --------------------------------------------------- injector determinism
+def test_injector_is_deterministic_and_respects_caps():
+    plan = faults.FaultPlan(seed=7, specs=(
+        faults.FaultSpec("dispatch", "raise", rate=0.5),
+        faults.FaultSpec("dispatch", "garbage", rate=0.5, after=3,
+                         max_fires=2),
+        faults.FaultSpec("cache", "raise", rate=0.3),
+    ))
+    a, b = faults.FaultInjector(plan), faults.FaultInjector(plan)
+    seq_a = [a.arm(s) for s in
+             ("dispatch", "cache", "dispatch", "dispatch", "cache",
+              "dispatch", "dispatch", "dispatch", "dispatch")]
+    seq_b = [b.arm(s) for s in
+             ("dispatch", "cache", "dispatch", "dispatch", "cache",
+              "dispatch", "dispatch", "dispatch", "dispatch")]
+    assert seq_a == seq_b                   # bit-for-bit replay
+    assert a.snapshot() == b.snapshot()
+    garbage = [s for s in seq_a
+               if s is not None and s.kind == "garbage"]
+    assert len(garbage) <= 2                # max_fires cap holds
+    # ``after`` skipped the first 3 armings of the garbage spec
+    first3 = [s for s in (seq_a[0], seq_a[2], seq_a[3]) if s is not None]
+    assert all(s.kind != "garbage" for s in first3)
+
+
+def test_fault_spec_validation_and_taxonomy():
+    with pytest.raises(ValueError):
+        faults.FaultSpec("disk")
+    with pytest.raises(ValueError):
+        faults.FaultSpec("dispatch", kind="explode")
+    err = faults.as_plan_error(RuntimeError("boom"))
+    assert isinstance(err, faults.EngineError)
+    assert isinstance(err.__cause__, RuntimeError)
+    assert faults.as_plan_error(err) is err          # idempotent
+    assert faults.TimeoutError is faults.PlanTimeoutError
+    assert issubclass(faults.WorkerDied, faults.EngineError)
+    assert issubclass(faults.CompileError, faults.EngineError)
+    q = faults.QuarantinedError("x", req_id=3)
+    assert q.code == "quarantined" and q.context == {"req_id": 3}
+
+
+# ------------------------------------------------ watchdog + reroute
+def test_watchdog_fires_then_reroutes_and_counts_the_zombie():
+    """A hung dispatch is declared dead after the hung threshold; its
+    tickets reroute down the ladder and recover an exact plan, and the
+    zombie's eventual completion is dropped (counted, not served)."""
+    reqs = make_workload(_spec())
+    miss = _batch_miss(reqs)
+    plan = faults.FaultPlan(seed=0, specs=(
+        faults.FaultSpec("dispatch", "hang", rate=1.0, max_fires=1),))
+    srv, clk, rt = _mk(plan=plan, watchdog_min=0.5)
+    t = rt.submit(miss)
+    rt.drain()
+    assert t.done and not t.refused and t.response is not None
+    assert t.status == "exact" and t.faulted
+    assert t.response.cost == _ref_cost(miss)
+    assert rt.fstats.watchdog_fires == 1
+    assert rt.fstats.zombie_completions == 1
+    assert rt.recorder.counts["watchdog"] == 1
+    assert not rt._inflight and not rt._by_key
+    rt.close()
+
+
+def test_watchdog_disabled_schedules_nothing():
+    reqs = make_workload(_spec())
+    miss = _batch_miss(reqs)
+    plan = faults.FaultPlan(seed=0, specs=(
+        faults.FaultSpec("dispatch", "hang", rate=1.0, max_fires=1),))
+    srv, clk, rt = _mk(plan=plan, watchdog_factor=0.0)
+    t = rt.submit(miss)
+    rt.drain()
+    # no watchdog: the hang just takes (virtual) forever but completes
+    assert t.done and t.status == "exact"
+    assert rt.fstats.watchdog_fires == 0
+    rt.close()
+
+
+# ------------------------------------------------ garbage containment
+def test_garbage_result_never_escapes():
+    """A corrupted optimum is caught by the plan-cost recheck before it
+    reaches the cache or a caller; the retry recovers the exact cost."""
+    reqs = make_workload(_spec())
+    miss = _batch_miss(reqs)
+    plan = faults.FaultPlan(seed=0, specs=(
+        faults.FaultSpec("dispatch", "garbage", rate=1.0, max_fires=1),))
+    srv, clk, rt = _mk(plan=plan)
+    t = rt.submit(miss)
+    rt.drain()
+    assert t.done and t.status == "exact"
+    assert t.response.cost == _ref_cost(miss)        # NOT the garbage
+    assert rt.fstats.garbage_caught == 1
+    # the poisoned value never reached the plan cache: a repeat of the
+    # same key hits the cache and still reads the verified cost
+    t2 = rt.submit(dataclasses.replace(miss, req_id=991))
+    assert t2.done and t2.response.cache_hit
+    assert t2.response.cost == _ref_cost(miss)
+    rt.close()
+
+
+# ---------------------------------------------- retries and headroom
+def test_retry_respects_deadline_headroom():
+    """A backoff that would blow the promised deadline is denied; the
+    ladder skips straight to host-exact failover instead."""
+    reqs = make_workload(_spec())
+    miss = _batch_miss(reqs)
+    tight = dataclasses.replace(miss, latency_budget=5.0)
+    plan = faults.FaultPlan(seed=0, specs=(
+        faults.FaultSpec("dispatch", "raise", rate=1.0, max_fires=1),))
+    srv, clk, rt = _mk(plan=plan, retry_backoff=100.0,
+                       retry_backoff_cap=100.0)
+    t = rt.submit(tight)
+    rt.drain()
+    assert t.done and t.status == "exact"
+    assert t.response.cost == _ref_cost(miss)
+    assert rt.fstats.retry_denied_headroom >= 1
+    assert rt.fstats.retries == 0
+    assert rt.fstats.failover_host >= 1
+    rt.close()
+
+
+def test_retry_with_headroom_stays_on_the_primary_rung():
+    reqs = make_workload(_spec())
+    miss = _batch_miss(reqs)                         # no deadline
+    plan = faults.FaultPlan(seed=0, specs=(
+        faults.FaultSpec("dispatch", "raise", rate=1.0, max_fires=1),))
+    srv, clk, rt = _mk(plan=plan, retry_backoff=100.0,
+                       retry_backoff_cap=100.0)
+    t = rt.submit(miss)
+    rt.drain()
+    assert t.done and t.status == "exact"
+    assert rt.fstats.retries == 1
+    assert rt.fstats.retry_denied_headroom == 0
+    assert rt.fstats.failover_host == 0
+    rt.close()
+
+
+# ------------------------------- quarantine + breaker, end to end
+def test_poisoned_key_quarantined_then_released_after_ttl():
+    """Persistent solo failure walks the whole ladder (GOO floor ->
+    degraded with certificate) and quarantines the key; a second
+    request is refused with a typed error; after the TTL the key — and
+    the opened breaker lanes, via a half-open probe — recover."""
+    reqs = make_workload(_spec())
+    miss = _batch_miss(reqs)
+    # 6 fires: rung-0 initial + 2 retries, rung-1 (host) initial + 2
+    # retries; the GOO floor is injection-exempt and answers degraded
+    plan = faults.FaultPlan(seed=0, specs=(
+        faults.FaultSpec("dispatch", "raise", rate=1.0, max_fires=6),))
+    srv, clk, rt = _mk(plan=plan, quarantine_ttl=30.0)
+    t1 = rt.submit(miss)
+    rt.drain()
+    assert t1.done and not t1.refused
+    assert t1.status == "degraded" and t1.faulted
+    assert t1.response.meta.get("best_effort")
+    cert = t1.response.meta.get("certificate")
+    assert cert and cert["kind"] == "goo"
+    assert cert["upper_bound"] == t1.response.cost
+    assert t1.response.cost >= _ref_cost(miss)       # upper bound
+    assert rt.fstats.quarantined == 1
+    assert rt.fstats.failover_goo == 1
+    assert rt.breakers.open_lanes()                  # lanes DID open
+    # second request on the poisoned key: refused, typed, counted
+    t2 = rt.submit(dataclasses.replace(miss, req_id=991))
+    assert t2.done and t2.status == "error"
+    assert isinstance(t2.error, faults.QuarantinedError)
+    assert rt.fstats.quarantine_refusals == 1
+    assert rt.recorder.counts["quarantine"] >= 1
+    # NOT a shed: backpressure/deadline stats stay clean
+    assert rt.stats.shed == 0 and rt.stats.shed_backpressure == 0
+    # TTL expires; the exhausted injector lets the half-open probe
+    # through and the lane closes again — full recovery
+    clk.advance(31.0)
+    t3 = rt.submit(dataclasses.replace(miss, req_id=992))
+    rt.drain()
+    assert t3.done and t3.status == "exact"
+    assert t3.response.cost == _ref_cost(miss)
+    assert rt.breakers.closes >= 1
+    # the primary (fused) lane closed via the probe; the host fallback
+    # lane stays open until traffic actually probes IT
+    assert not any(k.startswith("fused")
+                   for k in rt.breakers.open_lanes())
+    rt.close()
+
+
+# --------------------------------------------------- compile + cache seams
+def test_compile_fault_recovers_via_ladder():
+    """An injected AOT-compile failure at the engine seam fails the
+    dispatch; the ladder still lands an exact plan."""
+    from repro.core import engine as engine_mod
+
+    reqs = make_workload(_spec())
+    miss = _batch_miss(reqs)
+    plan = faults.FaultPlan(seed=0, specs=(
+        faults.FaultSpec("compile", "raise", rate=1.0, max_fires=1),))
+    srv, clk, rt = _mk(plan=plan)
+    engine_mod.clear_executable_cache()     # force the compile seam
+    try:
+        t = rt.submit(miss)
+        rt.drain()
+        assert t.done and t.status == "exact"
+        assert t.response.cost == _ref_cost(miss)
+        assert t.faulted
+    finally:
+        rt.close()                          # uninstalls the hook
+    assert engine_mod._COMPILE_FAULT_HOOK is None
+
+
+def test_cache_fault_fails_open_to_a_miss():
+    reqs = make_workload(_spec())
+    miss = _batch_miss(reqs)
+    srv0 = PlanServer(max_batch=8)
+    srv0.serve([miss], closed_loop=True)    # this key IS cacheable
+    plan = faults.FaultPlan(seed=0, specs=(
+        faults.FaultSpec("cache", "raise", rate=1.0),))
+    srv, clk, rt = _mk(plan=plan)
+    srv.serve([miss], closed_loop=True)     # prime, through the fault
+    t = rt.submit(dataclasses.replace(miss, req_id=991))
+    rt.drain()
+    # the cache probe faulted both times -> counted, answered via solve
+    assert rt.fstats.cache_faults >= 1
+    assert t.done and t.status == "exact" and t.faulted
+    assert t.response.cost == _ref_cost(miss)
+    rt.close()
+
+
+# ------------------------------------------------------ chaos property
+CHAOS_CFG = dict(watchdog_min=0.5, retry_backoff=1e-3,
+                 retry_backoff_cap=0.05)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_chaos_schedule_never_yields_a_wrong_plan(seed):
+    """THE resilience contract: under ANY seeded fault schedule every
+    request resolves to a bit-correct exact plan, a certified degraded
+    plan, or a typed PlanError — and the runtime drains clean."""
+    reqs = make_workload(_spec(n_requests=16, seed=seed % 7))
+    # fault-free reference: the sync server on the same workload (the
+    # PR-3 parity contract makes it THE ground truth per request)
+    ref_srv = PlanServer(max_batch=8)
+    ref_resps, _ = ref_srv.serve(list(reqs), closed_loop=True)
+    ref = {resp.req_id: resp for resp in ref_resps}
+    plan = faults.FaultPlan.chaos(seed=seed, rate=0.15)
+    srv, clk, rt = _mk(plan=plan, **CHAOS_CFG)
+    tickets = [rt.submit(r) for r in reqs]
+    rt.drain()
+    assert not rt._inflight and not rt._by_key
+    for r, t in zip(reqs, tickets):
+        assert t.done, f"request {r.req_id} never resolved"
+        if t.status == "exact":
+            assert t.response is not None
+            if ref[r.req_id].status == "exact":      # bit-correct
+                assert t.response.cost == ref[r.req_id].cost
+        elif t.status == "degraded":
+            assert t.response is not None
+            meta = t.response.meta
+            assert (meta.get("best_effort")
+                    or meta.get("approx")
+                    or t.response.route.method in ("goo", "approx"))
+        else:
+            assert t.status == "error"
+            assert isinstance(t.error, faults.PlanError)
+    rt.close()
+
+
+def test_chaos_replay_is_bit_identical():
+    """Same seed, same workload, same clock -> the same faults fire at
+    the same points and every observable matches exactly."""
+    from repro.core import engine as engine_mod
+
+    def run(seed):
+        # identical AOT-compile seam armings both runs: the executable
+        # cache is process-global, so start each replay cold
+        engine_mod.clear_executable_cache()
+        reqs = make_workload(_spec(n_requests=16, seed=2))
+        plan = faults.FaultPlan.chaos(seed=seed, rate=0.25)
+        srv, clk, rt = _mk(plan=plan, **CHAOS_CFG)
+        tickets = [rt.submit(r) for r in reqs]
+        rt.drain()
+        out = ([(t.status, t.response.cost if t.response else None,
+                 t.completed_at) for t in tickets],
+               rt.fstats.as_dict(), rt.breakers.snapshot(),
+               rt.injector.snapshot(), rt.quarantine.snapshot())
+        rt.close()
+        return out
+    assert run(13) == run(13)
+    # and a different seed is allowed to differ (sanity: the injector
+    # stream actually depends on the seed)
+    assert run(13)[3] != run(14)[3]
+
+
+def test_zero_fault_path_touches_no_resilience_state():
+    """No injector, no faults: the breaker board, quarantine, and every
+    fault counter stay at zero — the resilience layer is pay-for-use."""
+    reqs = make_workload(_spec())
+    srv, clk, rt = _mk()
+    tickets = [rt.submit(r) for r in reqs]
+    rt.drain()
+    assert all(t.done for t in tickets)
+    assert rt.fstats.as_dict() == {k: 0
+                                   for k in rt.fstats.as_dict()}
+    assert not rt.breakers.lanes
+    assert rt.quarantine.snapshot()["added"] == 0
+    snap = rt._faults_snapshot()
+    assert "injector" not in snap or snap.get("injector") is None
+    rt.close()
