@@ -614,6 +614,135 @@ def run_faults_row(spec_seed: int, n_requests: int,
     }
 
 
+def _sharded_parity_section() -> dict:
+    """Sharded-solve bit-parity booleans for the lanes row (device count
+    permitting).  On a one-device host the solve mesh has nothing to
+    split over, so the section records that and skips; the CI
+    forced-8-device job runs the full set including the n = 15 C_cap
+    case above the old single-device fused ceiling."""
+    import jax
+    from repro.core.ccap import ccap
+    from repro.core.dpconv_max import dpconv_max
+    from repro.core.querygraph import chain, make_cardinalities
+
+    ndev = len(jax.devices())
+    sec = {"devices": ndev}
+    if ndev < 2:
+        sec["skipped"] = ("single device: the solve mesh has nothing "
+                          "to split over")
+        return sec
+    D = 4 if ndev >= 4 else 2
+    sec["shards"] = D
+    sec["fused_cap_max_n_lifted"] = engine_mod.sharded_ceiling(13, D)
+    q = chain(7)
+    card = make_cardinalities(q, seed=0)
+    mx_s = dpconv_max(q, card, engine="fused", shards=D)
+    mx_h = dpconv_max(q, card, engine="host")
+    sec["max_parity"] = bool(mx_s.optimum == mx_h.optimum
+                             and repr(mx_s.tree) == repr(mx_h.tree))
+    cp_s = ccap(q, card, engine="fused", shards=D)
+    cp_h = ccap(q, card, engine="host")
+    sec["cap_parity"] = bool(cp_s.gamma == cp_h.gamma
+                             and cp_s.cout == cp_h.cout
+                             and repr(cp_s.tree) == repr(cp_h.tree))
+    o_s = optimize(q, card, cost="out", method="dpccp", engine="fused",
+                   shards=D)
+    o_h = optimize(q, card, cost="out", method="dpccp", engine="host")
+    sec["out_parity"] = bool(float(o_s.cost) == float(o_h.cost)
+                             and repr(o_s.tree) == repr(o_h.tree))
+    if ndev >= 4:
+        # the scale-out acceptance case: n = 15 C_cap on a 4-way mesh —
+        # above the old single-device fused ceiling (13) — bit-identical
+        # to the host pipeline.  The AOT compile dominates the sharded
+        # wall time; both times are recorded for the trajectory.
+        q15 = chain(15)
+        c15 = make_cardinalities(q15, seed=0)
+        t0 = time.perf_counter()
+        s15 = ccap(q15, c15, engine="fused", shards=4)
+        sec["cap_n15_sharded_s"] = round(time.perf_counter() - t0, 2)
+        t0 = time.perf_counter()
+        h15 = ccap(q15, c15, engine="host")
+        sec["cap_n15_host_s"] = round(time.perf_counter() - t0, 2)
+        sec["cap_n15_parity"] = bool(s15.gamma == h15.gamma
+                                     and s15.cout == h15.cout
+                                     and repr(s15.tree) == repr(h15.tree))
+    return sec
+
+
+def run_lanes_row() -> "tuple[dict, int]":
+    """The N-lane scale-out row — emitted unconditionally, the smoke
+    gate reads it.  Two measurements:
+
+    1. **modeled scheduling throughput** — six executable buckets
+       ((n, cost) pairs, one full micro-batch each, distinct
+       cardinalities so nothing caches or coalesces) served through a
+       1-lane and a 4-lane runtime on ``VirtualClock`` with constant
+       injected solve durations.  Virtual time prices only the
+       *scheduling* layer — lane placement, serial-executor occupancy —
+       so the aggregate plans/sec ratio is the deterministic scale-out
+       factor of the lane scheduler itself (>= 1.5x at 4 lanes is the
+       acceptance gate; the bucket spread puts the ideal at 3x), free
+       of shared-CPU noise.  Every response is bit-compared across lane
+       counts: lanes change WHERE a solve runs, never WHAT it computes.
+    2. **sharded-solve parity** — ``_sharded_parity_section``:
+       bitwise fused-vs-host booleans per cost program on the solve
+       mesh, incl. the n = 15 above-ceiling C_cap case (>= 4 devices).
+    """
+    from repro.core.querygraph import chain, make_cardinalities, star
+    from repro.service.server import PlanRequest
+
+    dur = {"admit": 0.0, "solve": 0.01, "single": 0.005}
+    stream = []
+    rid = 0
+    for n in (6, 7, 8):
+        for cost, topo in (("max", chain), ("cap", star)):
+            q = topo(n)
+            for _ in range(8):
+                stream.append(PlanRequest(
+                    q=q, card=make_cardinalities(q, seed=1000 + rid),
+                    cost=cost, req_id=rid))
+                rid += 1
+
+    def run(lanes):
+        srv = _make_server(8, cache=False)
+        rt = srv.make_runtime(
+            clock=VirtualClock(),
+            config=RuntimeConfig(max_batch=8, lanes=lanes),
+            duration_fn=lambda kind, info: dur[kind])
+        tickets = [rt.submit(r) for r in stream]
+        rt.drain()
+        makespan = max(t.completed_at for t in tickets)
+        return rt, tickets, (len(tickets) / makespan if makespan > 0
+                             else 0.0)
+
+    rt1, t1, rate1 = run(1)
+    rt4, t4, rate4 = run(4)
+    mism = 0
+    for a, b in zip(t1, t4):
+        if (a.response is None or b.response is None
+                or float(a.response.cost) != float(b.response.cost)
+                or repr(a.response.tree) != repr(b.response.tree)):
+            mism += 1
+            print(f"  LANES PARITY MISMATCH req={a.request.req_id}: "
+                  f"lanes1={getattr(a.response, 'cost', None)!r} "
+                  f"lanes4={getattr(b.response, 'cost', None)!r}",
+                  file=sys.stderr)
+    row = {
+        "config": "lanes/modeled/1v4",
+        "n_requests": len(stream),
+        "modeled_plans_per_s": {"lanes1": round(rate1, 1),
+                                "lanes4": round(rate4, 1)},
+        "scaling_x": round(rate4 / rate1, 3) if rate1 > 0 else 0.0,
+        "lane_dispatches": {str(k): v for k, v in
+                            sorted(rt4.stats.lane_dispatches.items())},
+        "steals": rt4.stats.steals,
+        "hedges": rt4.stats.hedges,
+        "parity_mismatches": mism,
+        "sharded": _sharded_parity_section(),
+    }
+    return row, mism
+
+
 def run_cold_start(reqs, batch_size: int, gamma: int = 1) -> dict:
     """The prewarm satellite's measurement: serve a cold sub-workload
     (executable cache cleared) with and without ``PlanServer.prewarm``.
@@ -945,6 +1074,32 @@ def main(argv=None) -> int:
               f"{faults_row['breaker_opens']}, closes="
               f"{faults_row['breaker_closes']})", file=sys.stderr)
 
+    # ------------------------------------------------ N-lane scale-out
+    lanes_row, lanes_bad = run_lanes_row()
+    rows.append(lanes_row)
+    parity_fail += lanes_bad
+    shd = lanes_row["sharded"]
+    print(f"{lanes_row['config']},,,,"
+          f"modeled1={lanes_row['modeled_plans_per_s']['lanes1']}/s;"
+          f"modeled4={lanes_row['modeled_plans_per_s']['lanes4']}/s;"
+          f"scaling={lanes_row['scaling_x']}x;"
+          f"lane_dispatches={lanes_row['lane_dispatches']};"
+          f"sharded_devices={shd['devices']}", flush=True)
+    if lanes_row["scaling_x"] < 1.5:
+        invariant_fail += 1
+        print("#   INVARIANT VIOLATION: 4-lane modeled throughput only "
+              f"{lanes_row['scaling_x']}x the 1-lane runtime (>= 1.5x "
+              "required)", file=sys.stderr)
+    shard_parity = [k for k in shd if k.endswith("_parity")]
+    if any(not shd[k] for k in shard_parity):
+        invariant_fail += 1
+        print("#   INVARIANT VIOLATION: sharded solve parity failed: "
+              f"{ {k: shd[k] for k in shard_parity} }", file=sys.stderr)
+    if shard_parity:
+        print(f"#   sharded parity (D={shd.get('shards')}): "
+              + ", ".join(f"{k}={shd[k]}" for k in sorted(shard_parity)),
+              flush=True)
+
     # -------------------------------------------- cold start / prewarm
     cold = {}
     if not args.skip_cold:
@@ -1049,6 +1204,7 @@ def main(argv=None) -> int:
                      "hit_p99_ms", "miss_solve_ms_mean", "per_class")},
         "obs": obs_row,
         "faults": faults_row,
+        "lanes": lanes_row,
         "out_lane": {
             "queries": out_row["queries_on_lane"],
             "parity_checked": out_row["parity_checked"],

@@ -17,8 +17,13 @@
 # assert the resilience contract on the bench's seeded chaos row: every
 # request resolves (bit-correct, certified-degraded, or typed error),
 # zero wrong-plan escapes, at least one breaker open->close round trip,
-# and < 2% zero-fault overhead for the always-on layer; plus a repo
-# hygiene check that no .pyc/__pycache__ artifact is ever tracked.
+# and < 2% zero-fault overhead for the always-on layer.  The lanes
+# gates assert the scale-out contract: >= 1.5x modeled 4-lane
+# throughput vs 1 lane on the same stream, zero cross-lane parity
+# mismatches, and sharded-solve bit parity (with the n=15
+# above-the-ceiling C_cap case required on any >= 4-device host);
+# plus a repo hygiene check that no .pyc/__pycache__ artifact is ever
+# tracked.
 #
 #     scripts/smoke.sh            # full tier-1 + quick serve bench
 #     scripts/smoke.sh --quick    # bench + summary gates only (CI runs
@@ -93,12 +98,31 @@ assert obs["recorder_shed_exact"] and obs["recorder_miss_exact"] \
 # noisy neighbors it can inflate arbitrarily even when the tracer did
 # not regress — the absolute per-request cost (true value ~10-20us vs
 # ~300us/plan) is the noise-tolerant tripwire for the same regression
-# class, so either bound passing means tracing is cheap.
+# class, so either bound passing means tracing is cheap.  On a forced
+# multi-device host (the scale-out CI job: 8 emulated devices
+# oversubscribing the same cores) every pure-python microsecond
+# inflates with the device-thread contention, so the absolute bound
+# widens there; the single-device gate stays exactly as strict.
+us_bound = 30.0 if s["lanes"]["sharded"]["devices"] <= 1 else 75.0
 assert obs["overhead_frac"] < 0.05 \
-    or obs["span_overhead_us_per_request"] < 30.0, \
+    or obs["span_overhead_us_per_request"] < us_bound, \
     f"span tracing cost {obs['overhead_frac']:.1%} of plans/sec " \
     f"({obs['span_overhead_us_per_request']}us/request; gate: <5% " \
-    f"or <30us)"
+    f"or <{us_bound}us)"
+ln = s["lanes"]
+assert ln["parity_mismatches"] == 0, \
+    f"cross-lane parity mismatches: {ln['parity_mismatches']}"
+assert ln["scaling_x"] >= 1.5, \
+    f"4-lane modeled throughput only {ln['scaling_x']}x the 1-lane " \
+    f"runtime (>= 1.5x required)"
+shd = ln["sharded"]
+for k in shd:
+    if k.endswith("_parity"):
+        assert shd[k], f"sharded solve parity failed: {k}"
+if shd["devices"] >= 4:
+    # the forced-8-device CI job must exercise the above-ceiling case
+    assert shd.get("cap_n15_parity") is True, \
+        "n=15 sharded C_cap case missing or mismatched on a >=4-device host"
 f = s["faults"]
 assert f["faults_fired"] > 0, "chaos row injected nothing"
 assert f["unresolved"] == 0, \
@@ -120,7 +144,8 @@ print("smoke gates: fused-cap + fused-out parity/dispatch/extraction "
       "fast-path) + obs (zero span leaks, lane shapes, exact recorder "
       "capture, <5% tracing overhead) + faults (chaos resolves every "
       "request, zero wrong plans, breaker round trip, <2% zero-fault "
-      "overhead) OK")
+      "overhead) + lanes (>=1.5x modeled 4-lane scaling, zero cross-"
+      "lane mismatches, sharded solve parity) OK")
 PY
 
 # repo hygiene: compiled artifacts must never be tracked

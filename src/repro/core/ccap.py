@@ -64,6 +64,7 @@ def ccap(
     engine: str = "auto",              # "auto" | "fused" | "host"
     gamma_batch: int = 1,              # pass-1 probe width (fused only)
     connected: bool = False,           # exclude cross products in pass 2
+    shards: int = 1,                   # solve-mesh width (fused only)
 ) -> CcapResult:
     """``connected=True`` restricts pass 2 to the DPccp search space (no
     cross products): fused runs the connectivity-gated (min,+) sweep,
@@ -90,7 +91,7 @@ def ccap(
             fc = engine_mod.fused_ccap(
                 np.asarray(card, np.float64)[None, :], n,
                 gamma_slack=gamma_slack, extract_tree=extract_tree,
-                gamma_batch=gamma_batch, qs=[q])
+                gamma_batch=gamma_batch, qs=[q], shards=shards)
             cout = float(fc.couts[0])
             assert np.isfinite(cout), \
                 "connected cap infeasible — no cross-product-free plan " \
@@ -112,7 +113,7 @@ def ccap(
         fc = engine_mod.fused_ccap(
             np.asarray(card, np.float64)[None, :], n,
             gamma_slack=gamma_slack, extract_tree=extract_tree,
-            gamma_batch=gamma_batch)
+            gamma_batch=gamma_batch, shards=shards)
         cout = float(fc.couts[0])
         assert np.isfinite(cout), \
             "cap infeasible — gamma below C_max optimum?"
@@ -161,6 +162,7 @@ def ccap_batch(
     engine: str = "fused",
     gamma_batch: int = 1,
     connected: bool = False,
+    shards: int = 1,
 ) -> "list[CcapResult]":
     """Solve B same-``n`` C_cap instances in lockstep — the serving
     batch-lane entry point.  ``engine="fused"`` runs the whole batch
@@ -183,7 +185,8 @@ def ccap_batch(
         fc = engine_mod.fused_ccap(cards, n, gamma_slack=gamma_slack,
                                    extract_tree=extract_tree,
                                    gamma_batch=gamma_batch,
-                                   qs=list(qs) if connected else None)
+                                   qs=list(qs) if connected else None,
+                                   shards=shards)
         out = []
         for b in range(B):
             cout = float(fc.couts[b])

@@ -63,6 +63,9 @@ def optimize(q: QueryGraph, card: np.ndarray, cost: str = "max",
             return PlanResult(float(dp[-1]), tree, {})
         if method == "dpccp":
             engine = kw.pop("engine", "host")
+            # solve-mesh width rides the fused path only; the host
+            # enumerator has no device to shard
+            shards = int(kw.pop("shards", 1) or 1)
             if engine not in ("host", "fused"):
                 raise ValueError(f"unknown dpccp engine {engine!r}")
             if (engine == "fused" and not kw and n >= 2
@@ -70,7 +73,7 @@ def optimize(q: QueryGraph, card: np.ndarray, cost: str = "max",
                     and q.is_connected(q.full_mask)):
                 fo = engine_mod.fused_out(
                     [q], np.asarray(card, np.float64)[None, :], n,
-                    extract_tree=extract_tree)
+                    extract_tree=extract_tree, shards=shards)
                 return PlanResult(float(fo.couts[0]), fo.trees[0],
                                   {"engine": "fused",
                                    "dispatches": fo.dispatches})
@@ -131,11 +134,13 @@ def optimize_batch(qs, cards, cost: str = "max", method: str = "dpconv",
                             "batched": True}) for r in rs]
     if (cost == "out" and method == "dpccp" and len(qs) > 1
             and len(ns) == 1 and qs[0].n >= 2 and dp_fn is None
-            and set(kw) == {"engine"} and kw["engine"] == "fused"
+            and set(kw) <= {"engine", "shards"}
+            and kw.get("engine") == "fused"
             and all(not q.hyperedges and q.is_connected(q.full_mask)
                     for q in qs)):
         fo = engine_mod.fused_out(qs, np.stack(cards), qs[0].n,
-                                  extract_tree=extract_tree)
+                                  extract_tree=extract_tree,
+                                  shards=int(kw.get("shards", 1) or 1))
         return [PlanResult(float(fo.couts[b]), fo.trees[b],
                            {"engine": "fused",
                             "dispatches": fo.dispatches,

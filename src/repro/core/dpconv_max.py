@@ -89,6 +89,7 @@ def dpconv_max(
     early_exit: bool = False,
     engine: str = "auto",
     backend: str = "xla",
+    shards: int = 1,
 ) -> CmaxResult:
     """Optimal C_max value (and join tree) for query graph ``q`` with dense
     cardinality table ``card`` over the subset lattice.
@@ -122,10 +123,14 @@ def dpconv_max(
                               direct_layers=direct_layers,
                               extract_tree=extract_tree,
                               backend=backend,
-                              gamma_batch=gamma_batch)
+                              gamma_batch=gamma_batch,
+                              shards=shards)
         return CmaxResult(optimum=float(fs.optima[0]), tree=fs.trees[0],
                           feasibility_passes=fs.passes, engine="fused",
                           dispatches=fs.dispatches)
+    if shards > 1:
+        raise ValueError("shards > 1 is a fused-engine concept; the "
+                         "host loop runs on one device")
     assert card.shape == (size,)
     pc_np = popcounts(n)
     pc = jnp.asarray(pc_np, dtype=jnp.int32)
@@ -194,6 +199,7 @@ def dpconv_max_batch(
     engine: str = "auto",
     backend: str = "xla",
     gamma_batch: int = 1,
+    shards: int = 1,
 ) -> "list[CmaxResult]":
     """Solve B same-``n`` DPconv[max] instances in lockstep.
 
@@ -236,10 +242,13 @@ def dpconv_max_batch(
                              "use engine='host' or 'auto'")
         fs = fused_dpconv_max(cards, n, direct_layers=direct_layers,
                               extract_tree=extract_tree, backend=backend,
-                              gamma_batch=gamma_batch)
+                              gamma_batch=gamma_batch, shards=shards)
         return [CmaxResult(optimum=float(fs.optima[b]), tree=fs.trees[b],
                            feasibility_passes=fs.passes, engine="fused",
                            dispatches=fs.dispatches) for b in range(B)]
+    if shards > 1:
+        raise ValueError("shards > 1 is a fused-engine concept; the "
+                         "host loop runs on one device")
     if gamma_batch > 1:
         raise ValueError("the host batch loop is binary-search only; "
                          "gamma_batch > 1 runs on the fused engine")

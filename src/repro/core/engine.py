@@ -20,9 +20,11 @@ host only assembles ``JoinTree`` objects from the returned split
 arrays).
 
 Executables are cached by ``(n, B_bucket, C_bucket, backend,
-direct_layers, extract, cost, gamma_batch)`` as ahead-of-time compiled
-artifacts (``jit(...).lower(...).compile()``), so the serving tier never
-re-traces in steady state; ``prewarm`` compiles the buckets a configured
+direct_layers, extract, cost, gamma_batch, shards, mesh-fingerprint)``
+as ahead-of-time compiled artifacts (``jit(...).lower(...).compile()``),
+so the serving tier never re-traces in steady state — and sharded /
+single-device builds (or the same width on different devices) can never
+alias one cache slot; ``prewarm`` compiles the buckets a configured
 server can hit before traffic arrives (killing the cold-bucket p99
 spike), and ``stats()`` exposes dispatch/solve/round counters that
 ``benchmarks/serve_bench.py`` asserts on.
@@ -122,10 +124,14 @@ class DispatchRecord:
     rounds: int = 0            # while-loop rounds (filled post-solve)
     flops: float = 0.0         # xla_cost_analysis, whole program
     bytes_accessed: float = 0.0
+    shards: int = 1            # solve-mesh width (1 = single device)
+    devices: tuple = ()        # mesh device ids ((platform, ids) pair)
+    lane: "int | None" = None  # serving lane that issued the dispatch
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["key"] = list(self.key)
+        d["devices"] = list(self.devices)
         return d
 
 
@@ -168,6 +174,41 @@ def _profile_append(rec: DispatchRecord) -> None:
     h("engine.execute_s").observe(rec.execute_s)
     if not rec.aot_cache_hit:
         h("engine.compile_s").observe(rec.compile_s)
+    if rec.lane is not None:   # per-lane dimension on the dispatch count
+        _STATS.registry.counter(f"engine.dispatches.lane{rec.lane}").inc()
+
+
+_LANE_LOCAL = threading.local()
+
+
+class dispatch_lane:
+    """Context manager attributing engine dispatches to a serving lane.
+
+    The lane is an N-lane-runtime concept the solver call chain has no
+    business threading through every ``optimize`` signature, so it rides
+    a thread-local instead: each lane's executor (or the batched solver
+    it owns) wraps its solve in ``with engine.dispatch_lane(k)`` and
+    every ``DispatchRecord`` produced inside carries ``lane=k`` — the
+    flight recorder and the per-lane ``engine.dispatches.lane<k>``
+    counters can then explain which lane ran what.  Reentrant-safe by
+    save/restore; thread-safe because each executor thread has its own
+    slot."""
+
+    def __init__(self, lane: "int | None"):
+        self.lane = lane
+
+    def __enter__(self):
+        self._prev = getattr(_LANE_LOCAL, "lane", None)
+        _LANE_LOCAL.lane = self.lane
+        return self
+
+    def __exit__(self, *exc):
+        _LANE_LOCAL.lane = self._prev
+        return False
+
+
+def current_lane() -> "int | None":
+    return getattr(_LANE_LOCAL, "lane", None)
 
 
 def clear_executable_cache() -> None:
@@ -231,27 +272,72 @@ def _next_pow2(x: int) -> int:
     return 1 << max(x - 1, 0).bit_length()
 
 
+_SOLVE_MESHES: dict = {}
+
+
+def solve_mesh(shards: int):
+    """The cached 1-D solve mesh for ``shards`` devices (one per width —
+    meshes are hashable but building one touches device state, so the
+    engine owns the lookup)."""
+    m = _SOLVE_MESHES.get(shards)
+    if m is None:
+        from repro.launch.mesh import make_solve_mesh
+        m = _SOLVE_MESHES[shards] = make_solve_mesh(shards)
+    return m
+
+
+def _mesh_identity(shards: int) -> tuple:
+    """The device/mesh identity appended to every executable-cache key
+    (and stamped on ``DispatchRecord.devices``): sharded and
+    single-device executables — or the same width on *different*
+    devices — must never alias.  Single-device solves are keyed by the
+    default device's identity for the same reason."""
+    from repro.launch.mesh import mesh_fingerprint
+    if shards > 1:
+        return mesh_fingerprint(solve_mesh(shards))
+    d = jax.devices()[0]
+    return (d.platform, (int(d.id),))
+
+
+def sharded_ceiling(base_n: int, shards: int) -> int:
+    """How far a D-way solve mesh lifts a fused-tier ``n`` ceiling.
+
+    The ceiling is per-device memory on the dominant (min,+) layer
+    tensor ``C(n,k)·2^k`` ≈ 3^n/√n; sharding divides it by D, and each
+    +1 in n multiplies it by 3, so D devices buy ~log₃(D) ≈ log₂(D)/1.58
+    extra relations — claim a conservative +1 per doubling, clamped at
+    the int32/extraction tier bound n = 15.
+    """
+    if shards <= 1:
+        return base_n
+    return min(base_n + max(0, int(shards).bit_length() - 1), 15)
+
+
 def get_executable(n: int, B: int, C: int, backend: str = "xla",
                    direct_layers: int = 4, extract: bool = True,
-                   cost: str = "max", gamma_batch: int = 1):
+                   cost: str = "max", gamma_batch: int = 1,
+                   shards: int = 1):
     """AOT-compiled whole-solve executable for one shape bucket.
 
     Keyed by ``(n, B_bucket, C_bucket, backend, direct_layers, extract,
-    cost, gamma_batch)``; a hit returns the compiled artifact with zero
-    tracing work — the steady-state serving path never re-enters the
-    tracer.
+    cost, gamma_batch, shards, mesh-fingerprint)``; a hit returns the
+    compiled artifact with zero tracing work — the steady-state serving
+    path never re-enters the tracer.
     """
     return _executable(n, B, C, backend, direct_layers, extract, cost,
-                       gamma_batch)[0]
+                       gamma_batch, shards)[0]
 
 
 def _executable(n: int, B: int, C: int, backend: str, direct_layers: int,
-                extract: bool, cost: str, gamma_batch: int):
+                extract: bool, cost: str, gamma_batch: int,
+                shards: int = 1):
     """Cache lookup + compile with profiling: returns ``(exe, meta,
     hit)`` where ``meta`` carries the bucket key, one-time compile
     seconds, XLA flops/bytes and the lattice program card."""
+    shards = max(1, int(shards))
+    devs = _mesh_identity(shards)
     key = (n, B, C, backend, direct_layers, bool(extract), cost,
-           gamma_batch)
+           gamma_batch, shards, devs)
     exe = _EXEC_CACHE.get(key)
     if exe is not None:
         _STATS.inc("exec_cache_hits")
@@ -259,6 +345,7 @@ def _executable(n: int, B: int, C: int, backend: str, direct_layers: int,
     if _COMPILE_FAULT_HOOK is not None:
         _COMPILE_FAULT_HOOK(n=n, B=B, C=C, backend=backend, cost=cost)
     _STATS.inc("exec_cache_misses")
+    mesh = solve_mesh(shards) if shards > 1 else None
     t0 = time.perf_counter()  # timing: measured-duration (compile wall)
     args = [
         jax.ShapeDtypeStruct((B, 1 << n), jnp.float64),
@@ -267,16 +354,19 @@ def _executable(n: int, B: int, C: int, backend: str, direct_layers: int,
     ]
     if cost == "max":
         fn = lattice.build_max_program(n, direct_layers, backend, extract,
-                                       gamma_batch)
+                                       gamma_batch, shards=shards,
+                                       mesh=mesh)
     elif cost == "cap":
         fn = lattice.build_cap_program(n, direct_layers, backend, extract,
-                                       gamma_batch)
+                                       gamma_batch, shards=shards,
+                                       mesh=mesh)
         args.append(jax.ShapeDtypeStruct((), jnp.float64))
     elif cost == "cap_conn":
         # the no-cross-products cap: pass 2 under connected-split masks
         # (the same ``conn`` input the out program consumes)
         fn = lattice.build_cap_program(n, direct_layers, backend, extract,
-                                       gamma_batch, connected=True)
+                                       gamma_batch, connected=True,
+                                       shards=shards, mesh=mesh)
         args.append(jax.ShapeDtypeStruct((), jnp.float64))
         args.append(jax.ShapeDtypeStruct((B, 1 << n), jnp.bool_))
     elif cost == "out":
@@ -285,7 +375,8 @@ def _executable(n: int, B: int, C: int, backend: str, direct_layers: int,
         # connected-subset masks.  Callers key it with the canonical
         # (C=0, backend="xla", gamma_batch=1) tuple — the (min,+) sweep
         # is f64-only and probes nothing.
-        fn = lattice.build_out_program(n, extract)
+        fn = lattice.build_out_program(n, extract, shards=shards,
+                                       mesh=mesh)
         args = [
             jax.ShapeDtypeStruct((B, 1 << n), jnp.float64),
             jax.ShapeDtypeStruct((B, 1 << n), jnp.bool_),
@@ -293,12 +384,13 @@ def _executable(n: int, B: int, C: int, backend: str, direct_layers: int,
     else:
         raise ValueError(f"unknown fused cost {cost!r}")
     exe = jax.jit(fn).lower(*args).compile()
-    meta = {"key": key,
+    meta = {"key": key, "shards": shards, "devices": devs,
             # timing: measured-duration (AOT compile)
             "compile_s": time.perf_counter() - t0,
             "program": lattice.program_card(n, cost, backend=backend,
                                             gamma_batch=gamma_batch,
-                                            extract=bool(extract)),
+                                            extract=bool(extract),
+                                            shards=shards),
             "flops": 0.0, "bytes_accessed": 0.0}
     try:  # lazy: costmodel pulls in the model stack; optional here
         from repro.launch.costmodel import xla_cost_analysis
@@ -330,7 +422,7 @@ def candidate_bucket(n: int) -> int:
 
 def prewarm(ns, max_batch: int = 16, backend: str = "xla",
             direct_layers: int = 4, costs=("max",), gamma_batch: int = 1,
-            extract: bool = True) -> dict:
+            extract: bool = True, shards: int = 1) -> dict:
     """Compile the executable buckets a server configured for ``ns`` can
     hit, before traffic arrives: for each ``n``, every power-of-two
     batch bucket up to ``max_batch`` (including the chunk-1 tier) at the
@@ -344,11 +436,12 @@ def prewarm(ns, max_batch: int = 16, backend: str = "xla",
         while b <= max_batch:
             for cost in costs:
                 if cost == "out":      # no candidate table, no probing
-                    get_executable(n, b, 0, "xla", 4, extract, "out", 1)
+                    get_executable(n, b, 0, "xla", 4, extract, "out", 1,
+                                   shards=shards)
                 else:
                     get_executable(n, b, candidate_bucket(n), backend,
                                    direct_layers, extract, cost,
-                                   gamma_batch)
+                                   gamma_batch, shards=shards)
             b *= 2
     compiled = _STATS.exec_cache_misses - before
     _STATS.inc("prewarmed", compiled)
@@ -386,7 +479,10 @@ def _record(cost: str, n: int, Bp: int, C: int, backend: str,
                           aot_cache_hit=hit,
                           compile_s=0.0 if hit else meta["compile_s"],
                           execute_s=0.0, flops=meta["flops"],
-                          bytes_accessed=meta["bytes_accessed"])
+                          bytes_accessed=meta["bytes_accessed"],
+                          shards=meta.get("shards", 1),
+                          devices=meta.get("devices", ()),
+                          lane=current_lane())
 
 
 def candidate_table(card: np.ndarray, n: int) -> np.ndarray:
@@ -432,7 +528,8 @@ def _trees_from_arrays(nodes: np.ndarray, lidx: np.ndarray,
 
 def fused_dpconv_max(cards: np.ndarray, n: int, direct_layers: int = 4,
                      extract_tree: bool = True, backend: str = "xla",
-                     gamma_batch: int = 1) -> FusedSolve:
+                     gamma_batch: int = 1,
+                     shards: int = 1) -> FusedSolve:
     """Solve B same-``n`` DPconv[max] instances in ONE device dispatch.
 
     ``cards`` is (B, 2^n).  Optima and trees are bit-identical to B
@@ -440,7 +537,8 @@ def fused_dpconv_max(cards: np.ndarray, n: int, direct_layers: int = 4,
     inside the compiled while loop.  ``gamma_batch = G > 1`` probes G
     thresholds per round on a leading gate axis — (G+1)-ary search,
     ~log_{G+1} instead of ~log_2 rounds, still one dispatch and the same
-    optima/trees.
+    optima/trees.  ``shards = D > 1`` runs the program ``shard_map``-ped
+    over the D-device solve mesh (still one dispatch, same results).
     """
     cards = np.asarray(cards, np.float64)
     if cards.ndim == 1:
@@ -451,7 +549,8 @@ def fused_dpconv_max(cards: np.ndarray, n: int, direct_layers: int = 4,
     cards_pad, cand_pad, hi0, Bp, C = _pad_candidates(cards, n)
 
     exe, emeta, hit = _executable(n, Bp, C, backend, direct_layers,
-                                  extract_tree, "max", gamma_batch)
+                                  extract_tree, "max", gamma_batch,
+                                  shards)
     prof = _record("max", n, Bp, C, backend, emeta, hit)
     disp0 = _STATS.dispatches
     rec0 = jointree.recursive_extractions()
@@ -483,7 +582,8 @@ def fused_dpconv_max(cards: np.ndarray, n: int, direct_layers: int = 4,
 
 
 def fused_out(qs: list, cards: np.ndarray, n: int,
-              extract_tree: bool = True) -> FusedOutSolve:
+              extract_tree: bool = True,
+              shards: int = 1) -> FusedOutSolve:
     """Solve B same-``n`` connected C_out instances (DPccp semantics —
     connected csg/cmp pairs only, no cross products) in ONE device
     dispatch.
@@ -519,7 +619,7 @@ def fused_out(qs: list, cards: np.ndarray, n: int,
             [conn, np.repeat(conn[:1], Bp - B, axis=0)], axis=0)
 
     exe, emeta, hit = _executable(n, Bp, 0, "xla", 4, extract_tree,
-                                  "out", 1)
+                                  "out", 1, shards)
     prof = _record("out", n, Bp, 0, "xla", emeta, hit)
     disp0 = _STATS.dispatches
     rec0 = jointree.recursive_extractions()
@@ -547,7 +647,8 @@ def fused_ccap(cards: np.ndarray, n: int, gamma_slack: float = 1.0,
                direct_layers: int = 4, extract_tree: bool = True,
                backend: str = "xla",
                gamma_batch: int = 1,
-               qs: "list | None" = None) -> FusedCapSolve:
+               qs: "list | None" = None,
+               shards: int = 1) -> FusedCapSolve:
     """Solve B same-``n`` C_cap instances (Sec. 8) in ONE device
     dispatch: pass-1 gamma search, gamma-pruned (min,+) C_out pass, and
     witness-tree extraction all inside the same program.
@@ -589,7 +690,8 @@ def fused_ccap(cards: np.ndarray, n: int, gamma_slack: float = 1.0,
         cost = "cap_conn"
 
     exe, emeta, hit = _executable(n, Bp, C, backend, direct_layers,
-                                  extract_tree, cost, gamma_batch)
+                                  extract_tree, cost, gamma_batch,
+                                  shards)
     prof = _record(cost, n, Bp, C, backend, emeta, hit)
     disp0 = _STATS.dispatches
     rec0 = jointree.recursive_extractions()

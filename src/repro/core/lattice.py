@@ -111,6 +111,52 @@ def direct_layer_indices(n: int, k: int):
     return (sets, subs, comps)
 
 
+# The sharded layer sweeps gather at most this many elements per batch
+# row per chunk (rows_per_chunk = SHARD_CHUNK_ELEMS >> k), bounding the
+# (..., rows, 2^k) working set on each device regardless of layer width.
+SHARD_CHUNK_ELEMS = 1 << 21
+
+
+@functools.lru_cache(maxsize=128)
+def sharded_layer_indices(n: int, k: int, shards: int):
+    """``direct_layer_indices`` padded so the sets axis splits into
+    ``shards`` equal blocks (device d takes rows [d*blk, (d+1)*blk)).
+
+    Pad rows point at index 0 (the empty set): pc[0] = 0 != k, so the
+    per-layer ``pc == k`` select discards anything a pad row writes, and
+    dp[∅] (0 for counting, +inf for min-plus) keeps the pad arithmetic
+    NaN-free.  Returns (sets, subs, comps, blk) — numpy, same tracer-leak
+    rule as ``direct_layer_indices``.
+    """
+    sets, subs, comps = direct_layer_indices(n, k)
+    m = sets.shape[0]
+    blk = -(-m // shards)
+    pad = blk * shards - m
+    if pad:
+        sets = np.concatenate([sets, np.zeros(pad, sets.dtype)])
+        subs = np.concatenate(
+            [subs, np.zeros((pad, subs.shape[1]), subs.dtype)])
+        comps = np.concatenate(
+            [comps, np.zeros((pad, comps.shape[1]), comps.dtype)])
+    return (sets, subs, comps, blk)
+
+
+def _shard_block_tables(n: int, k: int, shards: int, axis: str,
+                        chunk: int):
+    """This device's row-chunks of the layer-k gather tables: yields
+    ``(sets, subs, comps)`` slices of at most ``chunk >> k`` rows,
+    starting at ``axis_index(axis) * blk``.  A static python loop — the
+    chunk count is a compile-time constant, only the offset is traced."""
+    sets, subs, comps, blk = sharded_layer_indices(n, k, shards)
+    start = lax.axis_index(axis) * blk
+    rows = max(1, min(blk, chunk >> k))
+    for lo in range(0, blk, rows):
+        r = min(rows, blk - lo)
+        yield (lax.dynamic_slice_in_dim(sets, start + lo, r),
+               lax.dynamic_slice_in_dim(subs, start + lo, r),
+               lax.dynamic_slice_in_dim(comps, start + lo, r))
+
+
 # ------------------------------------------------------ layer primitives
 def direct_layer_full(dp, gate, n: int, k: int, pc, dtype):
     """Layer k by gather-based split enumeration (paper Sec. 6): full
@@ -120,6 +166,25 @@ def direct_layer_full(dp, gate, n: int, k: int, pc, dtype):
     layer_ind = (jnp.sum(prod, axis=-1) > 0.5).astype(dtype)
     layer_full = jnp.zeros(dp.shape, dtype)
     layer_full = layer_full.at[..., sets].set(layer_ind) * gate
+    return jnp.where(pc == k, layer_full, jnp.array(0, dtype))
+
+
+def direct_layer_full_sharded(dp, gate, n: int, k: int, pc, dtype,
+                              shards: int, axis: str,
+                              chunk: int = SHARD_CHUNK_ELEMS):
+    """``direct_layer_full`` under ``shard_map``: each device evaluates
+    its block of layer-k sets (chunked gathers), scatters the {0,1}
+    indicators into a zero lattice, and ONE ``psum`` merges the disjoint
+    blocks.  Bit-identical to the unsharded form: each real set is
+    written by exactly one device (zeros elsewhere, so the sum is the
+    value itself, exact in both f64 and int32), and pad-row writes land
+    on index 0 which the ``pc == k`` select drops."""
+    part = jnp.zeros(dp.shape, dtype)
+    for ss, sub, comp in _shard_block_tables(n, k, shards, axis, chunk):
+        prod = dp[..., sub] * dp[..., comp]        # (..., rows, 2^k)
+        ind = (jnp.sum(prod, axis=-1) > 0.5).astype(dtype)
+        part = part.at[..., ss].set(ind)
+    layer_full = lax.psum(part, axis) * gate
     return jnp.where(pc == k, layer_full, jnp.array(0, dtype))
 
 
@@ -164,7 +229,9 @@ def moebius_at_v(acc, pc, n: int):
 def feasibility_layers(gate, n: int, direct_layers: int = 4,
                        tfm: "Transforms | None" = None,
                        final_shortcut: bool = True,
-                       Z=None, scan_middle: bool = False):
+                       Z=None, scan_middle: bool = False,
+                       shards: int = 1, shard_axis: "str | None" = None,
+                       shard_chunk: int = SHARD_CHUNK_ELEMS):
     """One full layered feasibility DP under ``gate`` — THE layered
     recursion (paper Sec. 5 + 6), shared by every solver in the repo.
 
@@ -189,6 +256,11 @@ def feasibility_layers(gate, n: int, direct_layers: int = 4,
     always convolution-form).  Both are exact — every intermediate is an
     exact {0,1} count in the transform dtype — so results are
     bit-identical across forms.
+
+    ``shard_axis`` (inside ``shard_map``) partitions the *direct* layers'
+    gather sweep across the mesh axis — one ``psum`` per layer merges the
+    disjoint blocks.  The butterfly middle layers stay replicated (a
+    zeta transform reads the whole lattice; DESIGN.md §Sharding).
     """
     tfm = tfm or transforms("xla")
     size = 1 << n
@@ -205,7 +277,12 @@ def feasibility_layers(gate, n: int, direct_layers: int = 4,
 
     dl = min(direct_layers, n - 1) if scan_middle else min(direct_layers, n)
     for k in range(2, dl + 1):                 # direct small layers
-        layer_full = direct_layer_full(dp, gate, n, k, pc, dtype)
+        if shard_axis is not None:
+            layer_full = direct_layer_full_sharded(
+                dp, gate, n, k, pc, dtype, shards, shard_axis,
+                shard_chunk)
+        else:
+            layer_full = direct_layer_full(dp, gate, n, k, pc, dtype)
         dp = dp + layer_full
         if k < n:
             Z = Z.at[k].set(tfm.zeta(layer_full))
@@ -247,7 +324,9 @@ def feasibility_layers(gate, n: int, direct_layers: int = 4,
 
 
 # ------------------------------------------------- the (min,+) semiring
-def minplus_value_layers(card, gate_ok, n: int):
+def minplus_value_layers(card, gate_ok, n: int, shards: int = 1,
+                         shard_axis: "str | None" = None,
+                         shard_chunk: int = SHARD_CHUNK_ELEMS):
     """DPsub[out]'s recursion as a dense layer program — the C_cap
     pass-2 instantiation of the lattice skeleton.
 
@@ -262,22 +341,44 @@ def minplus_value_layers(card, gate_ok, n: int):
     association matches.
 
     ``card`` (..., 2^n) f64; ``gate_ok`` boolean, same shape.
+
+    ``shard_axis`` (inside ``shard_map``) partitions each layer's sets
+    axis across the mesh: every device computes its block of layer-k
+    sets (the dominant ``C(n,k)·2^k`` combo tensor shrinks to 1/D), the
+    blocks meet in ONE ``pmin`` per layer, and a ``pc == k`` select
+    folds the merged layer back into the carried table.  Bit-identical
+    to the unsharded sweep: per set the full 2^k split axis stays on one
+    device (same min order, same add association), and the pmin just
+    passes that device's value through the +inf everywhere else.
     """
     pc = jnp.asarray(popcounts(n), dtype=jnp.int32)
     inf = jnp.array(np.inf, jnp.float64)
     dp = jnp.broadcast_to(
         jnp.where(pc == 1, 0.0, inf), card.shape).astype(jnp.float64)
     for k in range(2, n + 1):
-        sets, subs, comps = direct_layer_indices(n, k)
-        combo = dp[..., subs] + dp[..., comps]     # (..., m, 2^k)
-        best = jnp.min(combo, axis=-1)
-        val = best + card[..., sets]
-        val = jnp.where(gate_ok[..., sets], val, inf)
-        dp = dp.at[..., sets].set(val)
+        if shard_axis is not None:
+            part = jnp.full(dp.shape, inf)
+            for ss, sub, comp in _shard_block_tables(
+                    n, k, shards, shard_axis, shard_chunk):
+                combo = dp[..., sub] + dp[..., comp]   # (..., rows, 2^k)
+                best = jnp.min(combo, axis=-1)
+                val = best + card[..., ss]
+                val = jnp.where(gate_ok[..., ss], val, inf)
+                part = part.at[..., ss].set(val)
+            dp = jnp.where(pc == k, lax.pmin(part, shard_axis), dp)
+        else:
+            sets, subs, comps = direct_layer_indices(n, k)
+            combo = dp[..., subs] + dp[..., comps]     # (..., m, 2^k)
+            best = jnp.min(combo, axis=-1)
+            val = best + card[..., sets]
+            val = jnp.where(gate_ok[..., sets], val, inf)
+            dp = dp.at[..., sets].set(val)
     return dp
 
 
-def minplus_connected_layers(card, conn, n: int):
+def minplus_connected_layers(card, conn, n: int, shards: int = 1,
+                             shard_axis: "str | None" = None,
+                             shard_chunk: int = SHARD_CHUNK_ELEMS):
     """DPccp's recursion as a dense layer program — the connectivity-
     masked C_out instantiation of the lattice skeleton.
 
@@ -300,20 +401,38 @@ def minplus_connected_layers(card, conn, n: int):
     ``card`` (..., 2^n) f64; ``conn`` boolean, same shape (per-query
     connected-subset masks — each batch row may carry a different query
     graph).
+
+    ``shard_axis`` partitions the sets axis exactly as in
+    ``minplus_value_layers`` — the per-layer valid-split masks are then
+    only ever materialized for this device's block, so the masks shrink
+    1/D along with the combo tensor.
     """
     pc = jnp.asarray(popcounts(n), dtype=jnp.int32)
     inf = jnp.array(np.inf, jnp.float64)
     dp = jnp.broadcast_to(
         jnp.where(pc == 1, 0.0, inf), card.shape).astype(jnp.float64)
     for k in range(2, n + 1):
-        sets, subs, comps = direct_layer_indices(n, k)
-        split_ok = conn[..., subs] & conn[..., comps]  # (..., m, 2^k)
-        combo = jnp.where(split_ok,
-                          dp[..., subs] + dp[..., comps], inf)
-        best = jnp.min(combo, axis=-1)
-        val = best + card[..., sets]
-        val = jnp.where(conn[..., sets], val, inf)
-        dp = dp.at[..., sets].set(val)
+        if shard_axis is not None:
+            part = jnp.full(dp.shape, inf)
+            for ss, sub, comp in _shard_block_tables(
+                    n, k, shards, shard_axis, shard_chunk):
+                split_ok = conn[..., sub] & conn[..., comp]
+                combo = jnp.where(split_ok,
+                                  dp[..., sub] + dp[..., comp], inf)
+                best = jnp.min(combo, axis=-1)
+                val = best + card[..., ss]
+                val = jnp.where(conn[..., ss], val, inf)
+                part = part.at[..., ss].set(val)
+            dp = jnp.where(pc == k, lax.pmin(part, shard_axis), dp)
+        else:
+            sets, subs, comps = direct_layer_indices(n, k)
+            split_ok = conn[..., subs] & conn[..., comps]  # (..., m, 2^k)
+            combo = jnp.where(split_ok,
+                              dp[..., subs] + dp[..., comps], inf)
+            best = jnp.min(combo, axis=-1)
+            val = best + card[..., sets]
+            val = jnp.where(conn[..., sets], val, inf)
+            dp = dp.at[..., sets].set(val)
     return dp
 
 
@@ -410,6 +529,24 @@ def extract_scan(dp, n: int, card=None):
 
 
 # --------------------------------------------- whole-solve programs
+def _solve_axis(shards: int, mesh) -> "str | None":
+    """The mesh axis a sharded program partitions over, or None for the
+    single-device build.  ``shards`` and ``mesh`` travel together: the
+    engine resolves ``shards -> make_solve_mesh(shards)`` and the
+    builders just check consistency."""
+    if shards <= 1 and mesh is None:
+        return None
+    if mesh is None:
+        raise ValueError(f"shards={shards} needs a solve mesh")
+    from repro.launch.mesh import SOLVE_AXIS
+    (axis,) = mesh.axis_names
+    if axis != SOLVE_AXIS or mesh.devices.size != shards:
+        raise ValueError(
+            f"mesh {mesh.axis_names}/{mesh.devices.size} does not match "
+            f"shards={shards}")
+    return axis
+
+
 def _search_state(cards, n: int, tfm: Transforms, G: int):
     """Initial (B,)-lockstep search state; the ranked-zeta buffer grows a
     leading probe axis for G > 1 (G gates per round, one dispatch)."""
@@ -432,10 +569,16 @@ def _gate_builder(cards, pc, dtype):
     return gate_of
 
 
-def _fused_search(cards, cand, hi0, n, direct_layers, tfm, G, gate_of):
+def _fused_search(cards, cand, hi0, n, direct_layers, tfm, G, gate_of,
+                  shards: int = 1, shard_axis: "str | None" = None):
     """The whole-solve lockstep (G+1)-ary search: ONE while_loop whose
     body builds this round's G gates and runs the layered DP.  Returns
-    (hi, Z, rounds) with the invariant cand[hi] feasible."""
+    (hi, Z, rounds) with the invariant cand[hi] feasible.
+
+    Under ``shard_axis`` the direct layers inside every round shard
+    their gather sweep; the bracket state stays replicated (all inputs
+    replicated + per-layer combines ⇒ identical brackets on every
+    device, so the while_loop trip count agrees across the mesh)."""
     dl = min(direct_layers, n - 1)
     Z0 = _search_state(cards, n, tfm, G)
     lo0 = jnp.zeros_like(hi0)
@@ -451,7 +594,9 @@ def _fused_search(cards, cand, hi0, n, direct_layers, tfm, G, gate_of):
             mid = jnp.where(active, (lo + hi) // 2, hi)
             gamma = jnp.take_along_axis(cand, mid[:, None], axis=1)[:, 0]
             _, Z, ok = feasibility_layers(gate_of(gamma), n, dl, tfm,
-                                          True, Z=Z, scan_middle=True)
+                                          True, Z=Z, scan_middle=True,
+                                          shards=shards,
+                                          shard_axis=shard_axis)
             hi = jnp.where(active & ok, mid, hi)
             lo = jnp.where(active & ~ok, mid + 1, lo)
         else:
@@ -459,7 +604,9 @@ def _fused_search(cards, cand, hi0, n, direct_layers, tfm, G, gate_of):
             piv = jnp.where(active[None, :], piv, hi[None, :])
             gamma = jnp.take_along_axis(cand, piv.T, axis=1).T
             _, Z, ok = feasibility_layers(gate_of(gamma), n, dl, tfm,
-                                          True, Z=Z, scan_middle=True)
+                                          True, Z=Z, scan_middle=True,
+                                          shards=shards,
+                                          shard_axis=shard_axis)
             lo, hi = bracket_update(lo, hi, piv, ok, active)
         return lo, hi, Z, r + 1
 
@@ -468,8 +615,26 @@ def _fused_search(cards, cand, hi0, n, direct_layers, tfm, G, gate_of):
     return hi, Z, rounds
 
 
+def _shard_wrap(fn, mesh):
+    """Wrap a whole-solve program in ``shard_map`` over the 1-D solve
+    mesh.  Every input and output is replicated (``P()``): the sharding
+    lives *inside* the program — per-layer subset blocks picked by
+    ``axis_index`` — so callers hand in ordinary host arrays and get
+    full-lattice results back, and the AOT shapes match the unsharded
+    builders exactly.  ``check_rep=False``: the replication checker
+    can't see through the scatter/while_loop combines, but every output
+    is replicated by construction (each layer ends in a mesh-wide
+    ``psum``/``pmin``)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+    P = PartitionSpec()
+    return shard_map(fn, mesh=mesh, in_specs=P, out_specs=P,
+                     check_rep=False)
+
+
 def build_max_program(n: int, direct_layers: int, backend: str,
-                      extract: bool, gamma_batch: int = 1):
+                      extract: bool, gamma_batch: int = 1,
+                      shards: int = 1, mesh=None):
     """The whole-solve DPconv[max] program:
     ``(cards, cand, hi0) -> (opt[, dp, nodes, lidx], rounds)``.
 
@@ -477,17 +642,25 @@ def build_max_program(n: int, direct_layers: int, backend: str,
     hi0 (B,) int32.  Search, gate construction, layered DP, the
     extraction table AND the Alg. 2 split scan all run on device; the
     only host transfer is the result tuple.
+
+    ``shards > 1`` runs the program under ``shard_map`` over ``mesh``
+    (a ``launch.mesh.make_solve_mesh`` 1-D mesh of ``shards`` devices):
+    the direct-layer sweeps partition their sets axis per device with
+    one collective combine per layer.  Inputs/outputs stay replicated —
+    same shapes, bit-identical results.
     """
     pc_np = popcounts(n)
     tfm = transforms(backend)
     dl = min(direct_layers, n - 1)
     G = gamma_batch
+    axis = _solve_axis(shards, mesh)
 
     def fn(cards, cand, hi0):
         pc = jnp.asarray(pc_np, dtype=jnp.int32)
         gate_of = _gate_builder(cards, pc, tfm.dtype)
         hi, Z, rounds = _fused_search(cards, cand, hi0, n, direct_layers,
-                                      tfm, G, gate_of)
+                                      tfm, G, gate_of,
+                                      shards=shards, shard_axis=axis)
         opt = jnp.take_along_axis(cand, hi[:, None], axis=1)[:, 0]
         if not extract:
             return opt, rounds
@@ -497,15 +670,17 @@ def build_max_program(n: int, direct_layers: int, backend: str,
         # every slot >= 2 is rewritten before the recursion reads it.
         Zx = Z if G == 1 else Z[:, 0]
         dp, _, _ = feasibility_layers(gate_of(opt), n, dl, tfm, False,
-                                      Z=Zx, scan_middle=True)
+                                      Z=Zx, scan_middle=True,
+                                      shards=shards, shard_axis=axis)
         dpf = dp.astype(jnp.float64)
         nodes, lidx = extract_scan(dpf, n)
         return opt, dpf, nodes, lidx, rounds
 
-    return fn
+    return _shard_wrap(fn, mesh) if axis is not None else fn
 
 
-def build_out_program(n: int, extract: bool):
+def build_out_program(n: int, extract: bool, shards: int = 1,
+                      mesh=None):
     """The whole-solve connected C_out program (DPccp semantics):
     ``(cards, conn) -> (cout[, dp, nodes, lidx])``.
 
@@ -523,20 +698,24 @@ def build_out_program(n: int, extract: bool):
     Bit-identical optima, DP tables and trees to ``dpccp_with_tree``
     (tests/test_out_parity.py's property harness is the machine check).
     """
+    axis = _solve_axis(shards, mesh)
+
     def fn(cards, conn):
-        dpv = minplus_connected_layers(cards, conn, n)
+        dpv = minplus_connected_layers(cards, conn, n, shards=shards,
+                                       shard_axis=axis)
         cout = dpv[..., -1]
         if not extract:
             return (cout,)
         nodes, lidx = extract_scan(dpv, n, card=cards)
         return cout, dpv, nodes, lidx
 
-    return fn
+    return _shard_wrap(fn, mesh) if axis is not None else fn
 
 
 def build_cap_program(n: int, direct_layers: int, backend: str,
                       extract: bool, gamma_batch: int = 1,
-                      connected: bool = False):
+                      connected: bool = False, shards: int = 1,
+                      mesh=None):
     """The whole-solve C_cap program (paper Sec. 8, both passes fused):
     ``(cards, cand, hi0, slack) -> (gamma, cout[, nodes, lidx], rounds)``.
 
@@ -561,30 +740,40 @@ def build_cap_program(n: int, direct_layers: int, backend: str,
     pc_np = popcounts(n)
     tfm = transforms(backend)
     G = gamma_batch
+    axis = _solve_axis(shards, mesh)
 
     def fn(cards, cand, hi0, slack, conn=None):
         pc = jnp.asarray(pc_np, dtype=jnp.int32)
         gate_of = _gate_builder(cards, pc, tfm.dtype)
         hi, _, rounds = _fused_search(cards, cand, hi0, n, direct_layers,
-                                      tfm, G, gate_of)
+                                      tfm, G, gate_of,
+                                      shards=shards, shard_axis=axis)
         gamma = jnp.take_along_axis(cand, hi[:, None], axis=1)[:, 0]
         gamma = gamma * slack
         gate_ok = (cards <= gamma[:, None]) | (pc < 2)
         if connected:
-            dpv = minplus_connected_layers(cards, gate_ok & conn, n)
+            dpv = minplus_connected_layers(cards, gate_ok & conn, n,
+                                           shards=shards, shard_axis=axis)
         else:
-            dpv = minplus_value_layers(cards, gate_ok, n)
+            dpv = minplus_value_layers(cards, gate_ok, n, shards=shards,
+                                       shard_axis=axis)
         cout = dpv[..., -1]
         if not extract:
             return gamma, cout, rounds
         nodes, lidx = extract_scan(dpv, n, card=cards)
         return gamma, cout, nodes, lidx, rounds
 
-    return fn
+    if axis is None:
+        return fn
+    if connected:                       # fixed arity for shard_map specs
+        return _shard_wrap(lambda c, d, h, s, cn: fn(c, d, h, s, cn),
+                           mesh)
+    return _shard_wrap(lambda c, d, h, s: fn(c, d, h, s), mesh)
 
 
 def program_card(n: int, cost: str, backend: str = "xla",
-                 gamma_batch: int = 1, extract: bool = True) -> dict:
+                 gamma_batch: int = 1, extract: bool = True,
+                 shards: int = 1) -> dict:
     """Static description of one whole-solve lattice program.
 
     Consumed by the engine's per-dispatch profiling records
@@ -611,6 +800,7 @@ def program_card(n: int, cost: str, backend: str = "xla",
         "search": (f"lockstep {gamma_batch + 1}-ary" if searched
                    else "none"),
         "extract": bool(extract),
+        "shards": int(shards),
     }
     card["dtype"] = (str(np.dtype(transforms(backend).dtype))
                      if searched else "float64")

@@ -25,3 +25,30 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+SOLVE_AXIS = "solve"
+
+
+def make_solve_mesh(shards: "int | None" = None):
+    """1-D mesh for sharded lattice solves: the (min,+)/zeta layer
+    sweeps partition their per-layer subset blocks over this axis
+    (``repro.core.lattice`` under ``shard_map``), one ``psum``/``pmin``
+    combine per layer.  ``shards=None`` takes every visible device; on
+    CPU force more with ``XLA_FLAGS=--xla_force_host_platform_device_
+    count=8`` (tests and CI do).
+    """
+    n = len(jax.devices())
+    d = n if shards is None else int(shards)
+    if not 1 <= d <= n:
+        raise ValueError(f"solve mesh wants {d} devices, have {n}")
+    return jax.make_mesh((d,), (SOLVE_AXIS,))
+
+
+def mesh_fingerprint(mesh) -> tuple:
+    """Stable identity of a mesh's device assignment — extends the
+    engine's AOT-cache keys so executables compiled for different
+    meshes (or device counts) never alias, and profiling records say
+    which devices a dispatch ran on."""
+    devs = list(mesh.devices.flat)
+    return (devs[0].platform, tuple(int(d.id) for d in devs))

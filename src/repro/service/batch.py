@@ -50,6 +50,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine as engine_mod
 from repro.core.dpconv import PlanResult, optimize, optimize_batch
 from repro.core.layered import layered_feasibility_dp_jit
 from repro.kernels.ops import mobius_batch_op, ranked_conv_op, zeta_batch_op
@@ -71,6 +72,13 @@ class BatchPolicy:
     # and for dp_fn-style experimentation.
     gamma_batch: int = 1        # fused probe width: 1 = binary search,
     # G > 1 = (G+1)-ary gamma probing inside the fused while loop
+    solve_shards: int = 1       # solve-mesh width: D > 1 shard_maps each
+    # fused sweep over D devices (repro.launch.mesh.make_solve_mesh) —
+    # per-device layer memory drops 1/D, which is what lifts the fused
+    # cap/out ceilings past n = 13 (engine.sharded_ceiling)
+    shard_min_n: int = 14       # engage the mesh only at n >= this:
+    # below the single-device ceiling the per-layer collectives cost
+    # more than the memory relief buys
 
     def __post_init__(self):
         if self.engine not in ("fused", "host"):
@@ -79,6 +87,8 @@ class BatchPolicy:
             raise ValueError(f"unknown backend {self.backend!r}")
         if self.gamma_batch < 1:
             raise ValueError("gamma_batch must be >= 1")
+        if self.solve_shards < 1:
+            raise ValueError("solve_shards must be >= 1")
 
 
 def _pow2_chunks(b: int, cap: int):
@@ -146,17 +156,20 @@ class BatchedSolver:
     """Groups micro-batch items by ``(n, cost)`` and dispatches the
     batched lattice programs."""
 
-    def __init__(self, policy: "BatchPolicy | None" = None):
+    def __init__(self, policy: "BatchPolicy | None" = None,
+                 lane: int = 0):
         import threading
         self.policy = policy or BatchPolicy()
-        # one solver models ONE solve lane; the async runtime's worker
-        # thread and a sync front end (plan_one / serve) on the same
-        # server may both reach solve(), so the lane is a real lock —
-        # it also keeps last_timings snapshots from interleaving (an
-        # interleaved snapshot would feed another solve's durations
-        # into the router's EWMA).  RLock: collect() holds it across
-        # solve() plus the timings snapshot.
+        # one solver models ONE solve lane (the N-lane runtime owns one
+        # BatchedSolver per lane); the async runtime's worker thread and
+        # a sync front end (plan_one / serve) on the same server may
+        # both reach solve(), so the lane is a real lock — it also
+        # keeps last_timings snapshots from interleaving (an interleaved
+        # snapshot would feed another solve's durations into the
+        # router's EWMA).  RLock: collect() holds it across solve()
+        # plus the timings snapshot.
         self._lock = threading.RLock()
+        self.lane = lane            # engine-dispatch attribution label
         self.batches_run = 0
         self.queries_batched = 0
         # cumulative solver-lane totals (all chunks ever solved): the
@@ -189,11 +202,23 @@ class BatchedSolver:
             return pallas_dp_fn(n)
         return None                      # core default: XLA f64 layered DP
 
+    def _shards(self, n: int) -> int:
+        """Solve-mesh width for one chunk: the policy's width, engaged
+        only at ``n >= shard_min_n`` and clamped to the devices that
+        actually exist (a policy tuned for the 8-device CI host must
+        degrade to single-device on a 1-device box, not crash)."""
+        p = self.policy
+        if p.solve_shards <= 1 or n < p.shard_min_n:
+            return 1
+        import jax
+        return min(p.solve_shards, len(jax.devices()))
+
     def _solve_chunk(self, qs, cards, n, cost, extract_tree):
         """One same-(n, cost) chunk through the routed engine tier."""
         engine = self.policy.engine
         G = self.policy.gamma_batch
         backend = "pallas" if self._use_pallas(n) else "xla"
+        shards = self._shards(n)
         # the batch lane carries four costs; "out" chunks run DPccp
         # semantics (connected csg/cmp pairs, no cross products), and
         # "cap_conn" is the cap lane with the no-cross-products pass 2
@@ -207,6 +232,8 @@ class BatchedSolver:
             # optimize entry points (dpconv_max, ccap, dpccp) understand
             # both values
             kw = {"engine": engine}
+            if engine == "fused" and shards > 1:
+                kw["shards"] = shards
             if engine == "fused" and cost != "out":
                 kw["gamma_batch"] = G   # out's (min,+) sweep never probes
                 if cost == "max":   # cap's (min,+) pass is f64/xla-only
@@ -225,7 +252,7 @@ class BatchedSolver:
             results = optimize_batch(qs, cards, cost="out",
                                      method="dpccp",
                                      extract_tree=extract_tree,
-                                     engine=engine)
+                                     engine=engine, shards=shards)
             if not results[0].meta.get("batched"):
                 for res in results:
                     res.meta["backend"] = "xla"
@@ -236,7 +263,8 @@ class BatchedSolver:
             if engine == "fused":
                 results = optimize_batch(qs, cards, cost="cap",
                                          extract_tree=extract_tree,
-                                         gamma_batch=G, **conn_kw)
+                                         gamma_batch=G, shards=shards,
+                                         **conn_kw)
             else:
                 # the host cap pipeline has no lockstep form: these are
                 # B independent solves sharing only the wall-clock
@@ -255,7 +283,7 @@ class BatchedSolver:
             results = optimize_batch(qs, cards, cost="max",
                                      extract_tree=extract_tree,
                                      engine="fused", backend=backend,
-                                     gamma_batch=G)
+                                     gamma_batch=G, shards=shards)
         else:
             results = optimize_batch(qs, cards, cost="max",
                                      extract_tree=extract_tree,
@@ -295,7 +323,11 @@ class BatchedSolver:
         """``items``: list of (q, card[, cost[, tag]]) tuples; cost is
         "max", "cap", "cap_conn" or "out" (the lattice batch-lane
         costs).  Returns PlanResults aligned with the input order."""
-        with self._lock:
+        # dispatch_lane stamps this solver's lane onto every
+        # DispatchRecord the chunk solves emit — the N-lane runtime owns
+        # one BatchedSolver per lane, so engine profiling splits cleanly
+        # per lane without threading a label through every optimize call
+        with self._lock, engine_mod.dispatch_lane(self.lane):
             return self._solve_locked(items, extract_tree)
 
     def _solve_locked(self, items: list, extract_tree: bool) -> list:

@@ -97,6 +97,7 @@ class RouterConfig:
     sparse_density: float = 0.5  # <=: route C_out to DPccp
     approx_eps: float = 0.25
     ewma_alpha: float = 0.3
+    lane_alpha: float = 0.3     # per-lane service-time EWMA smoothing
 
 
 # rough work-count priors (seconds per unit measured lazily); the absolute
@@ -139,6 +140,33 @@ class Router:
         # it ("fused"/"host" for dpconv); keys estimates to the right
         # EWMA coefficient during admission
         self.engine_hint: dict = {}
+        # lane index -> EWMA of observed per-solve seconds on that lane.
+        # Lanes run identical code on identical hardware, but their AOT
+        # caches differ (bucket placement is lane-affine), so a lane that
+        # keeps compiling fresh shapes prices slower than a warmed one.
+        self._lane_ewma: dict = {}
+
+    # ------------------------------------------------------- lane pricing
+    def observe_lane(self, lane: int, seconds: float) -> None:
+        """EWMA-update one lane's observed per-solve service time (the
+        N-lane runtime calls this after every dispatch it attributes to
+        a lane)."""
+        if seconds <= 0:
+            return
+        a = self.config.lane_alpha
+        prev = self._lane_ewma.get(lane)
+        self._lane_ewma[lane] = seconds if prev is None \
+            else (1 - a) * prev + a * seconds
+
+    def lane_factor(self, lane: int) -> float:
+        """Relative speed of ``lane`` vs the fleet mean (> 1.0 = slower
+        than average).  Cold lanes — no observations yet — price neutral
+        at 1.0 so prewarm placement isn't biased by boot order."""
+        ew = self._lane_ewma.get(lane)
+        if ew is None or not self._lane_ewma:
+            return 1.0
+        mean = sum(self._lane_ewma.values()) / len(self._lane_ewma)
+        return ew / mean if mean > 0 else 1.0
 
     def record(self, route: Route) -> None:
         """Count a route that actually served a response."""

@@ -42,6 +42,16 @@ top of the one-dispatch fused engines of PRs 2-4:
   SLO class policy.  Downgraded responses void the deadline contract
   (they are best-effort by definition); ``deadline_misses`` counts only
   promised-and-missed completions.
+* **N solve lanes** — ``RuntimeConfig.lanes`` generalizes the single
+  executor to N serial lanes (single-worker pools in thread mode,
+  per-lane occupancy queues in inline mode), each owning a
+  ``BatchedSolver``.  Placement is lane-affine per ``(n, cost)``
+  executable bucket (the lane that compiled a bucket keeps it hot; see
+  ``prewarm_lanes``), deadline-promised works steal onto idle lanes,
+  the router prices lanes individually (``observe_lane`` /
+  ``lane_factor``), and half-open breaker probes hedge with a
+  host-exact shadow on a second lane — first exact answer wins, the
+  loser is zombie-dropped.
 
 Execution: solves go through ``BatchedSolver.submit`` / ``collect`` so
 batch formation overlaps the executing dispatch.  The ``inline``
@@ -145,6 +155,12 @@ def default_slo_classes() -> dict:
 class RuntimeConfig:
     max_batch: int = 16
     max_wait: float = 0.005          # hard cap on batch-forming wait
+    lanes: int = 1                   # parallel solve lanes.  Each lane
+    # is ONE serial executor (worker thread in thread mode, modeled
+    # occupancy queue in inline mode) with its own BatchedSolver;
+    # executable-bucket placement is lane-affine (the lane that compiled
+    # a (n, cost) bucket keeps serving it) and deadline-promised works
+    # steal onto a less-backlogged lane when the home lane would miss.
     wait_solve_frac: float = 0.5     # wait <= frac * priced solve time
     deadline_safety: float = 2.0     # price estimates with this margin
     max_pending: int = 1 << 20       # backpressure: refuse misses past it
@@ -201,6 +217,10 @@ class RuntimeStats:
     batches: int = 0            # batch-lane works started
     batched_items: int = 0      # solve items across those works (occupancy)
     solve_s: float = 0.0        # batched-miss execution seconds
+    steals: int = 0             # works stolen off a backlogged home lane
+    hedges: int = 0             # half-open probes hedged with a host shadow
+    lane_dispatches: dict = dataclasses.field(default_factory=dict)
+    lane_steals: dict = dataclasses.field(default_factory=dict)
     per_class: dict = dataclasses.field(default_factory=dict)
     hit_latency: "object" = None    # fast-path LatencyHistogram (lazy)
 
@@ -252,6 +272,12 @@ class RuntimeStats:
             "shed_rate": round(self.shed_rate, 4),
             "batches": self.batches,
             "mean_batch_occupancy": round(self.mean_batch_occupancy, 3),
+            "steals": self.steals, "hedges": self.hedges,
+            "lanes": {str(k): {"dispatches":
+                               self.lane_dispatches.get(k, 0),
+                               "steals": self.lane_steals.get(k, 0)}
+                      for k in sorted(set(self.lane_dispatches)
+                                      | set(self.lane_steals))},
             "deadline_misses": self.deadline_misses,
             "solve_s": round(self.solve_s, 4),
             "miss_solve_ms_mean": round(self.mean_solve_s * 1e3, 4),
@@ -330,7 +356,8 @@ class _Work:
     __slots__ = ("kind", "entries", "started", "eta", "results",
                  "timings", "future", "duration", "error", "est",
                  "profile", "breaker_key", "probe", "engine", "fault",
-                 "hung_at", "abandoned", "finalized")
+                 "hung_at", "abandoned", "finalized", "lane", "stolen",
+                 "hedge_partner")
 
     def __init__(self, kind, entries, started):
         self.kind = kind                 # "batch" | "single"
@@ -352,6 +379,10 @@ class _Work:
         self.hung_at: "float | None" = None  # watchdog deadline
         self.abandoned = False           # watchdog rerouted the tickets
         self.finalized = False           # finish already processed
+        # --- N-lane scheduling
+        self.lane: "int | None" = None   # executor lane ("None": unpicked)
+        self.stolen = False              # placed off its affinity home
+        self.hedge_partner: "_Work | None" = None  # racing hedge work
 
 
 # ------------------------------------------------------------------ runtime
@@ -417,9 +448,16 @@ class ServingRuntime:
         self._zombies: list = []         # abandoned thread works (watchdog)
         self._events: list = []          # heap of (t, seq, kind, payload)
         self._seq = itertools.count()
-        self._exec_free = 0.0            # single-executor queue, clock time
         self._pending_tickets = 0
-        self._pool = None                # lazy ThreadPoolExecutor
+        # --- N-lane execution: each lane is one serial executor with
+        # its own solver; placement is affinity-first with deadline-
+        # driven work stealing (see _pick_lane)
+        self.lanes = max(1, int(self.config.lanes))
+        self._lane_free = [0.0] * self.lanes  # per-lane modeled queues
+        self._pools: list = [None] * self.lanes  # lazy worker pools
+        self._affinity: dict = {}        # (n, lane_cost) -> home lane
+        self._rr = 0                     # round-robin tiebreak cursor
+        self._solvers: "list | None" = None  # lazy per-lane solvers
 
     def _faults_snapshot(self) -> dict:
         snap = {**self.fstats.as_dict(),
@@ -457,15 +495,91 @@ class ServingRuntime:
             return t
         return None
 
-    def _backlog(self) -> float:
-        """Executor backlog in clock seconds: how long until work
-        started *now* would begin.  Inline mode knows it exactly from
-        the modeled executor queue; thread mode prices the in-flight
-        works' EWMA estimates (their real durations aren't known until
-        the worker finishes them)."""
+    def _lane_backlog(self, lane: int) -> float:
+        """One lane's backlog in clock seconds: how long until work
+        started on it *now* would begin.  Inline mode knows it exactly
+        from the modeled executor queue; thread mode prices the lane's
+        in-flight works' EWMA estimates (their real durations aren't
+        known until the worker finishes them)."""
         if self.executor == "thread":
-            return sum(w.est for w in self._inflight)
-        return max(0.0, self._exec_free - self.clock.now())
+            return sum(w.est for w in self._inflight if w.lane == lane)
+        return max(0.0, self._lane_free[lane] - self.clock.now())
+
+    def _backlog(self) -> float:
+        """Best-case executor backlog: the least-loaded lane's queue —
+        work admitted now could start there (stealing makes that true
+        even for affinity-bound buckets with a deadline at stake)."""
+        return min(self._lane_backlog(k) for k in range(self.lanes))
+
+    def _solver_for(self, lane: int):
+        """Lane ``k``'s BatchedSolver.  Lane 0 IS the server's solver
+        (the single-lane runtime and the sync front end share it —
+        including its counters and any test monkeypatching); lanes 1..N
+        get their own solvers so their locks, timing snapshots and
+        engine-dispatch attribution never interleave across lanes."""
+        if lane == 0 or self.lanes == 1:
+            return self.server.solver
+        if self._solvers is None:
+            from repro.service.batch import BatchedSolver
+            base = self.server.solver
+            self._solvers = [base] + [
+                BatchedSolver(base.policy, lane=k)
+                for k in range(1, self.lanes)]
+        return self._solvers[lane]
+
+    def _lane_counter(self, lane: int, what: str) -> None:
+        reg = getattr(self.server, "registry", None)
+        if reg is not None:
+            reg.counter(f"runtime.lane{lane}.{what}").inc()
+
+    def _least_loaded(self) -> int:
+        """Least-backlogged lane, weighted by the router's per-lane
+        speed factor; a round-robin cursor breaks ties so cold lanes
+        all get seeded instead of lane 0 absorbing every first
+        sighting."""
+        router = self.server.router
+        best, best_cost = 0, None
+        for i in range(self.lanes):
+            k = (self._rr + i) % self.lanes
+            c = self._lane_backlog(k) * router.lane_factor(k)
+            if best_cost is None or c < best_cost - 1e-12:
+                best, best_cost = k, c
+        self._rr = (self._rr + 1) % self.lanes
+        return best
+
+    def _pick_lane(self, work: _Work) -> int:
+        """Lane placement.  Affinity first: the lane that compiled an
+        ``(n, lane_cost)`` executable bucket keeps serving it (prewarm
+        partitions buckets across lanes; re-placing a bucket elsewhere
+        would pay its AOT compile again).  Work stealing second: when a
+        deadline-promised work would miss waiting out its home lane's
+        backlog, it runs on the least-loaded lane instead — a steal
+        risks one compile, a miss breaks a promise."""
+        if self.lanes == 1:
+            return 0
+        lead = work.entries[0].tickets[0]
+        key = (lead.form.q.n, lead.route.lane_cost)
+        home = self._affinity.get(key)
+        if home is None:
+            home = self._affinity[key] = self._least_loaded()
+        deadlines = [t.deadline for e in work.entries for t in e.tickets
+                     if t.deadline is not None and not t.downgraded]
+        if deadlines:
+            now = self.clock.now()
+            need = (now + self._lane_backlog(home)
+                    + self.config.deadline_safety * work.est)
+            if need > min(deadlines):
+                alt = self._least_loaded()
+                if alt != home and (
+                        now + self._lane_backlog(alt)
+                        + self.config.deadline_safety * work.est) < need:
+                    work.stolen = True
+                    self.stats.steals += 1
+                    self.stats.lane_steals[alt] = \
+                        self.stats.lane_steals.get(alt, 0) + 1
+                    self._lane_counter(alt, "steals")
+                    return alt
+        return home
 
     @staticmethod
     def _expected_spans(ticket: Ticket, fast: bool = False,
@@ -631,8 +745,9 @@ class ServingRuntime:
                                probe=probe)
         elif probe:
             # half-open probe: solo dispatch, skip the batch former so
-            # one probe risks one request
-            self._start_single(ticket, probe=True)
+            # one probe risks one request (hedged across lanes when the
+            # runtime has a lane to spare)
+            self._start_probe(ticket)
         elif srv.enable_batch and srv._batch_eligible(route, req.cost):
             self._enqueue(ticket)
         else:
@@ -789,7 +904,7 @@ class ServingRuntime:
         self._start(work, items)
 
     def _start_single(self, ticket: Ticket, engine: "str | None" = None,
-                      probe: bool = False) -> None:
+                      probe: bool = False) -> _Work:
         entry = _Entry(None, ticket)
         if engine == "host":
             entry.rung = 1      # admission failover: next stop is GOO
@@ -798,6 +913,33 @@ class ServingRuntime:
         work.engine = engine
         work.probe = probe
         self._start(work, None)
+        return work
+
+    def _start_probe(self, ticket: Ticket) -> None:
+        """Half-open breaker probe dispatch.  Single lane: the plain
+        solo probe (one probe risks one request).  With N lanes the
+        probe is HEDGED: the probe runs on its home lane while a
+        host-exact shadow of the same solve starts on the next lane —
+        the first finisher answers the ticket and the loser is zombie-
+        dropped through the existing watchdog accounting, so a probe on
+        a still-broken lane no longer costs the probing request the
+        whole failure ladder.  (A dropped probe still settles its
+        breaker outcome — see _settle_zombie_breaker.)"""
+        probe_work = self._start_single(ticket, probe=True)
+        if self.lanes <= 1 \
+                or ticket.route.method not in ("dpconv", "dpccp"):
+            return          # hedging needs a lane to spare and a host
+        self.stats.hedges += 1          # rung distinct from the probe's
+        entry = _Entry(None, ticket)
+        entry.rung = 1                  # the shadow IS the host rung
+        hedge = _Work("single", [entry], self.clock.now())
+        hedge.engine = "host"
+        hedge.lane = (probe_work.lane + 1) % self.lanes
+        hedge.hedge_partner = probe_work
+        probe_work.hedge_partner = hedge
+        # NB: no _pending_tickets bump — the ticket is counted once and
+        # completed once (by whichever leg finishes first)
+        self._start(hedge, None)
 
     def _breaker_key(self, route, n: int,
                      engine: "str | None" = None) -> str:
@@ -826,6 +968,11 @@ class ServingRuntime:
         if lead.route.method != "goo":
             work.breaker_key = self._breaker_key(
                 lead.route, lead.form.q.n, engine=work.engine)
+        if work.lane is None:           # hedges arrive pre-placed
+            work.lane = self._pick_lane(work)
+        self.stats.lane_dispatches[work.lane] = \
+            self.stats.lane_dispatches.get(work.lane, 0) + 1
+        self._lane_counter(work.lane, "dispatches")
         now = self.clock.now()
         for entry in work.entries:
             for t in entry.tickets:
@@ -845,13 +992,14 @@ class ServingRuntime:
                         "dispatch", at=now, kind=work.kind,
                         items=len(work.entries), est_s=work.est,
                         attempt=entry.attempts, rung=entry.rung,
-                        engine=work.engine or "")
+                        engine=work.engine or "", lane=work.lane,
+                        stolen=work.stolen)
         if self.executor == "thread":
             wd = self._hung_threshold(work)
             if wd:
-                work.hung_at = now + self._backlog() + wd
+                work.hung_at = now + self._lane_backlog(work.lane) + wd
                 self._schedule(work.hung_at, "watchdog", work)
-            work.future = self._ensure_pool().submit(
+            work.future = self._ensure_pool(work.lane).submit(
                 self._execute, work, items)
             return
         t_sched = self.clock.now()      # scheduling time, pre-execution
@@ -867,14 +1015,14 @@ class ServingRuntime:
             # the zombie's eventual finish is dropped
             dur = max(dur, work.fault.hang_s or (4.0 * wd if wd else 1.0))
         work.duration = dur
-        # single-executor queue in clock time: work starts when the
-        # executor frees, exactly like the worker thread it stands for.
+        # per-lane serial queue in clock time: work starts when its
+        # lane frees, exactly like the worker thread it stands for.
         # On a VirtualClock now() hasn't moved during execution, so eta
         # = start + dur; on a WallClock the solve's wall time already
         # elapsed — the max() keeps it from being charged twice.
-        start = max(t_sched, self._exec_free)
+        start = max(t_sched, self._lane_free[work.lane])
         work.eta = max(self.clock.now(), start + dur)
-        self._exec_free = work.eta
+        self._lane_free[work.lane] = work.eta
         self._schedule(work.eta, "finish", work)
         if wd:
             work.hung_at = start + wd
@@ -891,19 +1039,25 @@ class ServingRuntime:
         never leave a joined entry stuck in ``_by_key`` collecting
         coalescers that can never complete."""
         srv = self.server
+        solver = self._solver_for(work.lane or 0)
         t0 = time.perf_counter()   # timing: measured-duration (solve)
         mark = engine_mod.dispatch_mark()
         try:
             self._inject_before(work)
-            if work.kind == "batch":
-                handle = srv.solver.submit(items)
-                work.results = srv.solver.collect(handle)
-                work.timings = handle.timings
-            else:
-                ticket = work.entries[0].tickets[0]
-                work.results = [srv._solve_single(
-                    ticket.form.q, ticket.form.card, ticket.request.cost,
-                    ticket.route, engine=work.engine)]
+            # stamp this work's lane onto every DispatchRecord the solve
+            # emits (single solves; the batch solver re-asserts its own
+            # lane, which is the same value)
+            with engine_mod.dispatch_lane(work.lane):
+                if work.kind == "batch":
+                    handle = solver.submit(items)
+                    work.results = solver.collect(handle)
+                    work.timings = handle.timings
+                else:
+                    ticket = work.entries[0].tickets[0]
+                    work.results = [srv._solve_single(
+                        ticket.form.q, ticket.form.card,
+                        ticket.request.cost, ticket.route,
+                        engine=work.engine)]
             self._inject_after(work)
         except BaseException as e:       # noqa: BLE001 — contained: the
             work.error = e               # failure ladder reroutes per entry
@@ -943,13 +1097,16 @@ class ServingRuntime:
             cost_v, tree, meta = work.results[0]
             work.results[0] = (float(cost_v) * 1.5 + 1.0, tree, meta)
 
-    def _ensure_pool(self):
-        if self._pool is None:
+    def _ensure_pool(self, lane: int = 0):
+        if self._pools[lane] is None:
             from concurrent.futures import ThreadPoolExecutor
-            self._pool = ThreadPoolExecutor(
+            # one worker per lane: a lane is a SERIAL executor, so N
+            # lanes = N single-worker pools, not one N-worker pool —
+            # the backlog model and lane-affine placement depend on it
+            self._pools[lane] = ThreadPoolExecutor(
                 max_workers=1,
-                thread_name_prefix="plan-runtime-solver")
-        return self._pool
+                thread_name_prefix=f"plan-runtime-lane{lane}")
+        return self._pools[lane]
 
     # -------------------------------------------------------- completion
     def _dispatch_attrs(self, work: _Work) -> dict:
@@ -961,7 +1118,11 @@ class ServingRuntime:
                      lead.route.method, lead.form.q.n, lead.route.lane,
                      lead.route.lane_cost),
                  "duration_s": work.duration, "est_s": work.est,
-                 "items": len(work.entries)}
+                 "items": len(work.entries), "lane": work.lane}
+        if work.stolen:
+            attrs["stolen"] = True
+        if work.hedge_partner is not None:
+            attrs["hedged"] = True
         prof = work.profile
         if prof:
             attrs.update(
@@ -977,9 +1138,12 @@ class ServingRuntime:
     def _finalize(self, work: _Work) -> None:
         srv = self.server
         if work.abandoned:
-            # a zombie completed: the watchdog already rerouted its
-            # tickets — drop the late result on the floor
+            # a zombie completed: the watchdog (or a winning hedge
+            # partner) already resolved its tickets — drop the late
+            # result on the floor, but still settle a probe's breaker
+            # outcome so the half-open lane can't wedge
             self.fstats.zombie_completions += 1
+            self._settle_zombie_breaker(work)
             return
         self._inflight.remove(work)
         work.finalized = True
@@ -989,7 +1153,15 @@ class ServingRuntime:
         if work.error is not None:
             self._fail_work(work, work.error)
             return
+        srv.router.observe_lane(work.lane, work.duration)
         attrs = self._dispatch_attrs(work)
+        partner = work.hedge_partner
+        if partner is not None:
+            # hedged probe race resolved: this leg finished first —
+            # drop the other leg before its result can double-complete
+            # the shared ticket
+            work.hedge_partner = None
+            self._abandon_hedge(partner)
         for entry in work.entries:
             for t in entry.tickets:
                 d = t.spans.get("dispatch")
@@ -1079,15 +1251,31 @@ class ServingRuntime:
             if self.executor == "thread":
                 self._zombies.append(work)
             elif work.eta is not None:
-                # recycle the modeled executor: the hung worker is
-                # killed and replaced; the zombie's remaining occupancy
-                # is refunded so later works don't queue behind it
-                self._exec_free = max(
-                    now, self._exec_free - max(work.eta - now, 0.0))
+                # recycle the modeled lane: the hung worker is killed
+                # and replaced; the zombie's remaining occupancy is
+                # refunded so later works don't queue behind it
+                self._lane_free[work.lane] = max(
+                    now,
+                    self._lane_free[work.lane] - max(work.eta - now, 0.0))
         else:
             work.finalized = True
         if work.breaker_key:
             self.breakers.on_failure(work.breaker_key, probe=work.probe)
+            work.breaker_key = ""    # settled — the zombie path must
+            #                          not record a second outcome
+        partner = work.hedge_partner
+        if partner is not None and not partner.finalized \
+                and not partner.abandoned:
+            # hedged probe race: this leg failed but its partner is
+            # still in flight and owns the shared ticket — bow out
+            # without descending the failure ladder (if the partner
+            # fails too, ITS failure descends normally)
+            partner.hedge_partner = None
+            work.hedge_partner = None
+            self.recorder.incident(
+                "watchdog" if hung else "error", None, error=repr(err),
+                work_kind=work.kind, hedge_loser=True, at=now)
+            return
         self.recorder.incident(
             "watchdog" if hung else "error", None, error=repr(err),
             work_kind=work.kind, items=len(work.entries), at=now)
@@ -1163,6 +1351,42 @@ class ServingRuntime:
         for t in entry.tickets:
             self._pending_tickets -= 1
             self._fail_ticket(t, err)
+
+    def _abandon_hedge(self, loser: _Work) -> None:
+        """The hedge race resolved against this in-flight work: drop it
+        as a zombie.  Its eventual completion hits the ``abandoned``
+        branch of ``_finalize`` (inline: the scheduled finish event;
+        thread: the zombie drain in ``poll``) and is discarded — same
+        accounting as a watchdog-killed worker."""
+        if loser.finalized or loser.abandoned:
+            return
+        loser.abandoned = True
+        loser.hedge_partner = None
+        if loser in self._inflight:
+            self._inflight.remove(loser)
+        if self.executor == "thread":
+            self._zombies.append(loser)
+        elif loser.eta is not None:
+            now = self.clock.now()
+            self._lane_free[loser.lane] = max(
+                now,
+                self._lane_free[loser.lane] - max(loser.eta - now, 0.0))
+
+    def _settle_zombie_breaker(self, work: _Work) -> None:
+        """A dropped work holding a lane's single half-open probe slot
+        must still report its outcome — ``BreakerBoard.allow`` admits no
+        further probes while one is charged out, so an unreported probe
+        wedges the lane half-open forever.  Losing the hedge race says
+        nothing bad about the probed lane: report the leg's own result
+        (success if its solve worked).  Watchdog-hung works were already
+        settled by ``_fail_work`` (which clears the key)."""
+        if not work.breaker_key:
+            return
+        if work.error is None:
+            self.breakers.on_success(work.breaker_key, probe=work.probe)
+        else:
+            self.breakers.on_failure(work.breaker_key, probe=work.probe)
+        work.breaker_key = ""
 
     def _retry_affordable(self, entry: _Entry, backoff: float) -> bool:
         """Never retry past remaining headroom: the backoff plus the
@@ -1276,6 +1500,7 @@ class ServingRuntime:
                     self._zombies.remove(work)
                     work.future = None
                     self.fstats.zombie_completions += 1
+                    self._settle_zombie_breaker(work)
         now = self.clock.now()
         while True:
             t = self.next_event_time()
@@ -1340,10 +1565,32 @@ class ServingRuntime:
             if self.poll() == 0 and t is None and not self._inflight:
                 break
 
+    def prewarm_lanes(self, ns, costs=("max", "cap", "out")) -> dict:
+        """Partition the server's prewarm buckets round-robin across the
+        lanes: bucket ``(n, cost)`` compiles under lane ``k``'s dispatch
+        attribution AND seeds the affinity map, so the lane that
+        compiled a bucket is the lane its traffic lands on — prewarm
+        cost is split across lanes instead of serialized, and steady-
+        state placement starts warm."""
+        srv = self.server
+        total = {"compiled": 0, "seconds": 0.0, "lanes": {}}
+        pairs = [(n, c) for c in costs for n in sorted(set(ns))]
+        for i, (n, c) in enumerate(pairs):
+            k = i % self.lanes
+            with engine_mod.dispatch_lane(k):
+                r = srv.prewarm([n], costs=(c,))
+            if r.get("compiled"):
+                self._affinity[(n, c)] = k
+                total["lanes"][f"{c}:n={n}"] = k
+            total["compiled"] += r["compiled"]
+            total["seconds"] += r["seconds"]
+        return total
+
     def close(self) -> None:
-        if self._pool is not None:
-            self._pool.shutdown(wait=True)
-            self._pool = None
+        for k, pool in enumerate(self._pools):
+            if pool is not None:
+                pool.shutdown(wait=True)
+                self._pools[k] = None
         if self._hook_installed:
             engine_mod.set_compile_fault_hook(None)
             self._hook_installed = False

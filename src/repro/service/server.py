@@ -157,7 +157,8 @@ class PlanServer:
                  enable_cache: bool = True,
                  enable_batch: bool = True,
                  registry: "MetricsRegistry | None" = None,
-                 trace: bool = True):
+                 trace: bool = True,
+                 lanes: int = 1):
         self.cache = PlanCache(cache_capacity)
         self.router = router or Router()
         self.solver = BatchedSolver(batch_policy
@@ -169,8 +170,20 @@ class PlanServer:
         # the batch lane's out chunks (DPccp semantics) follow the same
         # policy engine; estimates price them under "<engine>:out"
         self.router.engine_hint["dpccp"] = self.solver.policy.engine
+        # a solve mesh lifts the fused cap/out admission ceilings: the
+        # per-device layer memory drops 1/D, so lattice sizes the
+        # single-device gather tables priced out become servable
+        # (engine.sharded_ceiling caps the lift at the extraction tier)
+        pol = self.solver.policy
+        if pol.solve_shards > 1:
+            cfg = self.router.config
+            cfg.fused_cap_max_n = engine_mod.sharded_ceiling(
+                cfg.fused_cap_max_n, pol.solve_shards)
+            cfg.fused_out_max_n = engine_mod.sharded_ceiling(
+                cfg.fused_out_max_n, pol.solve_shards)
         self.max_batch = max_batch
         self.max_wait = max_wait
+        self.lanes = max(1, int(lanes))   # serving runtime solve lanes
         self.enable_cache = enable_cache
         self.enable_batch = enable_batch
         self.stats = ServeStats()
@@ -245,7 +258,8 @@ class PlanServer:
                 r = engine_mod.prewarm([n], max_batch=max_b,
                                        backend=backend,
                                        direct_layers=4, costs=(cost,),
-                                       gamma_batch=pol.gamma_batch)
+                                       gamma_batch=pol.gamma_batch,
+                                       shards=self.solver._shards(n))
                 total["compiled"] += r["compiled"]
                 total["seconds"] += r["seconds"]
         return total
@@ -290,7 +304,8 @@ class PlanServer:
             self, clock=VirtualClock(),
             config=RuntimeConfig(max_batch=self.max_batch,
                                  max_wait=self.max_wait,
-                                 trace=self.trace))
+                                 trace=self.trace,
+                                 lanes=self.lanes))
         tickets: dict = {}
         if closed_loop:
             for i in range(0, len(reqs), self.max_batch):
@@ -338,7 +353,11 @@ class PlanServer:
         router / solver (benchmarks and tests drive it directly).
         ``injector`` wires a seeded ``faults.FaultInjector`` into the
         runtime's fault seams (chaos tests and the faults bench row)."""
-        from repro.service.runtime import ServingRuntime
+        from repro.service.runtime import RuntimeConfig, ServingRuntime
+        if config is None:
+            config = RuntimeConfig(max_batch=self.max_batch,
+                                   max_wait=self.max_wait,
+                                   lanes=self.lanes)
         return ServingRuntime(self, clock=clock, config=config,
                               duration_fn=duration_fn, executor=executor,
                               injector=injector)
@@ -354,7 +373,8 @@ class PlanServer:
             rt = self._async_rt = ServingRuntime(
                 self, clock=WallClock(),
                 config=RuntimeConfig(max_batch=self.max_batch,
-                                     max_wait=self.max_wait),
+                                     max_wait=self.max_wait,
+                                     lanes=self.lanes),
                 executor="thread")
         return rt
 
@@ -616,9 +636,13 @@ class PlanServer:
             kw.setdefault("engine", engine)
             if kw["engine"] == "fused":
                 # single-lane fused solves must hit the same (probe-
-                # strategy-keyed) executable buckets prewarm compiled
+                # strategy-keyed, mesh-keyed) executable buckets
+                # prewarm compiled
                 kw.setdefault("gamma_batch",
                               self.solver.policy.gamma_batch)
+                shards = self.solver._shards(q.n)
+                if shards > 1:
+                    kw.setdefault("shards", shards)
         elif route.method == "dpccp" and engine:
             kw.setdefault("engine", engine)
         res = optimize(q, card, cost=cost, method=route.method, **kw)

@@ -317,8 +317,11 @@ def test_runtime_stats_as_dict_schema_snapshot():
         "submitted", "served", "fast_path_hits", "overtakes",
         "coalesced", "coalesce_rate", "downgraded", "shed",
         "shed_backpressure", "shed_rate", "batches",
-        "mean_batch_occupancy", "deadline_misses", "solve_s",
-        "miss_solve_ms_mean", "hit_p99_ms", "per_class"}
+        "mean_batch_occupancy", "steals", "hedges", "lanes",
+        "deadline_misses", "solve_s", "miss_solve_ms_mean",
+        "hit_p99_ms", "per_class"}
+    for lane in d["lanes"].values():
+        assert set(lane) == {"dispatches", "steals"}
     for cls in d["per_class"].values():
         assert set(cls) == {"served", "deadline_misses", "downgraded",
                             "shed", "p50_ms", "p95_ms", "p99_ms"}

@@ -1,0 +1,168 @@
+"""Mesh-sharded lattice solves: bit parity with the single-device fused
+engine and the host pipeline, for every fused cost program.
+
+The solve mesh partitions each layer's subset blocks across D devices
+(one ``pmin``/``psum`` combine per layer); parity must be *bitwise* —
+identical optima, identical DP-derived trees — because the sharded
+path reorders nothing: each device reduces the same per-subset
+candidate columns the dense sweep would, and min/sum over a
+permutation of finitely many f64 block partials is the value the
+single-device sweep computes (min exactly; sums are per-subset row
+segments, concatenated not re-associated).
+
+Device count: when this module is imported before jax (running the file
+alone, or under the CI forced-8-device job's ``XLA_FLAGS``), it forces 8
+host devices so the full D in {1, 2, 4, 8} matrix runs.  In a full-suite
+run where another module already imported jax with one device, the
+D > 1 cases skip and the D = 1 mesh path (shard_map with a one-device
+mesh — a real code path, distinct from the dense sweep) still runs.
+"""
+import os
+import sys
+
+if "jax" not in sys.modules and \
+        "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count"
+                                 "=8").strip()
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.ccap import ccap
+from repro.core.dpconv import optimize
+from repro.core.dpconv_max import dpconv_max, dpconv_max_ref
+from repro.core.querygraph import (chain, clique, cycle,
+                                   make_cardinalities, star)
+
+NDEV = len(jax.devices())
+
+
+def _need(d):
+    return pytest.mark.skipif(
+        NDEV < d, reason=f"needs {d} devices (have {NDEV}; run with "
+                         f"XLA_FLAGS=--xla_force_host_platform_device_"
+                         f"count=8)")
+
+
+DS = [pytest.param(d, marks=_need(d)) for d in (1, 2, 4, 8)]
+DS_SMALL = [pytest.param(d, marks=_need(d)) for d in (2, 8)]
+
+
+def _cases(n, seeds=(0, 1)):
+    makers = [clique, chain, star, cycle]
+    return [(makers[i % len(makers)](n),
+             make_cardinalities(makers[i % len(makers)](n), seed=s))
+            for i, s in enumerate(seeds)]
+
+
+# --------------------------------------------------------------- C_max
+@pytest.mark.parametrize("D", DS)
+def test_sharded_max_bitwise_parity(D):
+    n = 7
+    for q, card in _cases(n, seeds=(0, 3)):
+        mark = engine.dispatch_mark()
+        sh = dpconv_max(q, card, engine="fused", shards=D)
+        host = dpconv_max(q, card, engine="host")
+        assert sh.engine == "fused" and sh.dispatches == 1
+        assert sh.optimum == host.optimum            # bit-identical
+        assert sh.optimum == dpconv_max_ref(card, n)
+        assert repr(sh.tree) == repr(host.tree)
+        assert sh.tree.cost_max(card) == sh.optimum
+        recs = [r for r in engine.dispatches_since(mark) if r.cost == "max"]
+        assert recs and recs[0].shards == D
+        assert len(recs[0].devices[1]) == D          # (platform, ids)
+
+
+# --------------------------------------------------------------- C_out
+@pytest.mark.parametrize("D", DS_SMALL)
+def test_sharded_out_bitwise_parity(D):
+    n = 7
+    for q, card in _cases(n, seeds=(5, 6)):
+        sh = optimize(q, card, cost="out", method="dpccp",
+                      engine="fused", shards=D)
+        host = optimize(q, card, cost="out", method="dpccp", engine="host")
+        assert sh.meta["engine"] == "fused"
+        assert float(sh.cost) == float(host.cost)
+        assert repr(sh.tree) == repr(host.tree)
+
+
+# --------------------------------------------------------------- C_cap
+@pytest.mark.parametrize("D", DS_SMALL)
+def test_sharded_cap_bitwise_parity(D):
+    n = 7
+    for q, card in _cases(n, seeds=(2, 9)):
+        sh = ccap(q, card, engine="fused", shards=D)
+        host = ccap(q, card, engine="host")
+        assert sh.engine == "fused" and sh.dispatches == 1
+        assert sh.gamma == host.gamma and sh.cout == host.cout
+        assert repr(sh.tree) == repr(host.tree)
+
+
+@pytest.mark.parametrize("D", [pytest.param(4, marks=_need(4))])
+def test_sharded_cap_connected_bitwise_parity(D):
+    n = 7
+    for q, card in [(cycle(n), make_cardinalities(cycle(n), seed=4)),
+                    (chain(n), make_cardinalities(chain(n), seed=8))]:
+        sh = ccap(q, card, engine="fused", connected=True, shards=D)
+        host = ccap(q, card, engine="host", connected=True)
+        assert sh.engine == "fused"
+        assert sh.gamma == host.gamma and sh.cout == host.cout
+        assert repr(sh.tree) == repr(host.tree)
+
+
+# ------------------------------------- above the single-device ceiling
+@pytest.mark.parametrize("D", [pytest.param(4, marks=_need(4))])
+def test_sharded_cap_n15_matches_host(D):
+    """The acceptance case: n = 15 C_cap on a 4-way solve mesh — above
+    the old single-device fused ceiling (13) — bit-identical gamma,
+    C_out and tree vs the host pipeline.  ~20 s cold compile; the
+    executable is AOT-cached so the CI job pays it once."""
+    n = 15
+    q = chain(n)
+    card = make_cardinalities(q, seed=0)
+    sh = ccap(q, card, engine="fused", shards=D)
+    host = ccap(q, card, engine="host")
+    assert sh.gamma == host.gamma                    # bit-identical
+    assert sh.cout == host.cout
+    assert repr(sh.tree) == repr(host.tree)
+    assert sh.tree.cost_out(card) == sh.cout
+
+
+# ----------------------------------------------- cache keys + ceilings
+def test_sharded_ceiling_math():
+    assert engine.sharded_ceiling(13, 1) == 13
+    assert engine.sharded_ceiling(13, 2) == 14
+    assert engine.sharded_ceiling(13, 4) == 15
+    assert engine.sharded_ceiling(13, 8) == 15       # int32-tier clamp
+    assert engine.sharded_ceiling(11, 4) == 13
+
+
+@pytest.mark.parametrize("D", [pytest.param(2, marks=_need(2))])
+def test_shard_width_is_a_cache_dimension(D):
+    """Distinct solve-mesh widths never alias one executable: a D-way
+    program's collectives are baked into its HLO."""
+    n = 6
+    e1 = engine.get_executable(n, 1, engine.candidate_bucket(n))
+    e2 = engine.get_executable(n, 1, engine.candidate_bucket(n), shards=D)
+    assert e1 is not e2
+    # and the same width twice IS one executable (cache hit)
+    assert engine.get_executable(
+        n, 1, engine.candidate_bucket(n), shards=D) is e2
+
+
+def test_dispatch_records_carry_lane_and_mesh_identity():
+    n = 6
+    q, card = clique(n), make_cardinalities(clique(n), seed=1)
+    mark = engine.dispatch_mark()
+    with engine.dispatch_lane(3):
+        dpconv_max(q, card, engine="fused")
+    recs = engine.dispatches_since(mark)
+    assert recs and recs[-1].lane == 3
+    assert recs[-1].shards == 1
+    platform, ids = recs[-1].devices
+    assert platform == jax.devices()[0].platform and len(ids) == 1
+    assert engine.current_lane() is None             # context restored
