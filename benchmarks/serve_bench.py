@@ -37,6 +37,13 @@ Four extra sections ride along:
   (``service.workload.make_einsum_workload``) served and
   parity-checked, so the gate also covers real-trace traffic
   (``--workload einsum`` makes it the main sweep's stream too);
+* **reuse** — the incremental-planning row (always emitted): the einsum
+  replay stream grown with model-planner traces
+  (``workload.einsum_replay_pool``) served cold vs layer-cache-seeded
+  with the plan cache off, reporting the layer-fragment hit rate, the
+  p50 delta, and seeded-vs-cold **bitwise** parity booleans, plus a
+  deadline-pressed pass asserting zero degraded plans served to
+  exact-capable requests — ``scripts/smoke.sh`` gates on it;
 * **out lane** — a sparse out-only stream served on the host-DPccp and
   the fused connectivity-masked C_out engines (``--cost out`` makes it
   the main sweep's mix too); the row records host-vs-fused plans/sec,
@@ -108,6 +115,8 @@ from repro.service import (PlanServer, RuntimeConfig, SLOClass,
                            VirtualClock, WorkloadSpec,
                            make_einsum_workload, make_workload)
 from repro.service.batch import BatchPolicy
+from repro.service.layercache import LayerCacheStats
+from repro.service.workload import einsum_replay_pool
 
 RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                        "results")
@@ -218,8 +227,12 @@ def run_naive(reqs, passes: int = 2) -> dict:
 
 def _make_server(batch_size: int, cache: bool, engine: str = "fused",
                  gamma: int = 1) -> PlanServer:
+    # layer cache off: these rows price the engine and the whole-plan
+    # cache with their historical semantics (cold rows really solve cold
+    # — binary rounds ~log2(C), no seeded-variant compiles mid-row); the
+    # fragment-reuse tier is measured by its own `reuse` row
     return PlanServer(max_batch=batch_size, cache_capacity=8192,
-                      enable_cache=cache,
+                      enable_cache=cache, enable_layer_cache=False,
                       batch_policy=BatchPolicy(max_batch=batch_size,
                                                engine=engine,
                                                gamma_batch=gamma))
@@ -787,6 +800,128 @@ def run_replay(spec_seed: int, n_requests: int,
     return row, checked, bad
 
 
+def run_reuse_row(spec_seed: int, n_requests: int,
+                  batch_size: int) -> "tuple[dict, int]":
+    """The incremental-planning reuse row — always emitted.
+
+    Two passes over the SAME einsum replay stream — the pool grown with
+    traces logged from the ``train/steps`` model planners
+    (``workload.einsum_replay_pool``) — with the plan cache OFF in both
+    so every request actually solves:
+
+    * ``cold``   — layer-fragment cache disabled: the no-reuse baseline;
+    * ``seeded`` — layer-fragment cache enabled AND pre-populated by the
+      warm pass (a replica that has been serving the template family for
+      a while — the steady state the tier exists for): template repeats
+      warm-start the C_max/C_cap search bracket from the cached optimum,
+      shared sub-networks seed already-solved C_out value layers.
+
+    Layer seeds are pure perf hints, so the passes must agree **bitwise**
+    on every cost and join tree (``parity_ok`` — the incremental-planning
+    acceptance gate, enforced by ``scripts/smoke.sh``).  A third pass
+    with the plan cache ON and deadline pressure replays the
+    degraded-plan poisoning fix at bench scale: a best-effort (GOO) plan
+    cached under the primary key must never be served to an
+    exact-capable request (``degraded_to_exactcap == 0``).
+    """
+    spec = WorkloadSpec(n_requests=n_requests, seed=spec_seed,
+                        cost_mix=(("max", 0.55), ("out", 0.30),
+                                  ("cap", 0.15)),
+                        relabel_frac=0.4)
+    reqs = make_einsum_workload(spec, contractions=einsum_replay_pool())
+
+    def make(layer_cache: bool, plan_cache: bool = False) -> PlanServer:
+        return PlanServer(max_batch=batch_size, enable_cache=plan_cache,
+                          enable_layer_cache=layer_cache,
+                          batch_policy=BatchPolicy(max_batch=batch_size,
+                                                   engine="fused"))
+
+    # warm both variants: the seeded pass compiles the seeded program
+    # cards (4-input max search, seeded out replay) on top of the cold
+    # ones, and timing must measure serving, not tracing.  The warm
+    # pass's populated fragment store carries into the timed seeded
+    # servers (fresh counters) — the timed passes price steady-state
+    # reuse, not the one-time fill of an empty store.
+    warm_layers = None
+    for lc in (False, True):
+        s = make(lc)
+        s.serve(list(reqs), closed_loop=True)
+        if lc:
+            warm_layers = s.layers
+    # steady-state warm: a FULL store seeds far more (bucket, cost)
+    # combinations than the fill pass did while the store was still
+    # growing — re-serve both pacing modes over the populated store so
+    # every seeded executable bucket compiles outside the timed region
+    for closed in (True, False):
+        s = make(True)
+        s.layers = warm_layers
+        s.serve(list(reqs), closed_loop=closed)
+
+    def make_timed(lc: bool) -> PlanServer:
+        s = make(lc)
+        if lc:
+            s.layers = warm_layers
+        return s
+
+    # fresh counters over the warm store: the row's hit/seed tallies
+    # cover exactly the two timed seeded passes below
+    warm_layers.stats = LayerCacheStats()
+    runs = {}
+    for name, lc in (("cold", False), ("seeded", True)):
+        srv = make_timed(lc)
+        t0 = time.perf_counter()
+        resps, _ = srv.serve(list(reqs), closed_loop=True)
+        wall = time.perf_counter() - t0
+        _, lat = make_timed(lc).serve(list(reqs), closed_loop=False)
+        runs[name] = (srv, resps, wall, lat)
+
+    cold_r, seeded_r = runs["cold"][1], runs["seeded"][1]
+    mismatches = sum(
+        1 for c, s in zip(cold_r, seeded_r)
+        if c.cost != s.cost or repr(c.tree) != repr(s.tree))
+    ls = runs["seeded"][0].layers.stats
+    probes = (ls.search_hits + ls.search_misses
+              + ls.value_hits + ls.value_misses)
+    hit_rate = ((ls.search_hits + ls.value_hits) / probes
+                if probes else 0.0)
+    p50_cold = runs["cold"][3].latency.percentile(50) * 1e3
+    p50_seeded = runs["seeded"][3].latency.percentile(50) * 1e3
+
+    # degraded-poisoning replay: deadline-pressed repeats force GOO
+    # plans into the shared plan cache; exact-capable repeats of the
+    # same templates must miss through and re-solve exactly
+    spec_d = dataclasses.replace(spec, seed=spec_seed + 1,
+                                 budget_frac=0.3, budget_s=1e-6)
+    reqs_d = make_einsum_workload(spec_d,
+                                  contractions=einsum_replay_pool())
+    srv_d = make(True, plan_cache=True)
+    resps_d, _ = srv_d.serve(list(reqs_d), closed_loop=True)
+    degraded_served = sum(r.status == "degraded" for r in resps_d)
+    degraded_to_exactcap = sum(
+        1 for req, r in zip(reqs_d, resps_d)
+        if req.latency_budget is None and r.status == "degraded")
+
+    row = {"config": f"reuse/einsum-model-trace/batch={batch_size}/"
+                     f"plancache=off",
+           "n_requests": len(reqs),
+           "layer_hit_rate": round(hit_rate, 4),
+           "layer_cache": ls.as_dict(),
+           "seeded_solves": ls.seeded_solves,
+           "plans_per_s_cold": len(reqs) / runs["cold"][2],
+           "plans_per_s_seeded": len(reqs) / runs["seeded"][2],
+           "p50_ms_cold": p50_cold,
+           "p50_ms_seeded": p50_seeded,
+           "p50_delta_ms": p50_cold - p50_seeded,
+           "parity_checked": len(reqs),
+           "parity_mismatches": mismatches,
+           "parity_ok": mismatches == 0,
+           "degraded_served": degraded_served,
+           "degraded_to_exactcap": degraded_to_exactcap,
+           "plan_cache_degraded_skips":
+               srv_d.cache.stats.degraded_skips}
+    return row, mismatches
+
+
 def run_out_sweep(spec_seed: int, n_requests: int,
                   batch_size: int) -> "tuple[dict, int, int]":
     """The connected-C_out lane sweep — host DPccp enumeration vs the
@@ -974,6 +1109,32 @@ def main(argv=None) -> int:
           f"hit_rate={replay_row['cache']['hit_rate']}")
     print(f"#   replay parity: {replay_checked} checked, "
           f"{replay_bad} mismatches", flush=True)
+
+    # ------------------------------------- incremental-planning reuse
+    reuse_row, reuse_bad = run_reuse_row(
+        args.seed + 5, min(96, n_requests), max(batch_sizes))
+    rows.append(reuse_row)
+    parity_fail += reuse_bad
+    print(f"{reuse_row['config']},"
+          f"{reuse_row['plans_per_s_seeded']:.1f},"
+          f"{reuse_row['p50_ms_seeded']:.2f},,"
+          f"layer_hit_rate={reuse_row['layer_hit_rate']};"
+          f"seeded={reuse_row['seeded_solves']};"
+          f"p50_cold={reuse_row['p50_ms_cold']:.2f}ms;"
+          f"p50_delta={reuse_row['p50_delta_ms']:.2f}ms;"
+          f"parity_ok={reuse_row['parity_ok']};"
+          f"degraded_to_exactcap={reuse_row['degraded_to_exactcap']}")
+    print(f"#   reuse parity: {reuse_row['parity_checked']} checked, "
+          f"{reuse_bad} mismatches", flush=True)
+    if reuse_row["layer_hit_rate"] <= 0.0:
+        invariant_fail += 1
+        print("#   INVARIANT VIOLATION: layer-fragment cache scored no "
+              "hits on the model-trace replay stream", file=sys.stderr)
+    if reuse_row["degraded_to_exactcap"]:
+        invariant_fail += 1
+        print("#   INVARIANT VIOLATION: "
+              f"{reuse_row['degraded_to_exactcap']} degraded plans were "
+              "served to exact-capable requests", file=sys.stderr)
 
     # --------------------------------------- connected-C_out lane row
     out_row, out_checked, out_bad = run_out_sweep(
@@ -1194,6 +1355,7 @@ def main(argv=None) -> int:
         },
         "cold_start": cold,
         "replay": replay_row,
+        "reuse": reuse_row,
         "runtime": {k: rt_row[k] for k in
                     ("parity_checked", "parity_mismatches",
                      "one_dispatch", "host_extractions",

@@ -22,8 +22,13 @@
 # throughput vs 1 lane on the same stream, zero cross-lane parity
 # mismatches, and sharded-solve bit parity (with the n=15
 # above-the-ceiling C_cap case required on any >= 4-device host);
-# plus a repo hygiene check that no .pyc/__pycache__ artifact is ever
-# tracked.
+# The reuse gates assert the incremental-planning contract on the
+# model-trace replay row: layer-fragment hits > 0, at least one solve
+# consumed a seed, seeded-vs-cold responses bitwise identical, zero
+# degraded plans served to exact-capable requests, and no seeded p50
+# regression.  Plus repo hygiene checks: no .pyc/__pycache__ artifact
+# is ever tracked, and no generated bench result file under
+# benchmarks/results/ is ever tracked (stale by construction).
 #
 #     scripts/smoke.sh            # full tier-1 + quick serve bench
 #     scripts/smoke.sh --quick    # bench + summary gates only (CI runs
@@ -139,19 +144,48 @@ assert f["overhead_frac"] < 0.02 \
     or f["overhead_us_per_request"] < 30.0, \
     f"zero-fault resilience overhead {f['overhead_frac']:.1%} " \
     f"({f['overhead_us_per_request']}us/request; gate: <2% or <30us)"
+ru = s["reuse"]
+assert ru["layer_hit_rate"] > 0, \
+    "layer-fragment cache scored no hits on the model-trace replay " \
+    "stream (reuse row)"
+assert ru["seeded_solves"] > 0, "no solve consumed a layer seed"
+assert ru["parity_ok"] and ru["parity_mismatches"] == 0, \
+    f"seeded-vs-cold replay not bitwise identical: " \
+    f"{ru['parity_mismatches']} mismatches"
+assert ru["degraded_to_exactcap"] == 0, \
+    f"{ru['degraded_to_exactcap']} degraded plans served to " \
+    f"exact-capable requests"
+# seeds must never make serving slower; the p50 delta is a two-wall-
+# clock subtraction on a shared runner, so the gate tolerates noise
+# around zero while still catching a real warm-start regression
+assert ru["p50_ms_seeded"] <= ru["p50_ms_cold"] * 1.25, \
+    f"seeded replay p50 {ru['p50_ms_seeded']:.2f}ms regressed over " \
+    f"cold {ru['p50_ms_cold']:.2f}ms"
 print("smoke gates: fused-cap + fused-out parity/dispatch/extraction "
       "+ probe rounds + runtime (sync-parity/deadlines/coalesce/"
       "fast-path) + obs (zero span leaks, lane shapes, exact recorder "
       "capture, <5% tracing overhead) + faults (chaos resolves every "
       "request, zero wrong plans, breaker round trip, <2% zero-fault "
       "overhead) + lanes (>=1.5x modeled 4-lane scaling, zero cross-"
-      "lane mismatches, sharded solve parity) OK")
+      "lane mismatches, sharded solve parity) + reuse (layer-fragment "
+      "hits, seeded-vs-cold bitwise parity, zero degraded-to-exact, "
+      "no p50 regression) OK")
 PY
 
 # repo hygiene: compiled artifacts must never be tracked
 if git ls-files | grep -E '(^|/)__pycache__/|\.pyc$' >/dev/null; then
   echo "smoke: FAIL — tracked .pyc/__pycache__ artifacts:" >&2
   git ls-files | grep -E '(^|/)__pycache__/|\.pyc$' >&2
+  exit 1
+fi
+# bench results are regenerated every run; a tracked copy under
+# benchmarks/results/ would go stale the moment it lands and silently
+# shadow fresh numbers in any tooling that reads the checkout instead
+# of running the bench — fail fast if one ever gets committed
+if git ls-files -- benchmarks/results | grep . >/dev/null; then
+  echo "smoke: FAIL — tracked bench result artifacts (stale by" \
+       "construction):" >&2
+  git ls-files -- benchmarks/results >&2
   exit 1
 fi
 echo "smoke: OK"

@@ -65,6 +65,7 @@ def ccap(
     gamma_batch: int = 1,              # pass-1 probe width (fused only)
     connected: bool = False,           # exclude cross products in pass 2
     shards: int = 1,                   # solve-mesh width (fused only)
+    seed_opt: "float | None" = None,   # cached C_max optimum (fused only)
 ) -> CcapResult:
     """``connected=True`` restricts pass 2 to the DPccp search space (no
     cross products): fused runs the connectivity-gated (min,+) sweep,
@@ -91,7 +92,8 @@ def ccap(
             fc = engine_mod.fused_ccap(
                 np.asarray(card, np.float64)[None, :], n,
                 gamma_slack=gamma_slack, extract_tree=extract_tree,
-                gamma_batch=gamma_batch, qs=[q], shards=shards)
+                gamma_batch=gamma_batch, qs=[q], shards=shards,
+                seed_opt=None if seed_opt is None else [seed_opt])
             cout = float(fc.couts[0])
             assert np.isfinite(cout), \
                 "connected cap infeasible — no cross-product-free plan " \
@@ -113,7 +115,8 @@ def ccap(
         fc = engine_mod.fused_ccap(
             np.asarray(card, np.float64)[None, :], n,
             gamma_slack=gamma_slack, extract_tree=extract_tree,
-            gamma_batch=gamma_batch, shards=shards)
+            gamma_batch=gamma_batch, shards=shards,
+            seed_opt=None if seed_opt is None else [seed_opt])
         cout = float(fc.couts[0])
         assert np.isfinite(cout), \
             "cap infeasible — gamma below C_max optimum?"
@@ -163,6 +166,7 @@ def ccap_batch(
     gamma_batch: int = 1,
     connected: bool = False,
     shards: int = 1,
+    seed_opt=None,
 ) -> "list[CcapResult]":
     """Solve B same-``n`` C_cap instances in lockstep — the serving
     batch-lane entry point.  ``engine="fused"`` runs the whole batch
@@ -186,7 +190,7 @@ def ccap_batch(
                                    extract_tree=extract_tree,
                                    gamma_batch=gamma_batch,
                                    qs=list(qs) if connected else None,
-                                   shards=shards)
+                                   shards=shards, seed_opt=seed_opt)
         out = []
         for b in range(B):
             cout = float(fc.couts[b])

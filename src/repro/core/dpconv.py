@@ -66,6 +66,11 @@ def optimize(q: QueryGraph, card: np.ndarray, cost: str = "max",
             # solve-mesh width rides the fused path only; the host
             # enumerator has no device to shard
             shards = int(kw.pop("shards", 1) or 1)
+            # layer-cache value seeds ride the fused path only: on the
+            # host enumerator a seed is just a perf hint with no slot,
+            # so it is dropped, never an error
+            seed_vals = kw.pop("seed_vals", None)
+            seed_ok = kw.pop("seed_ok", None)
             if engine not in ("host", "fused"):
                 raise ValueError(f"unknown dpccp engine {engine!r}")
             if (engine == "fused" and not kw and n >= 2
@@ -73,17 +78,27 @@ def optimize(q: QueryGraph, card: np.ndarray, cost: str = "max",
                     and q.is_connected(q.full_mask)):
                 fo = engine_mod.fused_out(
                     [q], np.asarray(card, np.float64)[None, :], n,
-                    extract_tree=extract_tree, shards=shards)
-                return PlanResult(float(fo.couts[0]), fo.trees[0],
-                                  {"engine": "fused",
-                                   "dispatches": fo.dispatches})
+                    extract_tree=extract_tree, shards=shards,
+                    seed_vals=None if seed_vals is None
+                    else np.asarray(seed_vals, np.float64)[None, :],
+                    seed_ok=None if seed_ok is None
+                    else np.asarray(seed_ok, bool)[None, :])
+                meta = {"engine": "fused", "dispatches": fo.dispatches}
+                if fo.dp is not None:
+                    # the solved value table rides out for the service
+                    # tier's fragment harvest (layercache); the server
+                    # pops it before caching/responding
+                    meta["dp_table"] = np.asarray(fo.dp[0], np.float64)
+                return PlanResult(float(fo.couts[0]), fo.trees[0], meta)
             # host enumeration: the parity reference, and the only route
             # for hyperedge/disconnected graphs and prune_gamma variants
             dp, nccp = dpccp_mod.dpccp(q, card, mode="out", **kw)
             tree = jointree.extract_tree_out(dp, card, n) \
                 if extract_tree else None
-            return PlanResult(float(dp[-1]), tree,
-                              {"ccp": nccp, "engine": "host"})
+            meta = {"ccp": nccp, "engine": "host"}
+            if not kw:          # pruned/variant tables aren't the plain dp
+                meta["dp_table"] = np.asarray(dp, np.float64)
+            return PlanResult(float(dp[-1]), tree, meta)
     if cost == "cap":
         r = ccap(q, card, extract_tree=extract_tree, **kw)
         return PlanResult(r.cout, r.tree,
@@ -134,17 +149,23 @@ def optimize_batch(qs, cards, cost: str = "max", method: str = "dpconv",
                             "batched": True}) for r in rs]
     if (cost == "out" and method == "dpccp" and len(qs) > 1
             and len(ns) == 1 and qs[0].n >= 2 and dp_fn is None
-            and set(kw) <= {"engine", "shards"}
+            and set(kw) <= {"engine", "shards", "seed_vals", "seed_ok"}
             and kw.get("engine") == "fused"
             and all(not q.hyperedges and q.is_connected(q.full_mask)
                     for q in qs)):
         fo = engine_mod.fused_out(qs, np.stack(cards), qs[0].n,
                                   extract_tree=extract_tree,
-                                  shards=int(kw.get("shards", 1) or 1))
-        return [PlanResult(float(fo.couts[b]), fo.trees[b],
-                           {"engine": "fused",
-                            "dispatches": fo.dispatches,
-                            "batched": True}) for b in range(len(qs))]
+                                  shards=int(kw.get("shards", 1) or 1),
+                                  seed_vals=kw.get("seed_vals"),
+                                  seed_ok=kw.get("seed_ok"))
+        out = []
+        for b in range(len(qs)):
+            meta = {"engine": "fused", "dispatches": fo.dispatches,
+                    "batched": True}
+            if fo.dp is not None:
+                meta["dp_table"] = np.asarray(fo.dp[b], np.float64)
+            out.append(PlanResult(float(fo.couts[b]), fo.trees[b], meta))
+        return out
     if (cost == "cap" and method == "dpconv" and len(qs) > 1
             and len(ns) == 1 and dp_fn is None
             and kw.get("engine", "auto") != "host"):
@@ -156,6 +177,10 @@ def optimize_batch(qs, cards, cost: str = "max", method: str = "dpconv",
                             "dispatches": r.dispatches,
                             "passes": r.passes.get("pass1_fsc_passes"),
                             "batched": True}) for r in rs]
+    # the per-query fallback: batch-shaped seed hints don't apply to
+    # single solves, so they are dropped (seeds are never load-bearing)
+    for hint in ("seed_opt", "seed_vals", "seed_ok"):
+        kw.pop(hint, None)
     return [optimize(q, c, cost=cost, method=method,
                      extract_tree=extract_tree, **kw)
             for q, c in zip(qs, cards)]

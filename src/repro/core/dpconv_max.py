@@ -90,6 +90,7 @@ def dpconv_max(
     engine: str = "auto",
     backend: str = "xla",
     shards: int = 1,
+    seed_opt: "float | None" = None,
 ) -> CmaxResult:
     """Optimal C_max value (and join tree) for query graph ``q`` with dense
     cardinality table ``card`` over the subset lattice.
@@ -109,6 +110,12 @@ def dpconv_max(
     transform tier (``"xla"`` f64 / ``"pallas"`` int32); the host loop
     takes transform overrides via ``dpconv_max_batch``'s ``dp_fn``
     instead.
+
+    ``seed_opt`` — a cached C_max optimum for this exact (canonical)
+    instance: the fused search starts with a collapsed bracket and skips
+    its probe rounds (``engine._seed_bracket``; bit-identical results, a
+    non-matching seed just searches cold).  The host loop ignores it —
+    the seed is a perf hint, never a correctness input.
     """
     n = q.n
     size = 1 << n
@@ -124,7 +131,9 @@ def dpconv_max(
                               extract_tree=extract_tree,
                               backend=backend,
                               gamma_batch=gamma_batch,
-                              shards=shards)
+                              shards=shards,
+                              seed_opt=None if seed_opt is None
+                              else [seed_opt])
         return CmaxResult(optimum=float(fs.optima[0]), tree=fs.trees[0],
                           feasibility_passes=fs.passes, engine="fused",
                           dispatches=fs.dispatches)
@@ -200,6 +209,7 @@ def dpconv_max_batch(
     backend: str = "xla",
     gamma_batch: int = 1,
     shards: int = 1,
+    seed_opt=None,
 ) -> "list[CmaxResult]":
     """Solve B same-``n`` DPconv[max] instances in lockstep.
 
@@ -230,6 +240,10 @@ def dpconv_max_batch(
     per round on a leading axis).  ``dp_fn`` is a host-loop concept, so
     providing it routes to the host path under ``"auto"``; the host
     batch loop itself is binary-only and refuses ``gamma_batch > 1``.
+
+    ``seed_opt`` — per-row cached optima (length-B sequence, None
+    entries cold) warm-starting the fused search brackets; ignored on
+    the host loop (perf hint only, see ``dpconv_max``).
     """
     cards = np.asarray(cards, np.float64)
     B, size = cards.shape
@@ -242,7 +256,8 @@ def dpconv_max_batch(
                              "use engine='host' or 'auto'")
         fs = fused_dpconv_max(cards, n, direct_layers=direct_layers,
                               extract_tree=extract_tree, backend=backend,
-                              gamma_batch=gamma_batch, shards=shards)
+                              gamma_batch=gamma_batch, shards=shards,
+                              seed_opt=seed_opt)
         return [CmaxResult(optimum=float(fs.optima[b]), tree=fs.trees[b],
                            feasibility_passes=fs.passes, engine="fused",
                            dispatches=fs.dispatches) for b in range(B)]

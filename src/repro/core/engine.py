@@ -112,7 +112,7 @@ class DispatchRecord:
     that were blocked on that dispatch.
     """
     seq: int                   # monotone id (ring position survives wrap)
-    cost: str                  # "max" | "cap" | "cap_conn" | "out"
+    cost: str                  # "max" | "cap" | "cap_conn" | "out[_seeded]"
     n: int
     B: int                    # padded batch bucket
     C: int                    # candidate bucket (0 for the out program)
@@ -241,6 +241,7 @@ class FusedSolve:
     dispatches: int = 1            # device executions measured (1 fused)
     dp: "np.ndarray | None" = None  # (B, 2^n) extraction feasibility table
     extraction: str = "device"     # where Alg. 2 ran
+    seeded: int = 0                # rows whose search bracket was seeded
 
 
 @dataclasses.dataclass
@@ -253,6 +254,7 @@ class FusedOutSolve:
     dispatches: int = 1
     dp: "np.ndarray | None" = None  # (B, 2^n) value table (+inf outside
     extraction: str = "device"      # the connected sets)
+    seeded: int = 0                # rows carrying cached sub-table seeds
 
 
 @dataclasses.dataclass
@@ -265,6 +267,7 @@ class FusedCapSolve:
     rounds: int                    # pass-1 search rounds (lockstep)
     dispatches: int = 1
     extraction: str = "device"
+    seeded: int = 0                # rows whose search bracket was seeded
 
 
 # ----------------------------------------------------------- program cache
@@ -350,23 +353,32 @@ def _executable(n: int, B: int, C: int, backend: str, direct_layers: int,
     args = [
         jax.ShapeDtypeStruct((B, 1 << n), jnp.float64),
         jax.ShapeDtypeStruct((B, C), jnp.float64),
-        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),   # lo0 (warm-start floor)
+        jax.ShapeDtypeStruct((B,), jnp.int32),   # hi0
     ]
-    if cost == "max":
+    # "<cost>_seeded" labels select the layer-cache warm-start variants:
+    # same AOT signature, but the search runs the one-probe seed
+    # verification (``_fused_search(verify_seed=True)``).  A distinct
+    # label keeps each in its own executable-cache slot so the cold
+    # programs never recompile.
+    seeded = cost.endswith("_seeded") and cost != "out_seeded"
+    base_cost = cost[: -len("_seeded")] if seeded else cost
+    if base_cost == "max":
         fn = lattice.build_max_program(n, direct_layers, backend, extract,
                                        gamma_batch, shards=shards,
-                                       mesh=mesh)
-    elif cost == "cap":
+                                       mesh=mesh, seeded=seeded)
+    elif base_cost == "cap":
         fn = lattice.build_cap_program(n, direct_layers, backend, extract,
                                        gamma_batch, shards=shards,
-                                       mesh=mesh)
+                                       mesh=mesh, seeded=seeded)
         args.append(jax.ShapeDtypeStruct((), jnp.float64))
-    elif cost == "cap_conn":
+    elif base_cost == "cap_conn":
         # the no-cross-products cap: pass 2 under connected-split masks
         # (the same ``conn`` input the out program consumes)
         fn = lattice.build_cap_program(n, direct_layers, backend, extract,
                                        gamma_batch, connected=True,
-                                       shards=shards, mesh=mesh)
+                                       shards=shards, mesh=mesh,
+                                       seeded=seeded)
         args.append(jax.ShapeDtypeStruct((), jnp.float64))
         args.append(jax.ShapeDtypeStruct((B, 1 << n), jnp.bool_))
     elif cost == "out":
@@ -378,6 +390,19 @@ def _executable(n: int, B: int, C: int, backend: str, direct_layers: int,
         fn = lattice.build_out_program(n, extract, shards=shards,
                                        mesh=mesh)
         args = [
+            jax.ShapeDtypeStruct((B, 1 << n), jnp.float64),
+            jax.ShapeDtypeStruct((B, 1 << n), jnp.bool_),
+        ]
+    elif cost == "out_seeded":
+        # the layer-cache variant of the out program: two extra inputs
+        # carry cached sub-table values and their validity mask.  A
+        # distinct cost label keeps it in its own executable-cache slot —
+        # the cold out program's AOT signature never changes.
+        fn = lattice.build_out_program(n, extract, shards=shards,
+                                       mesh=mesh, seeded=True)
+        args = [
+            jax.ShapeDtypeStruct((B, 1 << n), jnp.float64),
+            jax.ShapeDtypeStruct((B, 1 << n), jnp.bool_),
             jax.ShapeDtypeStruct((B, 1 << n), jnp.float64),
             jax.ShapeDtypeStruct((B, 1 << n), jnp.bool_),
         ]
@@ -518,6 +543,40 @@ def _pad_candidates(cards: np.ndarray, n: int):
     return cards_pad, cand_pad, hi0, Bp, C
 
 
+def _seed_bracket(cand_pad: np.ndarray, hi0: np.ndarray, seed_opt,
+                  B: int):
+    """Encode cached optima as warm-start hypotheses in the brackets.
+
+    ``seed_opt`` is a length-B sequence of cached C_max optima (None or
+    non-finite = no seed for that row).  A seed only engages when it
+    matches a candidate byte-exactly within the row's live range; the
+    row is then encoded ``lo0 = -(idx + 1)`` with the FULL bracket
+    preserved in ``hi0``, and the seeded program variant VERIFIES the
+    hypothesis on device with one dual feasibility probe before
+    collapsing (``lattice._fused_search(verify_seed=True)``).  A
+    verified seed exits the search loop with zero further rounds; a
+    stale seed (matching some candidate that is not the optimum —
+    feasible-but-not-minimal or infeasible) only shrinks the bracket
+    and the search converges to the true optimum.  Correctness never
+    depends on the cache — it only prices rounds.  Returns ``(lo0,
+    hi0, rows_seeded)``.
+    """
+    lo0 = np.zeros_like(hi0)
+    hits = 0
+    if seed_opt is None:
+        return lo0, hi0, hits
+    for b in range(min(B, len(seed_opt))):
+        v = seed_opt[b]
+        if v is None or not np.isfinite(v):
+            continue
+        row = cand_pad[b]
+        idx = int(np.searchsorted(row[:hi0[b] + 1], v))
+        if idx <= hi0[b] and row[idx] == v:
+            lo0[b] = -(idx + 1)
+            hits += 1
+    return lo0, hi0, hits
+
+
 def _trees_from_arrays(nodes: np.ndarray, lidx: np.ndarray,
                        B: int) -> list:
     """Assemble JoinTree objects from the device split arrays — a linear
@@ -529,7 +588,7 @@ def _trees_from_arrays(nodes: np.ndarray, lidx: np.ndarray,
 def fused_dpconv_max(cards: np.ndarray, n: int, direct_layers: int = 4,
                      extract_tree: bool = True, backend: str = "xla",
                      gamma_batch: int = 1,
-                     shards: int = 1) -> FusedSolve:
+                     shards: int = 1, seed_opt=None) -> FusedSolve:
     """Solve B same-``n`` DPconv[max] instances in ONE device dispatch.
 
     ``cards`` is (B, 2^n).  Optima and trees are bit-identical to B
@@ -539,6 +598,14 @@ def fused_dpconv_max(cards: np.ndarray, n: int, direct_layers: int = 4,
     ~log_{G+1} instead of ~log_2 rounds, still one dispatch and the same
     optima/trees.  ``shards = D > 1`` runs the program ``shard_map``-ped
     over the D-device solve mesh (still one dispatch, same results).
+
+    ``seed_opt`` — per-row cached optima from the layer cache (None
+    entries = cold): matching rows run the ``max_seeded`` program
+    variant, which VERIFIES each hypothesis with one dual feasibility
+    probe and only then collapses the bracket (``_seed_bracket`` /
+    ``lattice._fused_search(verify_seed=True)``) — one round instead of
+    ~log2(C) when the seed holds, a correct cold-equivalent search when
+    it is stale, same dispatch count, bit-identical results either way.
     """
     cards = np.asarray(cards, np.float64)
     if cards.ndim == 1:
@@ -547,15 +614,17 @@ def fused_dpconv_max(cards: np.ndarray, n: int, direct_layers: int = 4,
     assert size == 1 << n and n >= 2
     assert gamma_batch >= 1
     cards_pad, cand_pad, hi0, Bp, C = _pad_candidates(cards, n)
+    lo0, hi0, seeded = _seed_bracket(cand_pad, hi0, seed_opt, B)
 
+    cost = "max_seeded" if seeded else "max"
     exe, emeta, hit = _executable(n, Bp, C, backend, direct_layers,
-                                  extract_tree, "max", gamma_batch,
+                                  extract_tree, cost, gamma_batch,
                                   shards)
-    prof = _record("max", n, Bp, C, backend, emeta, hit)
+    prof = _record(cost, n, Bp, C, backend, emeta, hit)
     disp0 = _STATS.dispatches
     rec0 = jointree.recursive_extractions()
     out = _run(exe, jnp.asarray(cards_pad), jnp.asarray(cand_pad),
-               jnp.asarray(hi0), record=prof)
+               jnp.asarray(lo0), jnp.asarray(hi0), record=prof)
     trees: list = [None] * B
     dpn = None
     if extract_tree:
@@ -578,12 +647,13 @@ def fused_dpconv_max(cards: np.ndarray, n: int, direct_layers: int = 4,
     return FusedSolve(optima=opt, trees=trees, rounds=rounds,
                       passes=rounds + (1 if extract_tree else 0),
                       dispatches=_STATS.dispatches - disp0,
-                      dp=dpn, extraction="device")
+                      dp=dpn, extraction="device", seeded=seeded)
 
 
 def fused_out(qs: list, cards: np.ndarray, n: int,
               extract_tree: bool = True,
-              shards: int = 1) -> FusedOutSolve:
+              shards: int = 1, seed_vals=None,
+              seed_ok=None) -> FusedOutSolve:
     """Solve B same-``n`` connected C_out instances (DPccp semantics —
     connected csg/cmp pairs only, no cross products) in ONE device
     dispatch.
@@ -595,6 +665,14 @@ def fused_out(qs: list, cards: np.ndarray, n: int,
     otherwise (``dpccp.connectivity_masks`` raises on hyperedges).
     Optima, DP tables and trees are bit-identical to B
     ``dpccp_with_tree`` calls.
+
+    ``seed_vals``/``seed_ok`` — (B, 2^n) cached sub-table values and
+    their validity mask from the layer cache: rows with seeds replay
+    those entries inside the (min,+) sweep (the ``out_seeded``
+    executable variant) instead of recomputing them; ``dp[S]`` is a pure
+    function of the sub-problem induced on ``S``, so valid seeds are
+    bit-identical to the recomputation and results never change.  Still
+    ONE dispatch.
     """
     from repro.core.dpccp import connectivity_masks
 
@@ -618,13 +696,25 @@ def fused_out(qs: list, cards: np.ndarray, n: int,
         conn_pad = np.concatenate(
             [conn, np.repeat(conn[:1], Bp - B, axis=0)], axis=0)
 
+    seeded = 0
+    cost = "out"
+    extra = ()
+    if seed_ok is not None and np.any(seed_ok):
+        sv = np.zeros((Bp, size), np.float64)
+        so = np.zeros((Bp, size), bool)
+        sv[:B] = np.asarray(seed_vals, np.float64)
+        so[:B] = np.asarray(seed_ok, bool)
+        seeded = int(np.count_nonzero(so[:B].any(axis=1)))
+        cost = "out_seeded"
+        extra = (jnp.asarray(sv), jnp.asarray(so))
+
     exe, emeta, hit = _executable(n, Bp, 0, "xla", 4, extract_tree,
-                                  "out", 1, shards)
-    prof = _record("out", n, Bp, 0, "xla", emeta, hit)
+                                  cost, 1, shards)
+    prof = _record(cost, n, Bp, 0, "xla", emeta, hit)
     disp0 = _STATS.dispatches
     rec0 = jointree.recursive_extractions()
     out = _run(exe, jnp.asarray(cards_pad), jnp.asarray(conn_pad),
-               record=prof)
+               *extra, record=prof)
     trees: list = [None] * B
     dpn = None
     if extract_tree:
@@ -640,7 +730,7 @@ def fused_out(qs: list, cards: np.ndarray, n: int,
     return FusedOutSolve(couts=np.asarray(cout, np.float64)[:B],
                          trees=trees,
                          dispatches=_STATS.dispatches - disp0,
-                         dp=dpn, extraction="device")
+                         dp=dpn, extraction="device", seeded=seeded)
 
 
 def fused_ccap(cards: np.ndarray, n: int, gamma_slack: float = 1.0,
@@ -648,7 +738,7 @@ def fused_ccap(cards: np.ndarray, n: int, gamma_slack: float = 1.0,
                backend: str = "xla",
                gamma_batch: int = 1,
                qs: "list | None" = None,
-               shards: int = 1) -> FusedCapSolve:
+               shards: int = 1, seed_opt=None) -> FusedCapSolve:
     """Solve B same-``n`` C_cap instances (Sec. 8) in ONE device
     dispatch: pass-1 gamma search, gamma-pruned (min,+) C_out pass, and
     witness-tree extraction all inside the same program.
@@ -665,6 +755,12 @@ def fused_ccap(cards: np.ndarray, n: int, gamma_slack: float = 1.0,
     connected simple-edge graphs.  A cap the connected space cannot
     attain yields ``cout = +inf`` (the host pipeline's behavior); the
     caller decides whether that is an error.
+
+    ``seed_opt`` — per-row cached C_max optima warm-starting the pass-1
+    bracket exactly as in ``fused_dpconv_max``, verification probe
+    included (pass 1 IS that search; at the default slack the gamma it
+    yields equals the cached value bitwise, so max- and cap-lane solves
+    of the same canonical query seed each other).
     """
     cards = np.asarray(cards, np.float64)
     if cards.ndim == 1:
@@ -672,6 +768,7 @@ def fused_ccap(cards: np.ndarray, n: int, gamma_slack: float = 1.0,
     B, size = cards.shape
     assert size == 1 << n and n >= 2
     cards_pad, cand_pad, hi0, Bp, C = _pad_candidates(cards, n)
+    lo0, hi0, seeded = _seed_bracket(cand_pad, hi0, seed_opt, B)
 
     extra = ()
     cost = "cap"
@@ -688,6 +785,8 @@ def fused_ccap(cards: np.ndarray, n: int, gamma_slack: float = 1.0,
             [conn, np.repeat(conn[:1], Bp - B, axis=0)], axis=0)
         extra = (jnp.asarray(conn_pad),)
         cost = "cap_conn"
+    if seeded:
+        cost += "_seeded"
 
     exe, emeta, hit = _executable(n, Bp, C, backend, direct_layers,
                                   extract_tree, cost, gamma_batch,
@@ -696,8 +795,8 @@ def fused_ccap(cards: np.ndarray, n: int, gamma_slack: float = 1.0,
     disp0 = _STATS.dispatches
     rec0 = jointree.recursive_extractions()
     out = _run(exe, jnp.asarray(cards_pad), jnp.asarray(cand_pad),
-               jnp.asarray(hi0), jnp.float64(gamma_slack), *extra,
-               record=prof)
+               jnp.asarray(lo0), jnp.asarray(hi0),
+               jnp.float64(gamma_slack), *extra, record=prof)
     trees = [None] * B
     if extract_tree:
         gamma, cout, nodes, lidx, rounds = out
@@ -714,4 +813,4 @@ def fused_ccap(cards: np.ndarray, n: int, gamma_slack: float = 1.0,
                          couts=np.asarray(cout, np.float64)[:B],
                          trees=trees, rounds=int(rounds),
                          dispatches=_STATS.dispatches - disp0,
-                         extraction="device")
+                         extraction="device", seeded=seeded)

@@ -231,7 +231,8 @@ def feasibility_layers(gate, n: int, direct_layers: int = 4,
                        final_shortcut: bool = True,
                        Z=None, scan_middle: bool = False,
                        shards: int = 1, shard_axis: "str | None" = None,
-                       shard_chunk: int = SHARD_CHUNK_ELEMS):
+                       shard_chunk: int = SHARD_CHUNK_ELEMS,
+                       seed_layers=None):
     """One full layered feasibility DP under ``gate`` — THE layered
     recursion (paper Sec. 5 + 6), shared by every solver in the repo.
 
@@ -261,6 +262,22 @@ def feasibility_layers(gate, n: int, direct_layers: int = 4,
     gather sweep across the mesh axis — one ``psum`` per layer merges the
     disjoint blocks.  The butterfly middle layers stay replicated (a
     zeta transform reads the whole lattice; DESIGN.md §Sharding).
+
+    ``seed_layers`` — the incremental-planning warm start: a
+    ``(k0, dp_seed)`` pair where ``dp_seed`` (broadcastable to
+    ``gate``'s shape) is an already-accumulated feasibility table whose
+    layer slices ``dp_seed * [pc == k]`` are *valid for this gate* for
+    every ``k <= k0``.  Layers ``2..k0`` are then replayed from the seed
+    (one select + zeta each) instead of re-enumerated — the gather-table
+    split enumeration, the expensive part of a direct layer, is skipped
+    entirely.  Correctness is the caller's contract: layer-``k``
+    feasibility depends only on the gate over sets of size ``<= k``, so
+    a seed transfers exactly when those gate values match the run that
+    produced it (byte-identical cardinalities AND the same gamma
+    threshold — e.g. the stored extraction table of a previous solve of
+    the same canonical query, replayed at its cached optimum).  Seeded
+    and cold runs are then bit-identical: the replayed slices equal what
+    the enumeration would recompute, and zeta of equal inputs is equal.
     """
     tfm = tfm or transforms("xla")
     size = 1 << n
@@ -276,7 +293,20 @@ def feasibility_layers(gate, n: int, direct_layers: int = 4,
         Z = Z.at[1].set(tfm.zeta(singles))
 
     dl = min(direct_layers, n - 1) if scan_middle else min(direct_layers, n)
-    for k in range(2, dl + 1):                 # direct small layers
+    start_k = 2
+    if seed_layers is not None:                # warm-start solved prefix
+        k0, dp_seed = seed_layers
+        k0 = min(int(k0), n - 1)
+        seed_t = jnp.asarray(dp_seed).astype(dtype)
+        for k in range(2, k0 + 1):
+            layer_full = jnp.where(pc == k,
+                                   jnp.broadcast_to(seed_t, dp.shape),
+                                   zero)
+            dp = dp + layer_full
+            if k < n:
+                Z = Z.at[k].set(tfm.zeta(layer_full))
+        start_k = max(2, k0 + 1)
+    for k in range(start_k, dl + 1):           # direct small layers
         if shard_axis is not None:
             layer_full = direct_layer_full_sharded(
                 dp, gate, n, k, pc, dtype, shards, shard_axis,
@@ -378,7 +408,8 @@ def minplus_value_layers(card, gate_ok, n: int, shards: int = 1,
 
 def minplus_connected_layers(card, conn, n: int, shards: int = 1,
                              shard_axis: "str | None" = None,
-                             shard_chunk: int = SHARD_CHUNK_ELEMS):
+                             shard_chunk: int = SHARD_CHUNK_ELEMS,
+                             seed_vals=None, seed_ok=None):
     """DPccp's recursion as a dense layer program — the connectivity-
     masked C_out instantiation of the lattice skeleton.
 
@@ -406,6 +437,17 @@ def minplus_connected_layers(card, conn, n: int, shards: int = 1,
     ``minplus_value_layers`` — the per-layer valid-split masks are then
     only ever materialized for this device's block, so the masks shrink
     1/D along with the combo tensor.
+
+    ``seed_vals``/``seed_ok`` (same shape as ``card``; f64 / bool) are
+    the incremental-planning value seeds: where ``seed_ok[S]`` the layer
+    write takes ``seed_vals[S]`` instead of the freshly-computed value.
+    ``dp[S]`` is a pure function of the sub-problem induced on ``S``
+    (cardinalities + connectivity restricted to subsets of S), so a seed
+    taken from a previous solve whose induced sub-problem on S is a
+    byte-exact relabeling transfers bitwise — including the +inf of
+    disconnected sets — and seeded sweeps stay bit-identical to cold
+    ones.  Seeded entries still *feed* later layers through the same
+    gather reads, so a correct prefix propagates exactly.
     """
     pc = jnp.asarray(popcounts(n), dtype=jnp.int32)
     inf = jnp.array(np.inf, jnp.float64)
@@ -422,6 +464,9 @@ def minplus_connected_layers(card, conn, n: int, shards: int = 1,
                 best = jnp.min(combo, axis=-1)
                 val = best + card[..., ss]
                 val = jnp.where(conn[..., ss], val, inf)
+                if seed_vals is not None:
+                    val = jnp.where(seed_ok[..., ss],
+                                    seed_vals[..., ss], val)
                 part = part.at[..., ss].set(val)
             dp = jnp.where(pc == k, lax.pmin(part, shard_axis), dp)
         else:
@@ -432,6 +477,9 @@ def minplus_connected_layers(card, conn, n: int, shards: int = 1,
             best = jnp.min(combo, axis=-1)
             val = best + card[..., sets]
             val = jnp.where(conn[..., sets], val, inf)
+            if seed_vals is not None:
+                val = jnp.where(seed_ok[..., sets],
+                                seed_vals[..., sets], val)
             dp = dp.at[..., sets].set(val)
     return dp
 
@@ -569,11 +617,30 @@ def _gate_builder(cards, pc, dtype):
     return gate_of
 
 
-def _fused_search(cards, cand, hi0, n, direct_layers, tfm, G, gate_of,
-                  shards: int = 1, shard_axis: "str | None" = None):
+def _fused_search(cards, cand, lo0, hi0, n, direct_layers, tfm, G,
+                  gate_of, shards: int = 1,
+                  shard_axis: "str | None" = None,
+                  verify_seed: bool = False):
     """The whole-solve lockstep (G+1)-ary search: ONE while_loop whose
     body builds this round's G gates and runs the layered DP.  Returns
     (hi, Z, rounds) with the invariant cand[hi] feasible.
+
+    ``lo0`` is the warm-start floor (cold solves pass zeros).  With
+    ``verify_seed=True`` (the layer-cache program variant) a row whose
+    ``lo0 = -(idx + 1)`` carries a cached-optimum *hypothesis* at
+    candidate ``idx`` — NEVER trusted: one pre-loop dual probe checks
+    feasibility at ``idx`` and ``idx - 1`` in a single gated feasibility
+    pass.  A verified seed (feasible at ``idx``, infeasible below)
+    collapses the bracket so the while_loop exits with zero further
+    rounds; a stale seed merely shrinks the bracket monotonically
+    (feasible below ⇒ search [0, idx-1]; infeasible at ``idx`` ⇒ search
+    [idx+1, hi0]) and the search proceeds to the true optimum —
+    correctness never depends on the cache, it only prices rounds.  The
+    extraction pass then rebuilds every Z slot >= 2 at the optimum's
+    gate, so the result stays bit-identical to the cold search (slot 1
+    is the round-invariant singleton transform).  The invariant a
+    caller must keep: cand[hi0] is feasible and no candidate below
+    ``max(lo0, 0)`` is.
 
     Under ``shard_axis`` the direct layers inside every round shard
     their gather sweep; the bracket state stays replicated (all inputs
@@ -581,7 +648,22 @@ def _fused_search(cards, cand, hi0, n, direct_layers, tfm, G, gate_of,
     device, so the while_loop trip count agrees across the mesh)."""
     dl = min(direct_layers, n - 1)
     Z0 = _search_state(cards, n, tfm, G)
-    lo0 = jnp.zeros_like(hi0)
+
+    pre_rounds = 0
+    if verify_seed:
+        has = lo0 < 0
+        idx = jnp.where(has, -lo0 - 1, 0)
+        lo0 = jnp.maximum(lo0, 0)
+        piv = jnp.stack([jnp.maximum(idx - 1, 0), idx])       # (2, B)
+        piv = jnp.where(has[None, :], piv, hi0[None, :])
+        gamma = jnp.take_along_axis(cand, piv.T, axis=1).T
+        Zv = _search_state(cards, n, tfm, 2)
+        _, _, ok = feasibility_layers(gate_of(gamma), n, dl, tfm, True,
+                                      Z=Zv, scan_middle=True,
+                                      shards=shards,
+                                      shard_axis=shard_axis)
+        lo0, hi0 = bracket_update(lo0, hi0, piv, ok, has)
+        pre_rounds = 1                   # the verification sweep is paid
 
     def cond(state):
         lo, hi, _, _ = state
@@ -612,7 +694,7 @@ def _fused_search(cards, cand, hi0, n, direct_layers, tfm, G, gate_of,
 
     lo, hi, Z, rounds = lax.while_loop(
         cond, body, (lo0, hi0, Z0, jnp.int32(0)))
-    return hi, Z, rounds
+    return hi, Z, rounds + pre_rounds
 
 
 def _shard_wrap(fn, mesh):
@@ -634,14 +716,19 @@ def _shard_wrap(fn, mesh):
 
 def build_max_program(n: int, direct_layers: int, backend: str,
                       extract: bool, gamma_batch: int = 1,
-                      shards: int = 1, mesh=None):
+                      shards: int = 1, mesh=None, seeded: bool = False):
     """The whole-solve DPconv[max] program:
-    ``(cards, cand, hi0) -> (opt[, dp, nodes, lidx], rounds)``.
+    ``(cards, cand, lo0, hi0) -> (opt[, dp, nodes, lidx], rounds)``.
 
     Shapes bind at compile time: cards (B, 2^n) f64, cand (B, C) f64,
-    hi0 (B,) int32.  Search, gate construction, layered DP, the
-    extraction table AND the Alg. 2 split scan all run on device; the
-    only host transfer is the result tuple.
+    lo0/hi0 (B,) int32 — the initial search bracket (cold solves pass
+    lo0 = 0; with ``seeded=True`` — a separate compile-time variant, the
+    cold program's AOT signature never changes — the layer cache passes
+    ``lo0 = -(idx + 1)`` and the search VERIFIES the cached-optimum
+    hypothesis with one dual probe before collapsing the bracket, see
+    ``_fused_search``).  Search, gate
+    construction, layered DP, the extraction table AND the Alg. 2 split
+    scan all run on device; the only host transfer is the result tuple.
 
     ``shards > 1`` runs the program under ``shard_map`` over ``mesh``
     (a ``launch.mesh.make_solve_mesh`` 1-D mesh of ``shards`` devices):
@@ -655,12 +742,13 @@ def build_max_program(n: int, direct_layers: int, backend: str,
     G = gamma_batch
     axis = _solve_axis(shards, mesh)
 
-    def fn(cards, cand, hi0):
+    def fn(cards, cand, lo0, hi0):
         pc = jnp.asarray(pc_np, dtype=jnp.int32)
         gate_of = _gate_builder(cards, pc, tfm.dtype)
-        hi, Z, rounds = _fused_search(cards, cand, hi0, n, direct_layers,
-                                      tfm, G, gate_of,
-                                      shards=shards, shard_axis=axis)
+        hi, Z, rounds = _fused_search(cards, cand, lo0, hi0, n,
+                                      direct_layers, tfm, G, gate_of,
+                                      shards=shards, shard_axis=axis,
+                                      verify_seed=seeded)
         opt = jnp.take_along_axis(cand, hi[:, None], axis=1)[:, 0]
         if not extract:
             return opt, rounds
@@ -680,9 +768,14 @@ def build_max_program(n: int, direct_layers: int, backend: str,
 
 
 def build_out_program(n: int, extract: bool, shards: int = 1,
-                      mesh=None):
+                      mesh=None, seeded: bool = False):
     """The whole-solve connected C_out program (DPccp semantics):
-    ``(cards, conn) -> (cout[, dp, nodes, lidx])``.
+    ``(cards, conn) -> (cout[, dp, nodes, lidx])`` — or, with
+    ``seeded=True``, ``(cards, conn, seed_vals, seed_ok) -> ...``: the
+    incremental-planning variant whose (min,+) sweep replays cached
+    sub-table values where ``seed_ok`` (see
+    ``minplus_connected_layers``).  A separate compile-time variant
+    keeps the cold program's AOT signature untouched.
 
     Shapes bind at compile time: cards (B, 2^n) f64, conn (B, 2^n) bool
     — the per-query connected-subset masks, precomputed on the host from
@@ -700,24 +793,31 @@ def build_out_program(n: int, extract: bool, shards: int = 1,
     """
     axis = _solve_axis(shards, mesh)
 
-    def fn(cards, conn):
+    def body(cards, conn, seed_vals=None, seed_ok=None):
         dpv = minplus_connected_layers(cards, conn, n, shards=shards,
-                                       shard_axis=axis)
+                                       shard_axis=axis,
+                                       seed_vals=seed_vals,
+                                       seed_ok=seed_ok)
         cout = dpv[..., -1]
         if not extract:
             return (cout,)
         nodes, lidx = extract_scan(dpv, n, card=cards)
         return cout, dpv, nodes, lidx
 
+    if seeded:                          # fixed arity for shard_map specs
+        fn = lambda cards, conn, sv, so: body(cards, conn, sv, so)
+    else:
+        fn = lambda cards, conn: body(cards, conn)
     return _shard_wrap(fn, mesh) if axis is not None else fn
 
 
 def build_cap_program(n: int, direct_layers: int, backend: str,
                       extract: bool, gamma_batch: int = 1,
                       connected: bool = False, shards: int = 1,
-                      mesh=None):
+                      mesh=None, seeded: bool = False):
     """The whole-solve C_cap program (paper Sec. 8, both passes fused):
-    ``(cards, cand, hi0, slack) -> (gamma, cout[, nodes, lidx], rounds)``.
+    ``(cards, cand, lo0, hi0, slack) ->
+    (gamma, cout[, nodes, lidx], rounds)``.
 
     Pass 1 is the same lockstep feasibility search as DPconv[max]
     (gamma* = optimal C_max); pass 2 runs the (min,+) value program under
@@ -742,12 +842,13 @@ def build_cap_program(n: int, direct_layers: int, backend: str,
     G = gamma_batch
     axis = _solve_axis(shards, mesh)
 
-    def fn(cards, cand, hi0, slack, conn=None):
+    def fn(cards, cand, lo0, hi0, slack, conn=None):
         pc = jnp.asarray(pc_np, dtype=jnp.int32)
         gate_of = _gate_builder(cards, pc, tfm.dtype)
-        hi, _, rounds = _fused_search(cards, cand, hi0, n, direct_layers,
-                                      tfm, G, gate_of,
-                                      shards=shards, shard_axis=axis)
+        hi, _, rounds = _fused_search(cards, cand, lo0, hi0, n,
+                                      direct_layers, tfm, G, gate_of,
+                                      shards=shards, shard_axis=axis,
+                                      verify_seed=seeded)
         gamma = jnp.take_along_axis(cand, hi[:, None], axis=1)[:, 0]
         gamma = gamma * slack
         gate_ok = (cards <= gamma[:, None]) | (pc < 2)
@@ -766,9 +867,9 @@ def build_cap_program(n: int, direct_layers: int, backend: str,
     if axis is None:
         return fn
     if connected:                       # fixed arity for shard_map specs
-        return _shard_wrap(lambda c, d, h, s, cn: fn(c, d, h, s, cn),
-                           mesh)
-    return _shard_wrap(lambda c, d, h, s: fn(c, d, h, s), mesh)
+        return _shard_wrap(
+            lambda c, d, l, h, s, cn: fn(c, d, l, h, s, cn), mesh)
+    return _shard_wrap(lambda c, d, l, h, s: fn(c, d, l, h, s), mesh)
 
 
 def program_card(n: int, cost: str, backend: str = "xla",
@@ -784,13 +885,19 @@ def program_card(n: int, cost: str, backend: str = "xla",
     """
     semirings = {
         "max": ["feasibility(count)"],
+        "max_seeded": ["feasibility(count), verified warm start"],
         "cap": ["feasibility(count)", "(min,+)"],
+        "cap_seeded": ["feasibility(count), verified warm start",
+                       "(min,+)"],
         "cap_conn": ["feasibility(count)", "(min,+) connected"],
+        "cap_conn_seeded": ["feasibility(count), verified warm start",
+                            "(min,+) connected"],
         "out": ["(min,+) connected"],
+        "out_seeded": ["(min,+) connected, seeded"],
     }
     if cost not in semirings:
         raise ValueError(f"unknown fused cost {cost!r}")
-    searched = cost != "out"
+    searched = cost not in ("out", "out_seeded")
     card = {
         "cost": cost,
         "backend": backend if searched else "xla",

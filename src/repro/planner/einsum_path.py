@@ -124,6 +124,96 @@ def builtin_trace() -> "list[Contraction]":
     ]
 
 
+def model_planner_trace(cfg=None, batch: int = 4, seq: int = 64,
+                        layers: "int | None" = None,
+                        logger: "ContractionLog | None" = None
+                        ) -> "list[Contraction]":
+    """Contractions the model stack's train/serve steps actually plan.
+
+    Where ``builtin_trace`` is a canned sampler of *shapes* of model
+    traffic, this derives the einsum structures straight from the
+    ``repro.train.steps`` step builders for a concrete ``ModelConfig``:
+    per layer the fused-attention core (Q/K/V projections + QK^T + AV),
+    the same chain extended by the output projection, and the gated MLP;
+    then the chunked cross-entropy projection (``chunked_ce_loss``), the
+    single-token decode attention (``make_decode_step``), and the
+    family extras (MoE routing, SSM state scan, cross-attention) when
+    the config enables them.  Every contraction is logged through
+    ``logger`` exactly as ``plan_contraction(..., logger=)`` would, so
+    the result replays through ``make_einsum_workload`` like a captured
+    production log.
+
+    The trace is deliberately *repetitive with shared structure* — every
+    layer re-issues identical contractions, and the attention core is a
+    sub-network of the attention+projection chain — which is the traffic
+    the layer-granular fragment cache (``service.layercache``) exists
+    for: repeats warm-start the C_max search, one-tensor extensions seed
+    their solved sub-table.
+    """
+    if cfg is None:
+        from repro.models.common import ModelConfig
+        cfg = ModelConfig(name="planner-small", family="dense",
+                          n_layers=3, d_model=256, n_heads=4,
+                          n_kv_heads=4, d_ff=512, vocab_size=4096)
+    d = int(cfg.d_model)
+    h = int(cfg.head_dim or (cfg.d_model // max(cfg.n_heads, 1)) or 64)
+    ff = int(cfg.d_ff)
+    out: list = []
+
+    def emit(operands, output, sizes):
+        c = Contraction(tuple(operands), output, dict(sizes))
+        if logger is not None:
+            logger.log(c)
+        out.append(c)
+
+    attn_sizes = {"b": batch, "s": seq, "t": seq, "d": d, "e": d,
+                  "f": d, "h": h, "v": h, "o": d}
+    n_layers = int(cfg.n_layers if layers is None else layers)
+    for i in range(n_layers):
+        # hybrids interleave attention per layer_is_attn; every other
+        # attention-bearing family applies it at each layer
+        attn = bool(cfg.n_heads) and (
+            cfg.layer_is_attn(i) if cfg.family == "hybrid"
+            else cfg.family != "ssm")
+        if attn:
+            # fused attention core: x·Wq, x·Wk, x·Wv, QK^T, AV
+            emit(("bsd", "dh", "bte", "eh", "btf", "fv"), "bsv",
+                 attn_sizes)
+            # the same chain + output projection: shares the whole
+            # attention-core sub-network (a leave-one-out fragment)
+            emit(("bsd", "dh", "bte", "eh", "btf", "fv", "vo"), "bso",
+                 attn_sizes)
+            # gated MLP: up/gate/down around the activation
+            emit(("bsd", "df", "dg", "fh", "gh", "he"), "bse",
+                 {"b": batch, "s": seq, "d": d, "f": ff, "g": ff,
+                  "h": ff, "e": d})
+        if cfg.n_experts:
+            # MoE routing: token-expert affinity folded through experts
+            emit(("bsd", "de", "ef", "bsf", "fg"), "bsg",
+                 {"b": batch, "s": seq, "d": d, "e": cfg.n_experts,
+                  "f": d, "g": d})
+        if cfg.ssm_state and not attn:
+            # SSM state scan step: in-proj, state mix, gate, out-proj
+            emit(("bld", "dn", "nm", "blm", "md", "de"), "ble",
+                 {"b": batch, "l": seq, "d": d, "n": cfg.ssm_state,
+                  "m": cfg.ssm_state, "e": d})
+    # chunked cross-entropy (train/steps.chunked_ce_loss): the hidden
+    # chunk against the unembedding, with the z-loss reduction folded
+    emit(("cd", "dv", "vz"), "cz",
+         {"c": 1024, "d": d, "v": int(cfg.vocab_size), "z": 1})
+    # decode-step attention (make_decode_step): one query token against
+    # a seq-long KV cache, through the output projection
+    emit(("bd", "dh", "bte", "eh", "btf", "fv", "vo"), "bo",
+         {"b": batch, "t": seq, "d": d, "e": d, "f": d, "h": h,
+          "v": h, "o": d})
+    if cfg.n_enc_layers:
+        # encoder-decoder cross-attention: KV from the encoder frames
+        emit(("bsd", "dh", "bue", "eh", "buf", "fv", "vw"), "bsw",
+             {"b": batch, "s": seq, "u": int(cfg.n_frames), "d": d,
+              "e": d, "f": d, "h": h, "v": h, "w": d})
+    return out
+
+
 def _intermediate_indices(c: Contraction, mask: int) -> set:
     """Index set of the tensor produced by fully contracting the operand
     subset ``mask``: indices appearing both inside and (outside or in the

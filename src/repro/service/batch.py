@@ -125,13 +125,19 @@ def pallas_dp_fn(n: int, direct_layers: int = 4):
 
 
 def _unpack(item):
-    """items are (q, card[, cost[, tag]]) — cost defaults to "max",
-    ``tag`` is an opaque attribution label (the server passes the
-    topology class) threaded back through ``last_timings``."""
+    """items are (q, card[, cost[, tag[, seed]]]) — cost defaults to
+    "max", ``tag`` is an opaque attribution label (the server passes the
+    topology class) threaded back through ``last_timings``, and ``seed``
+    is the layer cache's warm-start payload for this query (None cold;
+    ``{"opt": float}`` collapses the max/cap search bracket,
+    ``{"vals": (2^n,) f64, "ok": (2^n,) bool}`` replays cached
+    sub-table values inside the out sweep).  Seeds are perf hints: the
+    solvers produce bit-identical results with or without them."""
     q, card = item[0], item[1]
     cost = item[2] if len(item) > 2 else "max"
     tag = item[3] if len(item) > 3 else ""
-    return q, card, cost, tag
+    seed = item[4] if len(item) > 4 else None
+    return q, card, cost, tag, seed
 
 
 @dataclasses.dataclass
@@ -213,12 +219,34 @@ class BatchedSolver:
         import jax
         return min(p.solve_shards, len(jax.devices()))
 
-    def _solve_chunk(self, qs, cards, n, cost, extract_tree):
-        """One same-(n, cost) chunk through the routed engine tier."""
+    def _solve_chunk(self, qs, cards, n, cost, extract_tree,
+                     seeds=None):
+        """One same-(n, cost) chunk through the routed engine tier.
+
+        ``seeds`` — per-query warm-start payloads (see ``_unpack``),
+        threaded into the fused engine only: the host tiers have no
+        seed slot and results must not depend on them anyway."""
         engine = self.policy.engine
         G = self.policy.gamma_batch
         backend = "pallas" if self._use_pallas(n) else "xla"
         shards = self._shards(n)
+        seeds = seeds or [None] * len(qs)
+        seed_kw: dict = {}
+        if engine == "fused" and any(s is not None for s in seeds):
+            if cost == "out":
+                if any(s and s.get("ok") is not None for s in seeds):
+                    size = 1 << n
+                    sv = np.zeros((len(qs), size), np.float64)
+                    so = np.zeros((len(qs), size), bool)
+                    for b, s in enumerate(seeds):
+                        if s and s.get("ok") is not None:
+                            sv[b] = s["vals"]
+                            so[b] = s["ok"]
+                    seed_kw = {"seed_vals": sv, "seed_ok": so}
+            else:
+                opts = [s.get("opt") if s else None for s in seeds]
+                if any(o is not None for o in opts):
+                    seed_kw = {"seed_opt": opts}
         # the batch lane carries four costs; "out" chunks run DPccp
         # semantics (connected csg/cmp pairs, no cross products), and
         # "cap_conn" is the cap lane with the no-cross-products pass 2
@@ -238,6 +266,12 @@ class BatchedSolver:
                 kw["gamma_batch"] = G   # out's (min,+) sweep never probes
                 if cost == "max":   # cap's (min,+) pass is f64/xla-only
                     kw["backend"] = backend
+            if seed_kw:             # single-query slice of the batch seed
+                if "seed_opt" in seed_kw:
+                    kw["seed_opt"] = seed_kw["seed_opt"][0]
+                else:
+                    kw["seed_vals"] = seed_kw["seed_vals"][0]
+                    kw["seed_ok"] = seed_kw["seed_ok"][0]
             res = optimize(qs[0], cards[0], cost=solve_cost, method=method,
                            extract_tree=extract_tree, **kw, **conn_kw)
             res.meta["batched"] = False
@@ -252,7 +286,8 @@ class BatchedSolver:
             results = optimize_batch(qs, cards, cost="out",
                                      method="dpccp",
                                      extract_tree=extract_tree,
-                                     engine=engine, shards=shards)
+                                     engine=engine, shards=shards,
+                                     **seed_kw)
             if not results[0].meta.get("batched"):
                 for res in results:
                     res.meta["backend"] = "xla"
@@ -264,7 +299,7 @@ class BatchedSolver:
                 results = optimize_batch(qs, cards, cost="cap",
                                          extract_tree=extract_tree,
                                          gamma_batch=G, shards=shards,
-                                         **conn_kw)
+                                         **conn_kw, **seed_kw)
             else:
                 # the host cap pipeline has no lockstep form: these are
                 # B independent solves sharing only the wall-clock
@@ -283,7 +318,8 @@ class BatchedSolver:
             results = optimize_batch(qs, cards, cost="max",
                                      extract_tree=extract_tree,
                                      engine="fused", backend=backend,
-                                     gamma_batch=G, shards=shards)
+                                     gamma_batch=G, shards=shards,
+                                     **seed_kw)
         else:
             results = optimize_batch(qs, cards, cost="max",
                                      extract_tree=extract_tree,
@@ -320,9 +356,10 @@ class BatchedSolver:
         return handle.results
 
     def solve(self, items: list, extract_tree: bool = True) -> list:
-        """``items``: list of (q, card[, cost[, tag]]) tuples; cost is
-        "max", "cap", "cap_conn" or "out" (the lattice batch-lane
-        costs).  Returns PlanResults aligned with the input order."""
+        """``items``: list of (q, card[, cost[, tag[, seed]]]) tuples;
+        cost is "max", "cap", "cap_conn" or "out" (the lattice
+        batch-lane costs), ``seed`` the optional layer-cache warm-start
+        payload.  Returns PlanResults aligned with the input order."""
         # dispatch_lane stamps this solver's lane onto every
         # DispatchRecord the chunk solves emit — the N-lane runtime owns
         # one BatchedSolver per lane, so engine profiling splits cleanly
@@ -335,8 +372,9 @@ class BatchedSolver:
 
         groups: dict = {}
         for idx, item in enumerate(items):
-            q, card, cost, tag = _unpack(item)
-            groups.setdefault((q.n, cost), []).append((idx, q, card, tag))
+            q, card, cost, tag, seed = _unpack(item)
+            groups.setdefault((q.n, cost), []).append(
+                (idx, q, card, tag, seed))
         out: list = [None] * len(items)
         self.last_timings = []
         for (n, cost), group in sorted(groups.items()):
@@ -347,12 +385,13 @@ class BatchedSolver:
                 idxs = [g[0] for g in part]
                 qs = [g[1] for g in part]
                 cards = [np.asarray(g[2], np.float64) for g in part]
+                seeds = [g[4] for g in part]
                 tags: dict = {}
                 for g in part:
                     tags[g[3]] = tags.get(g[3], 0) + 1
                 t0 = time.perf_counter()   # timing: measured-duration (chunk solve)
                 results = self._solve_chunk(qs, cards, n, cost,
-                                            extract_tree)
+                                            extract_tree, seeds=seeds)
                 for idx, res in zip(idxs, results):
                     out[idx] = res
                 dt = time.perf_counter() - t0  # timing: measured-duration

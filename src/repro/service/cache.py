@@ -26,6 +26,7 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     relabel_hits: int = 0       # hits whose request labeling != canonical
+    degraded_skips: int = 0     # degraded entries withheld from exact probes
 
     @property
     def lookups(self) -> int:
@@ -39,6 +40,7 @@ class CacheStats:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,
                 "relabel_hits": self.relabel_hits,
+                "degraded_skips": self.degraded_skips,
                 "hit_rate": round(self.hit_rate, 4)}
 
 
@@ -52,6 +54,12 @@ class CachedPlan:
     # entry; a later hit whose permutation differs was issued under a
     # different labeling — i.e. a reuse a naive exact-key cache would miss
     inserted_perm: tuple = ()
+    # plan provenance: "exact" (bit-identical to the exact solve) or
+    # "degraded" (certified best-effort — GOO lane, deadline- or
+    # failure-driven).  A degraded entry must never be served to a
+    # request able to wait for the exact solve (cache poisoning);
+    # ``lookup`` withholds it unless the probe opts in.
+    status: str = "exact"
 
 
 class PlanCache:
@@ -73,15 +81,26 @@ class PlanCache:
 
     def lookup(self, key: tuple,
                request_perm: "tuple | None" = None,
-               count_miss: bool = True) -> "CachedPlan | None":
+               count_miss: bool = True,
+               accept_degraded: bool = False) -> "CachedPlan | None":
         """``request_perm``: the requester's canonical permutation; a hit
         whose entry was inserted under a different permutation counts as
         a relabel hit (cross-labeling plan reuse).  ``count_miss=False``
         suppresses the miss counter for secondary probes (the server's
         degraded-route probe after a primary miss), so one request never
-        records two misses."""
+        records two misses.  ``accept_degraded=False`` (the default)
+        treats a ``status == "degraded"`` entry as a miss: an
+        exact-capable request misses through to a fresh exact solve
+        (whose insert then replaces the degraded entry) instead of being
+        served a poisoned best-effort plan; deadline-pressed probes opt
+        in with ``accept_degraded=True``."""
         entry = self._entries.get(key)
         if entry is None:
+            if count_miss:
+                self.stats.misses += 1
+            return None
+        if entry.status == "degraded" and not accept_degraded:
+            self.stats.degraded_skips += 1
             if count_miss:
                 self.stats.misses += 1
             return None
@@ -91,6 +110,12 @@ class PlanCache:
                 tuple(request_perm) != tuple(entry.inserted_perm):
             self.stats.relabel_hits += 1
         return entry
+
+    def peek(self, key: tuple) -> "CachedPlan | None":
+        """Inspect an entry without touching stats or LRU recency (the
+        server uses it to keep a degraded insert from clobbering an
+        exact entry)."""
+        return self._entries.get(key)
 
     def insert(self, key: tuple, plan: CachedPlan) -> None:
         if key in self._entries:

@@ -198,6 +198,100 @@ def canonicalize(q: QueryGraph, card: np.ndarray,
     )
 
 
+# ----------------------------------------------------- subset signatures
+@dataclasses.dataclass(frozen=True)
+class SubsetForm:
+    """Canonical form of the sub-problem a relation subset induces.
+
+    The layer-granular fragment cache (``service.layercache``) keys DP
+    sub-tables on ``key``: two subsets of two *different* queries share a
+    key exactly when their induced sub-problems — relations, edges,
+    hyperedges fully inside the subset, and the cardinality table
+    restricted to the subset's power set — are relabelings of one
+    another.  ``dp[S]`` for ``S`` inside the subset is a pure function of
+    that induced sub-problem, so a byte-exact key match means the cached
+    fragment values transfer bitwise.
+
+    ``rels`` lists the member relations in the *outer* labeling (bit
+    order); ``perm`` maps compact position ``i`` (the rank of
+    ``rels[i]``) to its canonical fragment label, exactly like
+    ``CanonicalForm.perm`` does for whole queries.
+    """
+    key: str                # SHA-256 of the induced sub-problem's bytes
+    rels: tuple             # outer relation indices, ascending
+    perm: tuple             # compact position i -> canonical fragment label
+
+    @property
+    def r(self) -> int:
+        return len(self.rels)
+
+
+def induced_subproblem(q: QueryGraph, card: np.ndarray,
+                       mask: int) -> "tuple[QueryGraph, np.ndarray, tuple]":
+    """Restrict ``(q, card)`` to the relations in ``mask``.
+
+    Returns ``(q_sub, card_sub, rels)``: the compactly-relabeled induced
+    graph (edges with both endpoints inside, hyperedges with both sides
+    inside), the ``(2^r,)`` slice of ``card`` over subsets of ``mask``
+    re-indexed by compact labels, and the member relations in bit order.
+    ``card_sub`` copies values — never recomputes them — so fragment
+    equality stays byte-exact.
+    """
+    mask = int(mask)
+    rels = tuple(i for i in range(q.n) if (mask >> i) & 1)
+    r = len(rels)
+    pos = {rel: i for i, rel in enumerate(rels)}
+    edges = tuple(sorted((pos[u], pos[v]) for u, v in q.edges
+                         if (mask >> u) & 1 and (mask >> v) & 1))
+
+    def compress(m: int) -> int:
+        out = 0
+        for rel, i in pos.items():
+            if (m >> rel) & 1:
+                out |= 1 << i
+        return out
+
+    hyper = tuple(sorted((compress(a), compress(b))
+                         for a, b in q.hyperedges
+                         if (a | b) & mask == (a | b)))
+    q_sub = QueryGraph(r, edges, hyper)
+    # expand[t] = the outer-lattice index of compact subset t
+    expand = np.zeros(1 << r, np.int64)
+    for i, rel in enumerate(rels):
+        bit = 1 << i
+        idx = np.arange(1 << r)
+        expand[(idx & bit) != 0] |= 1 << rel
+    card_sub = np.ascontiguousarray(
+        np.asarray(card, np.float64)[expand])
+    return q_sub, card_sub, rels
+
+
+def subset_expand(rels: tuple) -> np.ndarray:
+    """(2^r,) int64 map: compact subset index -> outer lattice index."""
+    r = len(rels)
+    expand = np.zeros(1 << r, np.int64)
+    idx = np.arange(1 << r)
+    for i, rel in enumerate(rels):
+        expand[(idx & (1 << i)) != 0] |= 1 << rel
+    return expand
+
+
+def subset_signature(q: QueryGraph, card: np.ndarray, mask: int,
+                     branch_cap: int = 16) -> SubsetForm:
+    """Canonical signature of the sub-problem induced by ``mask``.
+
+    The fragment key namespaces on the subset size ``r`` and hashes the
+    canonical bytes of the induced sub-problem, so it can never collide
+    with a whole-query plan-cache key (different prefix) and matches
+    across queries exactly on relabeled-identical induced sub-problems.
+    """
+    q_sub, card_sub, rels = induced_subproblem(q, card, mask)
+    perm = canonical_perm(q_sub, card_sub, branch_cap=branch_cap)
+    byt = b"frag;" + _canonical_bytes(q_sub, card_sub, perm)
+    return SubsetForm(key=hashlib.sha256(byt).hexdigest(),
+                      rels=rels, perm=perm)
+
+
 def relabel_tree(tree: "JoinTree | None", perm) -> "JoinTree | None":
     """Map a join tree's relation labels through ``perm`` (bit i -> perm[i]).
 

@@ -326,7 +326,14 @@ class BreakerBoard:
 class Quarantine:
     """TTL'd containment for poisoned canonical keys: a request whose
     solve fails even solo is quarantined so it can never join (and take
-    down) a batch again until the TTL expires."""
+    down) a batch again until the TTL expires.
+
+    Boundary contract: a key added at ``t0`` is refused on the
+    half-open interval ``[t0, t0 + ttl_s)`` — "refused *until* the TTL
+    expires" — so a probe at exactly ``t0 + ttl_s`` is ADMITTED (and
+    the entry is dropped).  ``active`` therefore tests ``now >=
+    expires_at``, not ``>``; the deterministic VirtualClock boundary
+    test pins this so an off-by-one can't creep back in."""
 
     def __init__(self, clock, ttl_s: float = 30.0):
         self.clock = clock
@@ -345,6 +352,7 @@ class Quarantine:
         if ent is None:
             return False
         if self.clock.now() >= ent[0]:
+            # now == expires_at means the TTL has expired: admit
             del self._keys[key]
             self.expired += 1
             return False

@@ -1,0 +1,288 @@
+"""Layer-granular plan-fragment cache: cross-request incremental planning.
+
+The plan cache (``repro.service.cache``) reuses *whole* plans: the key is
+the full canonical query, and anything short of an isomorphic repeat is a
+cold solve.  This tier sits next to it and reuses the DP work itself, at
+two granularities:
+
+* **Search fragments** — the C_max optimum of a full canonical query,
+  keyed by ``CanonicalForm.key`` alone (no cost/method/params).  DPconv's
+  binary search (Alg. 3) and C_cap's pass 1 run the *same* search over
+  the same candidate set, so a cached optimum warm-starts either lane:
+  the engine collapses the search bracket to the cached value's position
+  (``engine._seed_bracket``) and the fused while-loop exits in zero
+  rounds.  This is deliberately coarser-keyed than the plan cache —
+  a ``cost="cap"`` request warm-starts from a ``cost="max"`` solve the
+  plan cache must miss.
+
+* **Value fragments** — ``(2^r,)`` slices of a solved connected-C_out DP
+  table, keyed by ``canon.subset_signature``: the canonical form of the
+  sub-problem a relation subset *induces* (its edges, hyperedges, and
+  the cardinality table over its power set).  ``dp[S]`` is a pure
+  function of the induced sub-problem on ``S``, so a byte-exact key
+  match transfers bitwise — a new query that shares a sub-structure with
+  any previously solved query (the einsum replay lane's bread and
+  butter: attention stacks differing by one tensor) seeds its lattice
+  program with the solved prefix instead of starting cold
+  (``lattice.minplus_connected_layers(seed_vals=, seed_ok=)``).
+
+Fragments are stored in *fragment-canonical* label space and mapped
+through each query's subset permutation on insert and probe, so
+relabeled sub-structures hit.  Seeds are always a pure performance hint:
+every consumer produces bit-identical tables, optima and trees with or
+without them (the seeded values equal what the lattice would compute —
+asserted by the parity property tests and the serve_bench reuse row).
+
+Both stores are plain LRU ``OrderedDict``s like the plan cache; stats
+register on the server's ``MetricsRegistry`` as the ``layercache``
+provider.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+from repro.service.canon import subset_expand, subset_signature
+
+
+@dataclasses.dataclass
+class LayerCacheStats:
+    search_hits: int = 0
+    search_misses: int = 0
+    search_inserts: int = 0
+    value_hits: int = 0         # fragment probes that found a sub-table
+    value_misses: int = 0       # fragment probes that found nothing
+    value_inserts: int = 0
+    seeded_solves: int = 0      # solves dispatched with >= 1 seed attached
+    seeded_sets: int = 0        # lattice sets covered by value seeds
+    evictions: int = 0
+
+    @property
+    def search_hit_rate(self) -> float:
+        t = self.search_hits + self.search_misses
+        return self.search_hits / t if t else 0.0
+
+    @property
+    def value_hit_rate(self) -> float:
+        t = self.value_hits + self.value_misses
+        return self.value_hits / t if t else 0.0
+
+    def as_dict(self) -> dict:
+        return {"search_hits": self.search_hits,
+                "search_misses": self.search_misses,
+                "search_inserts": self.search_inserts,
+                "search_hit_rate": round(self.search_hit_rate, 4),
+                "value_hits": self.value_hits,
+                "value_misses": self.value_misses,
+                "value_inserts": self.value_inserts,
+                "value_hit_rate": round(self.value_hit_rate, 4),
+                "seeded_solves": self.seeded_solves,
+                "seeded_sets": self.seeded_sets,
+                "evictions": self.evictions}
+
+
+def _perm_masks(perm) -> np.ndarray:
+    """(2^r,) int64 map: compact subset mask -> its image under ``perm``
+    (bit ``i`` -> bit ``perm[i]``), vectorized over the whole lattice."""
+    r = len(perm)
+    idx = np.arange(1 << r)
+    out = np.zeros(1 << r, np.int64)
+    for i, p in enumerate(perm):
+        out[(idx & (1 << i)) != 0] |= 1 << int(p)
+    return out
+
+
+def _popcounts(n: int) -> np.ndarray:
+    idx = np.arange(1 << n)
+    pc = np.zeros(1 << n, np.int64)
+    for i in range(n):
+        pc += (idx >> i) & 1
+    return pc
+
+
+class LayerCache:
+    """The layer-granular fragment tier next to ``PlanCache``.
+
+    ``seed_for`` resolves a request's seed payload at admission (the
+    5th batch-item slot ``service.batch.BatchedSolver`` understands);
+    ``observe`` harvests fragments from a completed *exact* solve.
+    """
+
+    def __init__(self, search_capacity: int = 8192,
+                 value_capacity: int = 512, max_n: int = 16):
+        if search_capacity < 1 or value_capacity < 1:
+            raise ValueError("capacities must be >= 1")
+        self.search_capacity = search_capacity
+        self.value_capacity = value_capacity
+        self.max_n = max_n          # value fragments past this n are not
+        #                             worth the 2^n probe/scatter work
+        self.stats = LayerCacheStats()
+        self._search: "collections.OrderedDict[str, float]" = \
+            collections.OrderedDict()
+        self._values: "collections.OrderedDict[str, np.ndarray]" = \
+            collections.OrderedDict()
+        # probe memo: a value probe pays n+1 subset canonicalizations,
+        # and replay streams repeat canonical forms heavily — memoize
+        # (form.key, lane) -> (generation, payload, stat deltas) and
+        # replay while the stores are unchanged.  ``_gen`` bumps on any
+        # insert of a NEW key and on every eviction, so a memoized miss
+        # can never mask a fragment that arrived after it.
+        self._gen = 0
+        self._probe_memo: dict = {}
+        # observe memo: harvesting an out solve pays the same n+1
+        # subset canonicalizations as a value probe, and fragments are
+        # a pure function of the canonical form — once a form has been
+        # harvested and the stores haven't changed since (same ``_gen``:
+        # no inserts, no evictions), re-harvesting can only rediscover
+        # keys that are all still present, so it is skipped outright.
+        self._observed: dict = {}
+
+    def __len__(self) -> int:
+        return len(self._search) + len(self._values)
+
+    # ------------------------------------------------------------- probes
+    def seed_for(self, form, cost: str) -> "dict | None":
+        """The seed payload for a plan-cache miss on ``form``, or None.
+
+        ``cost`` in ``("max", "cap")`` -> ``{"opt": float}``: the cached
+        C_max optimum (cap pass 1 IS the max search when the router
+        never sets slack, so the two lanes share one fragment).
+        ``cost == "out"`` -> ``{"vals": (2^n,) f64, "ok": (2^n,) bool}``
+        assembled from the value fragments of the full set and every
+        leave-one-out subset.
+        """
+        lane = "search" if cost in ("max", "cap") else cost
+        memo = self._probe_memo.get((form.key, lane))
+        if memo is not None and memo[0] == self._gen:
+            payload, deltas = memo[1], memo[2]
+            for field, d in deltas:
+                setattr(self.stats, field, getattr(self.stats, field) + d)
+            return payload
+        before = dataclasses.asdict(self.stats)
+        payload = self._probe(form, cost)
+        deltas = tuple((f, v - before[f])
+                       for f, v in dataclasses.asdict(self.stats).items()
+                       if v != before[f])
+        if len(self._probe_memo) > 8192:
+            self._probe_memo.clear()
+        self._probe_memo[(form.key, lane)] = (self._gen, payload, deltas)
+        return payload
+
+    def _probe(self, form, cost: str) -> "dict | None":
+        if cost in ("max", "cap"):
+            v = self._search.get(form.key)
+            if v is None:
+                self.stats.search_misses += 1
+                return None
+            self._search.move_to_end(form.key)
+            self.stats.search_hits += 1
+            self.stats.seeded_solves += 1
+            return {"opt": float(v)}
+        if cost != "out":
+            return None
+        n = form.q.n
+        if n < 3 or n > self.max_n:
+            return None
+        full = (1 << n) - 1
+        vals = np.zeros(1 << n, np.float64)
+        ok = np.zeros(1 << n, bool)
+        hits = 0
+        for mask in [full] + [full ^ (1 << i) for i in range(n)]:
+            if ok[mask]:
+                # a larger hit fragment already covered this mask's
+                # whole power set
+                continue
+            sf = subset_signature(form.q, form.card, mask)
+            frag = self._values.get(sf.key)
+            if frag is None:
+                self.stats.value_misses += 1
+                continue
+            self._values.move_to_end(sf.key)
+            self.stats.value_hits += 1
+            hits += 1
+            expand = subset_expand(sf.rels)
+            sigma = _perm_masks(sf.perm)
+            vals[expand] = frag[sigma]
+            ok[expand] = True
+        if not hits:
+            return None
+        # the lattice recurrence starts at layer 2; empty/singleton
+        # slots carry base values the program owns
+        ok[_popcounts(n) < 2] = False
+        self.stats.seeded_solves += 1
+        self.stats.seeded_sets += int(ok.sum())
+        return {"vals": vals, "ok": ok}
+
+    # ------------------------------------------------------------ inserts
+    def observe(self, form, cost: str, cost_v: float, meta: dict,
+                params: tuple = (), dp=None) -> None:
+        """Harvest fragments from one completed exact solve.
+
+        * ``max``: ``cost_v`` is the C_max optimum — a search fragment.
+        * ``cap``: ``meta["gamma"]`` is the pass-1 C_max optimum, a
+          search fragment too — but only at ``gamma_slack == 1`` (a
+          slacked gamma is not the optimum).
+        * ``out``: ``dp`` is the solved ``(2^n,)`` connected-C_out value
+          table in the query's canonical label space; the full set and
+          every leave-one-out subset become value fragments.
+        """
+        if cost == "max" and np.isfinite(cost_v):
+            self._insert_search(form.key, float(cost_v))
+            return
+        if cost == "cap":
+            gamma = meta.get("gamma")
+            slack = dict(params).get("gamma_slack", 1.0)
+            if gamma is not None and float(slack) == 1.0 \
+                    and np.isfinite(gamma):
+                self._insert_search(form.key, float(gamma))
+            return
+        if cost != "out" or dp is None:
+            return
+        n = form.q.n
+        dp = np.asarray(dp, np.float64).reshape(-1)
+        if n < 3 or n > self.max_n or dp.shape[0] != (1 << n):
+            return
+        if self._observed.get(form.key) == self._gen:
+            return                      # already harvested, stores stable
+        full = (1 << n) - 1
+        for mask in [full] + [full ^ (1 << i) for i in range(n)]:
+            sf = subset_signature(form.q, form.card, mask)
+            if sf.key in self._values:
+                self._values.move_to_end(sf.key)
+                continue
+            expand = subset_expand(sf.rels)
+            sigma = _perm_masks(sf.perm)
+            frag = np.empty(1 << sf.r, np.float64)
+            # fragment-canonical labels: frag[sigma[t]] = dp[expand[t]]
+            frag[sigma] = dp[expand]
+            self._values[sf.key] = frag
+            self.stats.value_inserts += 1
+            self._gen += 1
+            while len(self._values) > self.value_capacity:
+                self._values.popitem(last=False)
+                self.stats.evictions += 1
+                self._gen += 1
+        if len(self._observed) > 8192:
+            self._observed.clear()
+        self._observed[form.key] = self._gen
+
+    def _insert_search(self, key: str, opt: float) -> None:
+        if key in self._search:
+            self._search.move_to_end(key)
+        else:
+            self.stats.search_inserts += 1
+            self._gen += 1
+        self._search[key] = opt
+        while len(self._search) > self.search_capacity:
+            self._search.popitem(last=False)
+            self.stats.evictions += 1
+            self._gen += 1
+
+    def clear(self) -> None:
+        self._search.clear()
+        self._values.clear()
+        self._probe_memo.clear()
+        self._observed.clear()
+        self._gen += 1

@@ -357,7 +357,7 @@ class _Work:
                  "timings", "future", "duration", "error", "est",
                  "profile", "breaker_key", "probe", "engine", "fault",
                  "hung_at", "abandoned", "finalized", "lane", "stolen",
-                 "hedge_partner")
+                 "hedge_partner", "layer_seeds")
 
     def __init__(self, kind, entries, started):
         self.kind = kind                 # "batch" | "single"
@@ -383,6 +383,7 @@ class _Work:
         self.lane: "int | None" = None   # executor lane ("None": unpicked)
         self.stolen = False              # placed off its affinity home
         self.hedge_partner: "_Work | None" = None  # racing hedge work
+        self.layer_seeds = 0             # items warm-started by layercache
 
 
 # ------------------------------------------------------------------ runtime
@@ -897,10 +898,17 @@ class ServingRuntime:
         self.stats.batches += 1
         self.stats.batched_items += len(entries)
         work = _Work("batch", entries, self.clock.now())
+        # the 5th item slot is the layer-cache seed payload: solved
+        # fragments of isomorphic sub-problems warm-start the lattice
+        # program (bit-identical results, fewer search rounds)
         items = [(e.tickets[0].form.q, e.tickets[0].form.card,
                   cost,
-                  router_mod.topo_class(e.tickets[0].form.signature))
+                  router_mod.topo_class(e.tickets[0].form.signature),
+                  self.server._layer_seed(e.tickets[0].form,
+                                          e.tickets[0].request.cost,
+                                          e.tickets[0].route))
                  for e in entries]
+        work.layer_seeds = sum(1 for it in items if it[4] is not None)
         self._start(work, items)
 
     def _start_single(self, ticket: Ticket, engine: "str | None" = None,
@@ -1054,10 +1062,16 @@ class ServingRuntime:
                     work.timings = handle.timings
                 else:
                     ticket = work.entries[0].tickets[0]
+                    seed = None
+                    if work.engine is None:     # host rungs drop seeds
+                        seed = srv._layer_seed(ticket.form,
+                                               ticket.request.cost,
+                                               ticket.route)
+                        work.layer_seeds = int(seed is not None)
                     work.results = [srv._solve_single(
                         ticket.form.q, ticket.form.card,
                         ticket.request.cost, ticket.route,
-                        engine=work.engine)]
+                        engine=work.engine, seed=seed)]
             self._inject_after(work)
         except BaseException as e:       # noqa: BLE001 — contained: the
             work.error = e               # failure ladder reroutes per entry
@@ -1123,6 +1137,8 @@ class ServingRuntime:
             attrs["stolen"] = True
         if work.hedge_partner is not None:
             attrs["hedged"] = True
+        if work.layer_seeds:
+            attrs["layer_seeds"] = work.layer_seeds
         prof = work.profile
         if prof:
             attrs.update(

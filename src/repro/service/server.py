@@ -41,6 +41,7 @@ from repro.obs.metrics import MetricsRegistry
 from repro.service.batch import BatchedSolver, BatchPolicy
 from repro.service.cache import CachedPlan, PlanCache
 from repro.service.canon import CanonicalForm, canonicalize, relabel_tree
+from repro.service.layercache import LayerCache
 from repro.service import faults
 from repro.service import router as router_mod
 from repro.service.router import Route, Router
@@ -156,10 +157,16 @@ class PlanServer:
                  batch_policy: "BatchPolicy | None" = None,
                  enable_cache: bool = True,
                  enable_batch: bool = True,
+                 enable_layer_cache: bool = True,
                  registry: "MetricsRegistry | None" = None,
                  trace: bool = True,
                  lanes: int = 1):
         self.cache = PlanCache(cache_capacity)
+        # the layer-granular fragment tier (cross-request incremental
+        # planning) — independent of the whole-plan cache, so a bench
+        # can measure pure fragment reuse with the plan cache off
+        self.layers = LayerCache()
+        self.enable_layer_cache = enable_layer_cache
         self.router = router or Router()
         self.solver = BatchedSolver(batch_policy
                                     or BatchPolicy(max_batch=max_batch))
@@ -194,6 +201,8 @@ class PlanServer:
             else MetricsRegistry()
         self.trace = trace
         self.registry.register_provider("cache", self.cache.stats.as_dict)
+        self.registry.register_provider("layercache",
+                                        self.layers.stats.as_dict)
         self.registry.register_provider(
             "router", lambda: {"decisions": dict(self.router.decisions),
                                "engine_hint":
@@ -255,9 +264,17 @@ class PlanServer:
                 backend = "pallas" if (cost == "max"
                                        and self.solver._use_pallas(n)) \
                     else "xla"
+                warm_costs = (cost,)
+                if self.enable_layer_cache and cost in ("max", "cap"):
+                    # the layer cache routes seed-carrying solves onto
+                    # the ``<cost>_seeded`` program variants (their own
+                    # AOT slots) — warm them too or the first seeded
+                    # solve per bucket pays a mid-traffic compile, the
+                    # exact spike prewarm exists to kill
+                    warm_costs = (cost, cost + "_seeded")
                 r = engine_mod.prewarm([n], max_batch=max_b,
                                        backend=backend,
-                                       direct_layers=4, costs=(cost,),
+                                       direct_layers=4, costs=warm_costs,
                                        gamma_batch=pol.gamma_batch,
                                        shards=self.solver._shards(n))
                 total["compiled"] += r["compiled"]
@@ -414,21 +431,42 @@ class PlanServer:
 
     # ---------------------------------------------------------- internals
     def _lookup(self, req: PlanRequest, form: CanonicalForm,
-                route: Route,
-                count_miss: bool = True) -> "PlanResponse | None":
+                route: Route, count_miss: bool = True,
+                accept_degraded: bool = False,
+                report_route: "Route | None" = None
+                ) -> "PlanResponse | None":
+        """``accept_degraded``: whether a ``status == "degraded"`` entry
+        may answer this probe.  The primary (exact-capable) probe leaves
+        it False — a degraded plan must miss through to a fresh exact
+        solve (cache-poisoning guard); the deadline-pressed re-probe and
+        any GOO-routed request (not exact-capable by definition) accept.
+
+        ``report_route``: the route the response should CLAIM when it
+        replays a *degraded* entry.  Degraded entries live under the
+        primary route's key (``_complete``), so the deadline-pressed
+        re-probe keys by ``route`` = primary but a degraded plan it
+        replays was produced by the degraded lane — the response must
+        carry that lane, not the key's.  An exact entry under the same
+        key (the pressed repeat of an already-exactly-solved query)
+        keeps the key's route: the plan really is the exact one.
+        """
         key = PlanCache.make_key(form.key, req.cost, route.method,
                                  route.params)
-        entry = self.cache.lookup(key, request_perm=form.perm,
-                                  count_miss=count_miss)
+        entry = self.cache.lookup(
+            key, request_perm=form.perm, count_miss=count_miss,
+            accept_degraded=accept_degraded or route.method == "goo")
         if entry is None:
             return None
-        self.router.record(route)
+        served = route if (report_route is None
+                           or entry.status != "degraded") else report_route
+        self.router.record(served)
         resp = PlanResponse(
             req_id=req.req_id, cost=entry.cost,
             tree=relabel_tree(entry.tree, form.inverse_perm),
             meta={**entry.meta, "cached": True},
-            route=route, cache_hit=True,
-            status=("degraded" if entry.meta.get("best_effort")
+            route=served, cache_hit=True,
+            status=("degraded" if (entry.status == "degraded"
+                                   or entry.meta.get("best_effort"))
                     else "exact"))
         if req.explain:
             resp.explain = self._explain_base(req, form, route,
@@ -507,14 +545,43 @@ class PlanServer:
                         ) -> "tuple[Route, PlanResponse | None]":
         """Second rung: re-route under the budget, and when the method
         changed probe the cache once more WITHOUT counting a second
-        miss (one request, one miss)."""
+        miss (one request, one miss).  Degraded plans insert under the
+        PRIMARY route's key (see ``_complete``), so the deadline-pressed
+        re-probe targets that key and opts into degraded entries — a
+        cached best-effort plan lands inside any deadline for free."""
         route = self.router.route(form.q, req.cost, budget,
                                   signature=form.signature,
                                   connected=req.connected)
         resp = None
         if self.enable_cache and route.method != primary.method:
-            resp = self._lookup(req, form, route, count_miss=False)
+            resp = self._lookup(req, form, primary, count_miss=False,
+                                accept_degraded=True,
+                                report_route=route)
         return route, resp
+
+    def _layer_seed(self, form: CanonicalForm, cost: str,
+                    route: "Route | None") -> "dict | None":
+        """Resolve the layer-cache seed payload for one plan-cache miss
+        (the 5th batch-item slot / the single-lane ``seed=`` kwarg).
+        Seeds are pure warm-start hints — results are bit-identical with
+        or without them — so any route that can't consume one simply
+        gets None."""
+        if not self.enable_layer_cache:
+            return None
+        if route is None or route.method == "goo":
+            return None
+        if cost in ("max", "cap"):
+            if route.method != "dpconv":
+                return None
+        elif cost == "out":
+            # value-seed probes cost n+1 subset canonicalizations; only
+            # the fused lattice program has a seed slot to pay them off
+            if route.method != "dpccp" \
+                    or self.solver.policy.engine != "fused":
+                return None
+        else:
+            return None
+        return self.layers.seed_for(form, cost)
 
     def _process(self, batch: "list[PlanRequest]") -> "list[PlanResponse]":
         responses: "list[PlanResponse | None]" = [None] * len(batch)
@@ -549,7 +616,8 @@ class PlanServer:
             # the solver groups by lane-cost, so a connected cap chunk
             # ("cap_conn") never mixes with plain cap solves
             items = [(form.q, form.card, routes[pos].lane_cost,
-                      router_mod.topo_class(form.signature))
+                      router_mod.topo_class(form.signature),
+                      self._layer_seed(form, batch[pos].cost, routes[pos]))
                      for pos, form in batch_lane]
             results = self.solver.solve(items)
             self._observe_batch(self.solver.last_timings)
@@ -560,9 +628,9 @@ class PlanServer:
 
         for pos, form, route in single_lane:
             t0 = time.perf_counter()   # timing: measured-duration (solve)
-            cost_v, tree, meta = self._solve_single(form.q, form.card,
-                                                    batch[pos].cost,
-                                                    route)
+            cost_v, tree, meta = self._solve_single(
+                form.q, form.card, batch[pos].cost, route,
+                seed=self._layer_seed(form, batch[pos].cost, route))
             self._observe_single(route, form, batch[pos].cost,
                                  # timing: measured-duration
                                  time.perf_counter() - t0, meta)
@@ -576,33 +644,59 @@ class PlanServer:
         """Finish one solved request: cache the canonical plan
         (``insert=False`` for coalesced followers — the leader already
         did), record the route, and relabel the tree back into the
-        request's labeling."""
+        request's labeling.
+
+        Degraded (GOO) results insert under the PRIMARY route's key with
+        ``status="degraded"``: a later deadline-pressed repeat of the
+        same query can replay them for free, while an exact-capable
+        probe misses through (``PlanCache.lookup``) and its fresh exact
+        solve replaces the entry — a degraded insert never clobbers an
+        exact one."""
         meta = dict(meta)
+        # the solved DP value table rides the meta out of the core solve
+        # for fragment harvesting only — it never reaches the plan cache
+        # or a response (it is 2^n floats per query)
+        dp_row = meta.pop("dp_table", None)
+        status = "degraded" if (route.method == "goo"
+                                or meta.get("best_effort")) else "exact"
         if self.enable_cache and insert:
-            key = PlanCache.make_key(form.key, req.cost, route.method,
-                                     route.params)
-            self.cache.insert(key, CachedPlan(cost=cost_v, tree=tree,
-                                              meta=meta,
-                                              inserted_perm=form.perm))
+            insert_route = route
+            if status == "degraded" and route.method == "goo":
+                insert_route = self.router.route(
+                    form.q, req.cost, None, signature=form.signature,
+                    connected=req.connected)
+            key = PlanCache.make_key(form.key, req.cost,
+                                     insert_route.method,
+                                     insert_route.params)
+            prior = self.cache.peek(key)
+            if not (status == "degraded" and prior is not None
+                    and prior.status == "exact"):
+                self.cache.insert(key, CachedPlan(cost=cost_v, tree=tree,
+                                                  meta=meta,
+                                                  inserted_perm=form.perm,
+                                                  status=status))
+        if insert and status == "exact" and self.enable_layer_cache:
+            self.layers.observe(form, req.cost, cost_v, meta,
+                                params=route.params, dp=dp_row)
         self.router.record(route)
         resp = PlanResponse(
             req_id=req.req_id, cost=cost_v,
             tree=relabel_tree(tree, form.inverse_perm),
             meta=meta, route=route, cache_hit=False,
-            status=("degraded" if (route.method == "goo"
-                                   or meta.get("best_effort"))
-                    else "exact"))
+            status=status)
         if req.explain:
             resp.explain = self._explain_base(req, form, route,
                                               cache_hit=False)
         return resp
 
     def _solve_single(self, q: QueryGraph, card: np.ndarray, cost: str,
-                      route: Route, engine: "str | None" = None) -> tuple:
+                      route: Route, engine: "str | None" = None,
+                      seed: "dict | None" = None) -> tuple:
         """``engine`` overrides the policy engine for this one solve —
         the runtime's failure ladder uses it to reroute a broken fused
         lane onto the host-exact rung (same method, same cache key,
-        bit-identical optimum)."""
+        bit-identical optimum).  ``seed`` is a layer-cache warm-start
+        payload (``_layer_seed``) — a pure hint the host paths drop."""
         if route.method == "goo":
             tree = best_effort.goo(q, card)
             fn = {"max": tree.cost_max, "out": tree.cost_out,
@@ -617,6 +711,14 @@ class PlanServer:
                                    "upper_bound": val,
                                    "recomputed_from_tree": True}}
         kw = route.kw()
+        if seed is not None:
+            if "opt" in seed and cost in ("max", "cap") \
+                    and route.method == "dpconv":
+                kw["seed_opt"] = float(seed["opt"])
+            elif "vals" in seed and cost == "out" \
+                    and route.method == "dpccp":
+                kw["seed_vals"] = seed["vals"]
+                kw["seed_ok"] = seed["ok"]
         if route.method == "dpconv":
             # the whole serving tier follows BatchPolicy.engine — also
             # the single-lane C_cap pipeline, so a "host"-engine server

@@ -1,0 +1,328 @@
+"""Layer-granular plan-fragment cache tests (incremental planning).
+
+Covers the cross-request reuse tier (``repro.service.layercache``) and
+the cache-correctness bugfix sweep that rides with it:
+
+* search fragments — a cached C_max optimum collapses the feasibility
+  binary-search bracket for repeats AND for C_cap pass 1 (cross-lane);
+* value fragments — solved C_out sub-tables transfer to supergraph
+  queries that contain the same canonical subproblem under any
+  relabeling (``canon.subset_signature``'s fragment-canonical space);
+* the prime contract, property-tested: seeds are pure perf hints —
+  seeded solves are **bitwise identical** to cold solves, across
+  topologies, cost functions, relabelings and stale seeds;
+* degraded-plan poisoning (the bugfix): a best-effort GOO plan cached
+  under the primary key is never served to an exact-capable request,
+  and a fresh exact solve replaces the degraded entry — exercised
+  through the async runtime's budget-reroute path;
+* the quarantine TTL boundary (the audit): refused on ``[t0, t0+ttl)``,
+  admitted at exactly ``t0 + ttl``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import engine as engine_mod
+from repro.core.dpconv import optimize
+from repro.core.querygraph import (chain, clique, make_cardinalities,
+                                   permute_card, relabel, star)
+from repro.service import (PlanRequest, PlanServer, RuntimeConfig,
+                           VirtualClock, WorkloadSpec, make_workload)
+from repro.service import faults
+from repro.service.batch import BatchPolicy
+from repro.service.canon import canonicalize
+from repro.service.layercache import LayerCache
+
+TOPOLOGIES = {"chain": chain, "star": star, "clique": clique}
+DUR = {"admit": 0.0, "solve": 1.0, "single": 0.01}
+
+
+def _solve(q, card, cost, **seed_kw):
+    """Mirror the server's exact fused routes, with optional seeds."""
+    if cost == "max":
+        return optimize(q, card, cost="max", engine="fused", **seed_kw)
+    if cost == "cap":
+        return optimize(q, card, cost="cap", engine="fused", **seed_kw)
+    return optimize(q, card, cost="out", method="dpccp", engine="fused",
+                    **seed_kw)
+
+
+def _seed_kw(seed, cost):
+    if seed is None:
+        return {}
+    if "opt" in seed and cost in ("max", "cap"):
+        return {"seed_opt": float(seed["opt"])}
+    if "vals" in seed and cost == "out":
+        return {"seed_vals": seed["vals"], "seed_ok": seed["ok"]}
+    return {}
+
+
+def _same_tree(a, b) -> bool:
+    return repr(a.tree) == repr(b.tree)
+
+
+# -------------------------------------------------------- fragment store
+def test_search_fragment_roundtrip_and_cross_lane():
+    """A C_max optimum inserted under the canonical key seeds BOTH the
+    max repeat and the C_cap pass-1 search of the same form."""
+    q = clique(6)
+    card = make_cardinalities(q, seed=1)
+    form = canonicalize(q, card)
+    lc = LayerCache()
+    assert lc.seed_for(form, "max") is None
+    assert lc.stats.search_misses == 1
+
+    cold = _solve(form.q, form.card, "max")
+    lc.observe(form, "max", cold.cost, cold.meta)
+    assert lc.stats.search_inserts == 1
+    for cost in ("max", "cap"):
+        seed = lc.seed_for(form, cost)
+        assert seed == {"opt": float(cold.cost)}
+    assert lc.stats.search_hits == 2
+    # the plan cache would key (form, cost, method) and miss max->cap;
+    # the search fragment is keyed by form alone — that IS the feature
+    assert lc.seed_for(canonicalize(q, card * 2.0), "max") is None
+
+
+def test_value_fragment_transfers_to_relabeled_subgraph():
+    """A solved chain(7) C_out table seeds a later chain(6) query that
+    is its leave-one-out induced subproblem under a random relabeling —
+    the layer-granular reuse the plan cache cannot express."""
+    big = chain(7)
+    card_big = make_cardinalities(big, seed=3)
+    form_big = canonicalize(big, card_big)
+    cold_big = _solve(form_big.q, form_big.card, "out")
+    lc = LayerCache()
+    lc.observe(form_big, "out", cold_big.cost, cold_big.meta,
+               dp=cold_big.meta["dp_table"])
+    assert lc.stats.value_inserts == form_big.q.n + 1
+
+    # chain(7) restricted to its first 6 relations IS chain(6) with the
+    # truncated cardinality table; relabel it to hide the provenance
+    small = chain(6)
+    card_small = card_big[: 1 << 6].copy()
+    rng = np.random.default_rng(7)
+    perm = rng.permutation(6)
+    q2 = relabel(small, perm)
+    card2 = permute_card(card_small, 6, perm)
+    form2 = canonicalize(q2, card2)
+    seed = lc.seed_for(form2, "out")
+    assert seed is not None and lc.stats.value_hits >= 1
+    ok = np.asarray(seed["ok"])
+    pc = np.array([bin(i).count("1") for i in range(1 << 6)])
+    assert not ok[pc < 2].any()      # recurrence starts at layer 2
+    assert ok[(1 << 6) - 1]          # the full subset is covered
+    # seeded values replay the cold table bitwise wherever claimed
+    cold2 = _solve(form2.q, form2.card, "out")
+    dp2 = cold2.meta["dp_table"]
+    assert np.array_equal(np.asarray(seed["vals"])[ok], dp2[ok])
+    warm2 = _solve(form2.q, form2.card, "out", **_seed_kw(seed, "out"))
+    assert float(warm2.cost) == float(cold2.cost)
+    assert _same_tree(warm2, cold2)
+
+
+def test_value_store_lru_eviction():
+    lc = LayerCache(value_capacity=4)
+    for s in range(3):
+        q = chain(5)
+        card = make_cardinalities(q, seed=100 + s)
+        form = canonicalize(q, card)
+        r = _solve(form.q, form.card, "out")
+        lc.observe(form, "out", r.cost, r.meta, dp=r.meta["dp_table"])
+    assert lc.stats.evictions > 0
+
+
+# -------------------------------------------------- bitwise parity (prop)
+@settings(max_examples=12, deadline=None)
+@given(top=st.sampled_from(sorted(TOPOLOGIES)),
+       n=st.integers(min_value=5, max_value=7),
+       card_seed=st.integers(min_value=0, max_value=10_000),
+       cost=st.sampled_from(["max", "out", "cap"]),
+       perm_seed=st.integers(min_value=0, max_value=10_000))
+def test_seeded_solve_bitwise_equals_cold(top, n, card_seed, cost,
+                                          perm_seed):
+    """The prime contract: for random share patterns (same canonical
+    problem re-arriving under a random relabeling), a layer-cache-seeded
+    solve returns the bitwise-identical optimum and join tree of the
+    cold solve, on every fused lane."""
+    q = TOPOLOGIES[top](n)
+    card = make_cardinalities(q, seed=card_seed)
+    form = canonicalize(q, card)
+    cold = _solve(form.q, form.card, cost)
+    lc = LayerCache()
+    lc.observe(form, cost, cold.cost, cold.meta,
+               dp=cold.meta.get("dp_table"))
+
+    perm = np.random.default_rng(perm_seed).permutation(n)
+    q2, card2 = relabel(q, perm), permute_card(card, n, perm)
+    form2 = canonicalize(q2, card2)
+    assert form2.key == form.key     # canonicalization absorbs the perm
+    seed = lc.seed_for(form2, cost)
+    assert seed is not None
+    warm = _solve(form2.q, form2.card, cost, **_seed_kw(seed, cost))
+    assert float(warm.cost) == float(cold.cost)   # bitwise, not approx
+    assert _same_tree(warm, cold)
+    if cost == "out":
+        assert np.array_equal(warm.meta["dp_table"],
+                              cold.meta["dp_table"])
+
+
+def test_stale_search_seed_is_ignored():
+    """A wrong cached optimum must not change the result: the seeded
+    program VERIFIES the hypothesis with a dual feasibility probe, so a
+    stale seed — below the optimum (infeasible candidate), above it
+    (feasible-but-not-minimal candidate), or foreign (not a candidate at
+    all) — shrinks the bracket at worst and the search converges to the
+    bitwise-cold answer on both search lanes."""
+    q = clique(6)
+    card = make_cardinalities(q, seed=11)
+    form = canonicalize(q, card)
+    cand = engine_mod.candidate_table(form.card, form.q.n)
+    for cost in ("max", "cap"):
+        cold = _solve(form.q, form.card, cost)
+        stales = (float(cand[0]),        # smallest candidate: infeasible
+                  float(cand[-1]),       # largest: feasible, not minimal
+                  float(cold.cost) * 3.0,          # foreign value
+                  np.inf)                          # non-finite: no seed
+        for stale in stales:
+            warm = _solve(form.q, form.card, cost, seed_opt=stale)
+            assert float(warm.cost) == float(cold.cost), (cost, stale)
+            assert _same_tree(warm, cold)
+
+
+def test_seed_bracket_collapses_rounds():
+    """Engine-level: a correct cached optimum costs exactly ONE round —
+    the dual verification probe — instead of the cold ~log2(C) search;
+    the while loop itself contributes zero rounds."""
+    q = clique(8)
+    card = make_cardinalities(q, seed=5)
+    form = canonicalize(q, card)
+    engine_mod.reset_stats()
+    cold = _solve(form.q, form.card, "max")
+    cold_rounds = engine_mod.stats().rounds
+    engine_mod.reset_stats()
+    warm = _solve(form.q, form.card, "max", seed_opt=float(cold.cost))
+    assert engine_mod.stats().rounds == 1 < cold_rounds
+    assert float(warm.cost) == float(cold.cost)
+    assert _same_tree(warm, cold)
+
+
+# ------------------------------------------------------- service wiring
+def _server(**kw):
+    kw.setdefault("batch_policy", BatchPolicy(engine="fused"))
+    return PlanServer(**kw)
+
+
+def test_server_threads_seeds_and_reports_provider():
+    """Serving the same stream twice on one server scores layer hits on
+    the second pass, keeps responses bitwise stable, publishes stats on
+    the metrics registry, and never leaks a dp table into responses."""
+    spec = WorkloadSpec(n_requests=24, seed=2, n_range=(6, 7),
+                        pool_size=4, cost_mix=(("max", 0.5),
+                                               ("out", 0.3),
+                                               ("cap", 0.2)))
+    reqs = make_workload(spec)
+    srv = _server(enable_cache=False)
+    a, _ = srv.serve(list(reqs), closed_loop=True)
+    b, _ = srv.serve(list(reqs), closed_loop=True)
+    st_ = srv.layers.stats
+    assert st_.search_hits > 0 and st_.seeded_solves > 0
+    for ra, rb in zip(a, b):
+        assert float(ra.cost) == float(rb.cost)
+        assert repr(ra.tree) == repr(rb.tree)
+        assert "dp_table" not in ra.meta and "dp_table" not in rb.meta
+    snap = srv.registry.snapshot()
+    prov = snap["providers"]["layercache"]
+    assert prov["search_hits"] == st_.search_hits
+    assert prov["seeded_solves"] == st_.seeded_solves
+
+
+def test_server_cross_lane_max_then_cap_warm_start():
+    q = clique(6)
+    card = make_cardinalities(q, seed=9)
+    srv = _server(enable_cache=False)
+    r_max = srv.plan_one(q, card, cost="max")
+    r_cap = srv.plan_one(q, card, cost="cap")
+    assert srv.layers.stats.search_hits >= 1
+    assert srv.layers.stats.seeded_solves >= 1
+    ref = optimize(q, card, cost="cap", engine="host")
+    assert float(r_cap.cost) == float(ref.cost)
+    assert float(r_max.cost) == float(
+        optimize(q, card, cost="max", engine="host").cost)
+
+
+# --------------------------------------- degraded-plan poisoning bugfix
+def _runtime(srv):
+    clk = VirtualClock()
+    rt = srv.make_runtime(clock=clk, config=RuntimeConfig(max_batch=8),
+                          duration_fn=lambda kind, info: DUR[kind])
+    return clk, rt
+
+
+def test_degraded_plan_never_served_to_exact_capable_runtime():
+    """The poisoning fix, through the runtime's budget-reroute path: a
+    deadline-pressed request caches its GOO plan under the PRIMARY key
+    tagged degraded; a later exact-capable request for the same query
+    must miss through, solve exactly, and replace the entry — after
+    which even pressed requests are served the exact plan."""
+    reqs = make_workload(WorkloadSpec(n_requests=24, seed=0,
+                                      n_range=(6, 7), pool_size=6))
+    base = next(r for r in reqs if r.cost == "max" and r.q.n >= 6)
+    pressed = dataclasses.replace(base, latency_budget=1e-12,
+                                  req_id=901)
+    srv = _server()
+    clk, rt = _runtime(srv)
+    t1 = rt.submit(pressed)
+    rt.drain()
+    assert t1.done and t1.response.status == "degraded"
+
+    t2 = rt.submit(dataclasses.replace(base, req_id=902))
+    rt.drain()
+    assert t2.done and t2.response.status == "exact"
+    assert not t2.response.cache_hit          # missed THROUGH the entry
+    assert srv.cache.stats.degraded_skips >= 1
+    assert float(t2.response.cost) <= float(t1.response.cost)
+
+    # the exact solve replaced the degraded entry: a pressed repeat now
+    # fast-paths onto the exact plan instead of the stale GOO one
+    t3 = rt.submit(dataclasses.replace(pressed, req_id=903))
+    rt.drain()
+    assert t3.done and t3.response.cache_hit
+    assert t3.response.status == "exact"
+    assert float(t3.response.cost) == float(t2.response.cost)
+
+
+def test_degraded_insert_never_clobbers_exact():
+    """Order reversed: once an exact plan is cached, a later degraded
+    solve for the same key must not overwrite it."""
+    reqs = make_workload(WorkloadSpec(n_requests=24, seed=0,
+                                      n_range=(6, 7), pool_size=6))
+    base = next(r for r in reqs if r.cost == "max" and r.q.n >= 6)
+    srv = _server()
+    r_exact = srv.serve([base], closed_loop=True)[0][0]
+    assert r_exact.status == "exact"
+    pressed = dataclasses.replace(base, latency_budget=1e-12,
+                                  req_id=904)
+    r2 = srv.serve([pressed], closed_loop=True)[0][0]
+    # the pressed repeat is served straight from the exact entry
+    assert r2.cache_hit and r2.status == "exact"
+
+
+# ------------------------------------------------ quarantine TTL bound
+def test_quarantine_ttl_boundary_half_open():
+    """Refused on [t0, t0+ttl); admitted at exactly t0+ttl — 'refused
+    until the TTL expires', with the boundary pinned on VirtualClock."""
+    clk = VirtualClock()
+    qt = faults.Quarantine(clk, ttl_s=5.0)
+    qt.add("k", reason="test")
+    assert qt.active("k")                     # t0: refused
+    clk.advance_to(5.0 - 1e-9)
+    assert qt.active("k")                     # just inside: refused
+    clk.advance_to(5.0)
+    assert not qt.active("k")                 # exactly t0+ttl: admitted
+    assert qt.expired == 1
+    assert not qt.active("k")                 # and the entry is gone
+    assert qt.snapshot()["live"] == 0
