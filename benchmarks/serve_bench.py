@@ -74,6 +74,24 @@ Four extra sections ride along:
   overhead of the always-on layer (plan verification + watchdog
   bookkeeping) is priced against a runtime with both disabled —
   ``scripts/smoke.sh`` gates on all of it;
+* **cluster** — the distributed-serving row (always on; ``--only
+  cluster`` runs it alone for the CI multi-replica job): the same
+  fresh out-cost stream served by 1 and by 4 REAL spawn-context
+  replica processes (``repro.service.cluster.ReplicaCluster``) behind
+  the asyncio line protocol, every response bit-compared against a
+  local ``plan_one`` reference (cross-replica parity); the scaling
+  gate is *modeled* like the lanes row — measured 1-replica service
+  latencies partitioned by consistent-hash ring owner give
+  ``total_s / makespan4`` (the single-core CI container serializes
+  real processes, so wall-clock 4-replica rates are recorded but not
+  gated); plus the shared plan-cache tier exercised for real
+  (non-owner solves published to the ring owner, isomorph requests
+  hitting cluster-wide), an ``obs_tail`` merge of the per-replica
+  flight-recorder dumps, and a tenant-quota gate on a loopback
+  replica (over-quota tenants shed/downgraded, the in-quota promised
+  class missing zero deadlines, client admission ceilings pre-shedding
+  after ``refresh_ceilings``) — ``scripts/smoke.sh`` gates on all of
+  it;
 * **cold start** — the executable cache is cleared and a sub-workload
   is served cold with and without ``PlanServer.prewarm``, measuring the
   cold-bucket p99 spike the prewarm satellite exists to kill.
@@ -422,7 +440,7 @@ def run_runtime_sweep(spec_seed: int, n_requests: int,
     # of the FIRST traced run above are the telemetry-integrity
     # evidence scripts/smoke.sh gates on.  The whole loop is sub-100ms,
     # so a single comparison is noise-dominated on a shared CPU: each
-    # mode is timed as the min over three interleaved replays with GC
+    # mode is timed as the min over several interleaved replays with GC
     # paused, the noise-robust estimate of the true per-mode floor.
     def _replay(trace: bool) -> float:
         s = _make_server(batch_size, cache=True)
@@ -441,9 +459,18 @@ def run_runtime_sweep(spec_seed: int, n_requests: int,
             gc.enable()
 
     _replay(True), _replay(False)          # first-touch warmup, untimed
-    pairs = [(_replay(True), _replay(False)) for _ in range(5)]
-    t_traced = min(t for t, _ in pairs)
-    t_plain = min(p for _, p in pairs)
+    # alternate which mode runs first in each pair: on a 1-core host the
+    # scheduler / frequency state penalises whichever replay goes first,
+    # and a fixed order folds that bias straight into the traced-minus-
+    # plain delta
+    ts, ps = [], []
+    for i in range(10):
+        if i % 2 == 0:
+            ts.append(_replay(True)), ps.append(_replay(False))
+        else:
+            ps.append(_replay(False)), ts.append(_replay(True))
+    t_traced = min(ts)
+    t_plain = min(ps)
     trs = rt.tracer.stats()
     rec = rt.recorder.snapshot()
     rts_ = rt.stats
@@ -973,6 +1000,290 @@ def run_out_sweep(spec_seed: int, n_requests: int,
     return row, checked_total, bad_total
 
 
+def _relabel_query(q, card, rng):
+    """A random isomorph of ``(q, card)``: permuted relation labels, same
+    canonical key — what the shared-cache tier must hit cluster-wide."""
+    from repro.core.querygraph import permute_card, relabel
+
+    p = [int(x) for x in rng.permutation(q.n)]
+    return relabel(q, p), permute_card(np.asarray(card, np.float64),
+                                       q.n, p)
+
+
+def run_cluster_row(quick: bool, seed: int) -> "tuple[dict, int]":
+    """The distributed-serving row — always emitted, ``scripts/smoke.sh``
+    and the CI multi-replica job gate on it.  Four sections:
+
+    * **scaling** — the same fresh out-cost stream is served by a
+      1-replica and a 4-replica ``ReplicaCluster`` (real spawn-context
+      server processes behind the asyncio line protocol, host engine so
+      replica throughput is CPU-bound).  Both real wall-clock rates are
+      reported; the >= 1.5x acceptance gate is judged on the **modeled**
+      aggregate rate — each request priced at its *measured* 1-replica
+      service latency and assigned to its consistent-hash ring owner,
+      the 4-replica rate being the partition's makespan.  Same
+      discipline as the lanes row: the model prices exactly the layer
+      under test (the ring's load spread across replica processes) and
+      stays meaningful on the single-core CI container, where four
+      CPU-bound processes physically cannot beat one.
+    * **parity** — every cluster response is bit-compared (cost equality
+      on exact routes) against a fresh single-process ``plan_one``
+      reference: zero cross-replica mismatches is a hard gate.
+    * **shared cache** — a fresh stream is spread round-robin
+      (``affinity=False``) so non-owner replicas solve and *publish* to
+      the ring owner, then random isomorphs of the same queries are
+      routed by affinity: the owner answers them from published entries
+      (``origin != "local"``), so the summed cross-replica hit count
+      must be > 0.
+    * **tenants** — a deterministic VirtualClock loopback replica with
+      tenant quotas: the over-quota tenants get shed/downgraded, the
+      unmetered tenant's promised-deadline misses stay 0 under the same
+      interleaved stream, and the client ceilings (fed from the
+      replica's deny rates) pre-shed the over-quota excess.
+    """
+    import tempfile
+
+    from repro.service import (ClusterClient, LoopbackTransport,
+                               ReplicaCluster, ReplicaState, TenantQuota)
+    from repro.service import net as net_mod
+
+    n_scale = 32 if quick else 48
+    n_range = (10, 11) if quick else (11, 12)
+    spec = WorkloadSpec(n_requests=n_scale, seed=seed, n_range=n_range,
+                        fresh_frac=1.0, cost_mix=(("out", 1.0),),
+                        topologies=("chain", "star", "cycle", "sparse"))
+    timed = [dataclasses.replace(r, latency_budget=None, slo=None)
+             for r in make_workload(spec)]
+    warm_spec = dataclasses.replace(spec, n_requests=8, seed=seed + 17,
+                                    n_range=(8, 9))
+    warm = [dataclasses.replace(r, latency_budget=None, slo=None)
+            for r in make_workload(warm_spec)]
+
+    # single-process bit-exact references (same host engine, no cluster)
+    ref_srv = PlanServer(enable_batch=False,
+                         batch_policy=BatchPolicy(engine="host"))
+    refs = {r.req_id: ref_srv.plan_one(r.q, r.card, cost=r.cost)
+            for r in timed}
+
+    cfg = {"engine": "host", "enable_batch": False,
+           "prewarm_ns": (n_range[0],), "prewarm_costs": ("max", "out")}
+    rates: dict = {}
+    lat1: dict = {}
+    checked = bad = errors = 0
+    shared: dict = {}
+    obs_merge: dict = {}
+    manifest_buckets = 0
+    client_stats: dict = {}
+    clusters: list = []
+    try:
+        cluster4 = client4 = None
+        for n_rep in (1, 4):
+            cl = ReplicaCluster(n_rep, config=dict(cfg))
+            clusters.append(cl)
+            client = cl.start()
+            client.plan_many(list(warm), threads=8)
+            t0 = time.perf_counter()
+            resps = client.plan_many(list(timed), threads=8)
+            wall = time.perf_counter() - t0
+            rates[f"replicas{n_rep}"] = round(len(timed) / wall, 1)
+            for req, resp in zip(timed, resps):
+                if resp is None or resp.status != "exact":
+                    errors += 1
+                    continue
+                checked += 1
+                if resp.cost != refs[req.req_id].cost:
+                    bad += 1
+                if n_rep == 1:
+                    lat1[req.req_id] = max(float(resp.latency or 0.0),
+                                           1e-6)
+            if n_rep == 4:
+                cluster4, client4 = cl, client
+            else:
+                cl.stop()
+
+        # ---- shared plan-cache tier on the (kept) 4-replica cluster:
+        # spread fresh solves off-owner (publish), then route isomorphs
+        # by affinity (the owner answers from the published entries)
+        transport = client4.transport
+        manifest_buckets = len(cluster4.manifest)
+        sh_spec = WorkloadSpec(n_requests=12 if quick else 16,
+                               seed=seed + 29, n_range=(8, 9),
+                               fresh_frac=1.0, cost_mix=(("out", 1.0),),
+                               topologies=("chain", "star", "cycle",
+                                           "sparse"))
+        sh_reqs = [dataclasses.replace(r, latency_budget=None, slo=None)
+                   for r in make_workload(sh_spec)]
+        spread = ClusterClient(transport, cluster4.replica_ids,
+                               affinity=False)
+        for r in sh_reqs:
+            spread.plan_request(r)
+        owner_client = ClusterClient(transport, cluster4.replica_ids)
+        rng = np.random.default_rng(seed + 23)
+        iso_hits = 0
+        for r in sh_reqs:
+            q2, c2 = _relabel_query(r.q, r.card, rng)
+            resp = owner_client.plan_request(
+                dataclasses.replace(r, q=q2, card=c2))
+            iso_hits += bool(resp.cache_hit)
+        cross_hits = remote_inserts = 0
+        for rid in cluster4.replica_ids:
+            out = transport.call(rid, {"op": "stats"})
+            cs = net_mod._dec(out["stats"])["cache"]
+            cross_hits += cs.get("cross_hits", 0)
+            remote_inserts += cs.get("remote_inserts", 0)
+        shared = {"publishes": spread.stats["publishes"],
+                  "remote_inserts": remote_inserts,
+                  "cross_hits": cross_hits,
+                  "isomorph_hits": iso_hits,
+                  "isomorph_probes": len(sh_reqs)}
+        client_stats = {k: client4.stats[k]
+                        for k in ("requests", "failovers", "hedges",
+                                  "net_errors", "replica_deaths",
+                                  "errors")}
+
+        # ---- multi-replica observability: replica-tagged flight dumps
+        # merged by the obs_tail CLI (the operator view the satellites
+        # exist for); counts only, no gate — a clean run has no incidents
+        dumpdir = tempfile.mkdtemp(prefix="serve_bench_flight_")
+        cluster4.dump_recorders(dumpdir)
+        import importlib.util as _ilu
+        ot_spec = _ilu.spec_from_file_location(
+            "obs_tail", os.path.join(REPO_ROOT, "scripts", "obs_tail.py"))
+        ot = _ilu.module_from_spec(ot_spec)
+        ot_spec.loader.exec_module(ot)
+        merged = ot.merge_records(
+            [os.path.join(dumpdir, f"flight_{rid}.jsonl")
+             for rid in cluster4.replica_ids
+             if os.path.exists(os.path.join(dumpdir,
+                                            f"flight_{rid}.jsonl"))])
+        ms = ot.summarize(merged)
+        obs_merge = {"records": ms["records"],
+                     "replicas": len(ms["replicas"])}
+    finally:
+        for cl in clusters:
+            try:
+                cl.stop()
+            except Exception:  # noqa: BLE001 — teardown best-effort
+                pass
+
+    # ---- tenant SLO quotas: one deterministic VirtualClock loopback
+    # replica, an interleaved three-tenant stream.  "free" (shed) and
+    # "trial" (downgrade) are metered at 2/s but arrive at ~6.7/s;
+    # "paid" is unmetered on the interactive (1s-deadline) class with a
+    # virtual 1ms solve — its promised deadlines must all hold.
+    srv = PlanServer(enable_batch=False,
+                     batch_policy=BatchPolicy(engine="host"))
+    clk = VirtualClock()
+    quotas = {"free": TenantQuota("free", rate=2.0, burst=2.0,
+                                  on_exceed="shed"),
+              "trial": TenantQuota("trial", rate=2.0, burst=2.0,
+                                   on_exceed="downgrade")}
+    rt = srv.make_runtime(
+        clock=clk,
+        config=RuntimeConfig(
+            max_batch=1,
+            slo_classes={"interactive": SLOClass("interactive", 1.0)},
+            tenant_quotas=quotas),
+        duration_fn=lambda kind, info: 1e-3)
+    state = ReplicaState(srv, replica_id="t0", runtime=rt)
+    t_spec = WorkloadSpec(n_requests=60, seed=seed + 31, n_range=(5, 6),
+                          pool_size=4, fresh_frac=0.0, relabel_frac=0.0,
+                          cost_mix=(("max", 1.0),))
+    t_reqs = make_workload(t_spec)
+    for i, r in enumerate(t_reqs):
+        clk.advance(0.05)
+        tenant = ("free", "trial", "paid")[i % 3]
+        state.plan_sync(dataclasses.replace(
+            r, tenant=tenant, latency_budget=None, arrival=clk.now(),
+            slo="interactive" if tenant == "paid" else None))
+    snap = rt.quotas.snapshot()["tenants"]
+    paid_cls = rt.stats.per_class.get("interactive")
+    # client-side ceilings: fold the replica's deny rates back, then
+    # pre-shed a fresh burst of the over-quota tenant at the client
+    tclient = ClusterClient(LoopbackTransport({"t0": state}), ["t0"])
+    tclient.refresh_ceilings()
+    for _ in range(20):
+        clk.advance(0.05)
+        tclient.plan(t_reqs[0].q, t_reqs[0].card, cost="max",
+                     tenant="free")
+    tenants = {
+        "over_quota_shed": snap.get("free", {}).get("shed", 0),
+        "over_quota_downgraded": snap.get("trial", {}).get(
+            "downgraded", 0),
+        "in_quota_served": paid_cls.served if paid_cls else 0,
+        "in_quota_deadline_misses":
+            paid_cls.deadline_misses if paid_cls else -1,
+        "in_quota_shed": paid_cls.shed if paid_cls else -1,
+        "ceiling_free": tclient.ceilings.ceiling("free"),
+        "client_shed": tclient.stats["client_shed"],
+    }
+
+    # modeled scale-out (the gate): each request priced at its measured
+    # 1-replica service latency, partitioned to its ring owner — the
+    # 4-replica rate is the partition makespan (lanes-row discipline:
+    # deterministic given the measurements, meaningful on 1-core CI)
+    from repro.service import HashRing
+    from repro.service.canon import canonicalize as _canon
+
+    ring4 = HashRing([f"r{i}" for i in range(4)])
+    per_replica: dict = {}
+    for r in timed:
+        rid = ring4.owner(_canon(r.q, r.card).key)
+        per_replica[rid] = per_replica.get(rid, 0.0) \
+            + lat1.get(r.req_id, 1e-6)
+    total_s = sum(per_replica.values())
+    makespan4 = max(per_replica.values()) if per_replica else 0.0
+    modeled = {"replicas1": round(len(timed) / total_s, 1)
+               if total_s > 0 else 0.0,
+               "replicas4": round(len(timed) / makespan4, 1)
+               if makespan4 > 0 else 0.0}
+    row = {"config": "cluster/host/1-4x",
+           "n_queries": len(timed),
+           "plans_per_s": rates,
+           "modeled_plans_per_s": modeled,
+           "ring_load": {rid: round(s, 4)
+                         for rid, s in sorted(per_replica.items())},
+           "scaling_x": round(total_s / makespan4, 2)
+           if makespan4 > 0 else 0.0,
+           "parity_checked": checked, "parity_mismatches": bad,
+           "errors": errors,
+           "manifest_buckets": manifest_buckets,
+           "shared_cache": shared,
+           "client": client_stats,
+           "obs_tail": obs_merge,
+           "tenants": tenants}
+    return row, bad
+
+
+def _cluster_gate(row: dict, enforce_target: bool) -> "list[str]":
+    """The cluster row's invariant violations (empty = clean)."""
+    bad = []
+    if row["parity_mismatches"]:
+        bad.append(f"{row['parity_mismatches']} cross-replica parity "
+                   "mismatches")
+    if row["errors"]:
+        bad.append(f"{row['errors']} cluster responses were not exact")
+    if row["shared_cache"].get("cross_hits", 0) <= 0:
+        bad.append("shared cache tier scored no cross-replica hits")
+    if row["shared_cache"].get("publishes", 0) <= 0:
+        bad.append("no exact solves were published to their ring owner")
+    t = row["tenants"]
+    if t["over_quota_shed"] <= 0 or t["over_quota_downgraded"] <= 0:
+        bad.append("over-quota tenants were not shed/downgraded "
+                   f"(shed={t['over_quota_shed']}, "
+                   f"downgraded={t['over_quota_downgraded']})")
+    if t["in_quota_deadline_misses"] != 0 or t["in_quota_shed"] != 0:
+        bad.append("in-quota tenant lost promised deadlines under the "
+                   f"mixed stream (misses={t['in_quota_deadline_misses']}"
+                   f", shed={t['in_quota_shed']})")
+    if t["client_shed"] <= 0:
+        bad.append("client admission ceilings pre-shed nothing")
+    if enforce_target and row["scaling_x"] < 1.5:
+        bad.append(f"modeled 1->4 replica scaling only "
+                   f"{row['scaling_x']}x (>= 1.5x required)")
+    return bad
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -1002,7 +1313,34 @@ def main(argv=None) -> int:
     ap.add_argument("--bench-out",
                     default=os.path.join(REPO_ROOT, "BENCH_serve.json"),
                     help="compact cross-PR trajectory record (repo root)")
+    ap.add_argument("--only", choices=("all", "cluster"), default="all",
+                    help="'cluster' runs just the distributed-serving "
+                         "row (the CI multi-replica smoke job)")
     args = ap.parse_args(argv)
+
+    if args.only == "cluster":
+        cluster_row, cluster_bad = run_cluster_row(args.quick, args.seed)
+        print(f"{cluster_row['config']},,,,"
+              f"scaling={cluster_row['scaling_x']}x;"
+              f"cross_hits={cluster_row['shared_cache']['cross_hits']};"
+              f"publishes={cluster_row['shared_cache']['publishes']};"
+              f"parity_bad={cluster_row['parity_mismatches']};"
+              f"tenant_shed={cluster_row['tenants']['over_quota_shed']};"
+              f"client_shed={cluster_row['tenants']['client_shed']}",
+              flush=True)
+        with open(args.bench_out, "w") as f:
+            json.dump({"generated_by": "benchmarks/serve_bench.py "
+                                       "--only cluster"
+                                       + (" --quick" if args.quick
+                                          else ""),
+                       "cluster": cluster_row,
+                       "parity_mismatches": cluster_bad},
+                      f, indent=1, default=str)
+        print(f"# written {args.bench_out}")
+        violations = _cluster_gate(cluster_row, not args.no_target)
+        for v in violations:
+            print(f"FAIL: {v}", file=sys.stderr)
+        return 1 if violations else 0
 
     if args.quick:
         n_requests = args.n_requests or 192
@@ -1261,6 +1599,25 @@ def main(argv=None) -> int:
               + ", ".join(f"{k}={shd[k]}" for k in sorted(shard_parity)),
               flush=True)
 
+    # -------------------------------------- distributed serving cluster
+    cluster_row, cluster_bad = run_cluster_row(args.quick, args.seed)
+    rows.append(cluster_row)
+    parity_fail += cluster_bad
+    print(f"{cluster_row['config']},,,,"
+          f"plans1={cluster_row['plans_per_s']['replicas1']}/s;"
+          f"plans4={cluster_row['plans_per_s']['replicas4']}/s;"
+          f"scaling={cluster_row['scaling_x']}x;"
+          f"cross_hits={cluster_row['shared_cache']['cross_hits']};"
+          f"publishes={cluster_row['shared_cache']['publishes']};"
+          f"tenant_shed={cluster_row['tenants']['over_quota_shed']};"
+          f"client_shed={cluster_row['tenants']['client_shed']}",
+          flush=True)
+    print(f"#   cluster parity: {cluster_row['parity_checked']} checked, "
+          f"{cluster_bad} mismatches", flush=True)
+    for v in _cluster_gate(cluster_row, not args.no_target):
+        invariant_fail += 1
+        print(f"#   INVARIANT VIOLATION: cluster: {v}", file=sys.stderr)
+
     # -------------------------------------------- cold start / prewarm
     cold = {}
     if not args.skip_cold:
@@ -1367,6 +1724,7 @@ def main(argv=None) -> int:
         "obs": obs_row,
         "faults": faults_row,
         "lanes": lanes_row,
+        "cluster": cluster_row,
         "out_lane": {
             "queries": out_row["queries_on_lane"],
             "parity_checked": out_row["parity_checked"],

@@ -1,0 +1,147 @@
+#!/usr/bin/env python
+"""repro-obs: merge + summarize flight-recorder JSONL dumps.
+
+A replica dumps its flight recorder with
+``FlightRecorder.dump_jsonl(path, replica=...)`` (the cluster's
+``dump`` op does this per replica, tagging every line).  This CLI folds
+any number of such dumps into one operator view:
+
+    python scripts/obs_tail.py /tmp/flight_r0.jsonl /tmp/flight_r1.jsonl
+    python scripts/obs_tail.py --kinds shed,deadline_miss dumps/*.jsonl
+    python scripts/obs_tail.py --summary dumps/*.jsonl
+
+* default: one merged stream, ordered by incident timestamp (``at``),
+  each line prefixed ``[replica kind t=..]`` with the incident info.
+* ``--kinds a,b``: only those incident kinds (``completed`` included).
+* ``--summary``: per-kind × per-replica counts plus the span-phase
+  p50/p95 breakdown pooled across every completed span tree.
+
+Pure functions (``load_records``, ``merge_records``, ``summarize``)
+so tests drive them without a subprocess.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_records(path: str) -> "list[dict]":
+    """Parse one JSONL dump; the replica tag falls back to the file
+    name stem (``flight_r3.jsonl`` -> ``r3``) for untagged dumps."""
+    stem = os.path.splitext(os.path.basename(path))[0]
+    fallback = stem.split("_")[-1] if "_" in stem else stem
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError:
+                continue
+            rec.setdefault("replica", fallback)
+            out.append(rec)
+    return out
+
+
+def merge_records(paths) -> "list[dict]":
+    """All records from all dumps, ordered by timestamp (records with
+    no ``at`` — completed spans use their root t0 — sort by that)."""
+    recs = []
+    for p in paths:
+        recs.extend(load_records(p))
+
+    def key(r):
+        at = r.get("at")
+        if at is None:
+            span = r.get("span") or {}
+            at = span.get("t0", 0.0)
+        return (float(at) if at is not None else 0.0,)
+
+    recs.sort(key=key)
+    return recs
+
+
+def _walk_span(span: dict):
+    yield span
+    for c in span.get("children", ()):
+        yield from _walk_span(c)
+
+
+def _percentile(xs: "list[float]", p: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(len(xs) - 1, int(round(p / 100.0 * (len(xs) - 1))))
+    return xs[i]
+
+
+def summarize(recs: "list[dict]") -> dict:
+    """Per-kind × per-replica counts + pooled span-phase latencies."""
+    kinds: dict = {}
+    replicas: dict = {}
+    phases: dict = {}
+    for r in recs:
+        kind = r.get("kind", "?")
+        rep = r.get("replica", "?")
+        kinds[kind] = kinds.get(kind, 0) + 1
+        by = replicas.setdefault(rep, {})
+        by[kind] = by.get(kind, 0) + 1
+        span = r.get("span")
+        if span:
+            for s in _walk_span(span):
+                t0, t1 = s.get("t0"), s.get("t1")
+                if t0 is None or t1 is None:
+                    continue
+                phases.setdefault(s.get("name", "?"), []).append(t1 - t0)
+    return {
+        "records": len(recs),
+        "kinds": dict(sorted(kinds.items())),
+        "replicas": {r: dict(sorted(k.items()))
+                     for r, k in sorted(replicas.items())},
+        "phases": {name: {"count": len(xs),
+                          "p50_ms": round(_percentile(xs, 50) * 1e3, 4),
+                          "p95_ms": round(_percentile(xs, 95) * 1e3, 4)}
+                   for name, xs in sorted(phases.items())},
+    }
+
+
+def format_line(r: dict) -> str:
+    at = r.get("at")
+    if at is None:
+        span = r.get("span") or {}
+        at = span.get("t0")
+    t = f"{at:.6f}" if isinstance(at, (int, float)) else "-"
+    info = r.get("info") or {}
+    extra = " ".join(f"{k}={v}" for k, v in sorted(info.items()))
+    return f"[{r.get('replica', '?'):>4} {r.get('kind', '?'):<13} " \
+           f"t={t}] {extra}".rstrip()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="obs_tail", description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+", help="flight-recorder JSONL dumps")
+    ap.add_argument("--kinds", default=None,
+                    help="comma-separated kind filter (e.g. shed,error)")
+    ap.add_argument("--summary", action="store_true",
+                    help="print the aggregate JSON summary instead of "
+                         "the merged stream")
+    args = ap.parse_args(argv)
+    recs = merge_records(args.paths)
+    if args.kinds:
+        allow = set(k.strip() for k in args.kinds.split(","))
+        recs = [r for r in recs if r.get("kind") in allow]
+    if args.summary:
+        print(json.dumps(summarize(recs), indent=2))
+        return 0
+    for r in recs:
+        print(format_line(r))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -45,18 +45,23 @@ class FlightRecorder:
                                "span": span})
 
     # ------------------------------------------------------------ dump
-    def dump_jsonl(self, path=None) -> "list[str]":
+    def dump_jsonl(self, path=None, replica: "str | None" = None
+                   ) -> "list[str]":
         """Render ring + incidents as JSON lines; optionally write them
-        to ``path``.  Returns the lines either way."""
+        to ``path``.  Returns the lines either way.  ``replica`` tags
+        every line with the emitting replica's id so multi-replica dumps
+        merge unambiguously (``scripts/obs_tail.py``)."""
+        tag = {} if replica is None else {"replica": replica}
         lines = []
         for span in self.ring:
-            lines.append(json.dumps({"kind": "completed",
+            lines.append(json.dumps({"kind": "completed", **tag,
                                      "span": span.to_dict()},
                                     default=str))
         for inc in self.incidents:
             span = inc["span"]
             lines.append(json.dumps(
-                {"kind": inc["kind"], "at": inc["at"], "info": inc["info"],
+                {"kind": inc["kind"], "at": inc["at"], **tag,
+                 "info": inc["info"],
                  "span": span.to_dict() if span is not None else None},
                 default=str))
         if path is not None:

@@ -144,11 +144,23 @@ class Tracer:
     """
 
     def __init__(self, clock, registry=None, recorder=None,
-                 enabled: bool = True):
+                 enabled: bool = True, sample_rate: float = 1.0):
+        if not 0.0 <= sample_rate <= 1.0:
+            raise ValueError("sample_rate must be in [0, 1]")
         self.clock = clock
         self.registry = registry
         self.recorder = recorder
         self.enabled = enabled
+        # head sampling: trace this fraction of requests.  The decision
+        # is counter-based (the k-th request is traced iff the integer
+        # part of k * rate advanced), so sampled sets are deterministic
+        # — no RNG — and evenly spread through the stream.  Incident
+        # capture (shed / error / deadline miss) does NOT go through the
+        # tracer and is never sampled away: the runtime records
+        # incidents on the FlightRecorder unconditionally.
+        self.sample_rate = sample_rate
+        self.sampled = 0          # requests that got a real root span
+        self.sampled_out = 0      # requests handed NULL_SPAN by sampling
         self.spans_opened = 0
         self.spans_closed = 0
         self.requests = 0
@@ -180,6 +192,12 @@ class Tracer:
         if not self.enabled:
             return NULL_SPAN
         self.requests += 1
+        if self.sample_rate < 1.0:
+            k = self.requests
+            if int(k * self.sample_rate) <= int((k - 1) * self.sample_rate):
+                self.sampled_out += 1
+                return NULL_SPAN
+        self.sampled += 1
         root = Span("request", at if at is not None else self.clock.now(),
                     self, attrs)
         self._opened()
@@ -209,6 +227,9 @@ class Tracer:
 
     def stats(self) -> dict:
         return {"requests": self.requests,
+                "sample_rate": self.sample_rate,
+                "sampled": self.sampled,
+                "sampled_out": self.sampled_out,
                 "spans_opened": self.spans_opened,
                 "spans_closed": self.spans_closed,
                 "open_spans": self.open_spans,

@@ -90,6 +90,23 @@ compile/execute split → extract → respond) and a ``FlightRecorder``
 keeps every shed/downgraded/deadline-missed request for postmortems.
 ``PlanRequest(explain=True)`` returns the provenance on the response.
 
+Above the single-process stack sits the distributed serving front end:
+
+* ``net``      — the wire layer: a tagged-JSON codec under which every
+  ``PlanRequest``/``PlanResponse``/``PlanError`` round-trips bit-exactly,
+  the per-replica protocol ops (``ReplicaState``), an asyncio
+  line-protocol server (``NetFrontend``) and a blocking ``NetClient``.
+* ``cluster``  — the replica cluster: consistent-hash routing on the
+  canonical cache key (``HashRing``), the client-side router with
+  failover/hedging and the shared plan-cache tier (exact solves
+  published to the key's ring owner, answered cluster-wide as
+  relabeling-aware hits), cross-replica prewarm manifests, the
+  deterministic ``LoopbackTransport`` chaos harness, and the
+  multi-process ``ReplicaCluster``.
+* ``tenancy``  — per-tenant SLO quotas: deterministic token-bucket
+  admission (shed / downgrade / aging-promote) on the runtime side,
+  deny-rate-fed ``AdmissionCeilings`` on the cluster-client side.
+
 Benchmark: ``benchmarks/serve_bench.py`` (``--quick`` for the CI gate in
 ``scripts/smoke.sh``).  Demo: ``examples/planner_demo.py``.
 """
@@ -100,13 +117,22 @@ from repro.service.batch import (BatchedSolver, BatchPolicy,  # noqa: F401
 from repro.service.cache import CachedPlan, CacheStats, PlanCache  # noqa: F401
 from repro.service.canon import (CanonicalForm, canonicalize,  # noqa: F401
                                  relabel_tree, topology_signature)
+from repro.service.cluster import (ClusterClient, HashRing,  # noqa: F401
+                                   LoopbackTransport, ReplicaCluster,
+                                   TcpTransport)
 from repro.service.faults import (BreakerBoard, BreakerConfig,  # noqa: F401
                                   CacheBackendError, CompileError,
                                   EngineError, FaultInjector, FaultPlan,
-                                  FaultSpec, FaultStats, PlanError,
-                                  PlanTimeoutError, Quarantine,
-                                  QuarantinedError, ShedError,
-                                  WorkerDied)
+                                  FaultSpec, FaultStats, NetworkError,
+                                  PlanError, PlanTimeoutError, Quarantine,
+                                  QuarantinedError, ReplicaDeadError,
+                                  ShedError, WorkerDied)
+from repro.service.net import (NetClient, NetFrontend,  # noqa: F401
+                               ReplicaState, decode_request,
+                               decode_response, encode_request,
+                               encode_response)
+from repro.service.tenancy import (AdmissionCeilings, QuotaBoard,  # noqa: F401
+                                   TenantQuota)
 from repro.service.router import Route, Router, RouterConfig  # noqa: F401
 from repro.service.runtime import (Clock, RuntimeConfig,  # noqa: F401
                                    RuntimeStats, ServingRuntime,

@@ -27,6 +27,8 @@ class CacheStats:
     evictions: int = 0
     relabel_hits: int = 0       # hits whose request labeling != canonical
     degraded_skips: int = 0     # degraded entries withheld from exact probes
+    remote_inserts: int = 0     # entries published by another replica
+    cross_hits: int = 0         # hits served from a remote-origin entry
 
     @property
     def lookups(self) -> int:
@@ -41,6 +43,8 @@ class CacheStats:
                 "evictions": self.evictions,
                 "relabel_hits": self.relabel_hits,
                 "degraded_skips": self.degraded_skips,
+                "remote_inserts": self.remote_inserts,
+                "cross_hits": self.cross_hits,
                 "hit_rate": round(self.hit_rate, 4)}
 
 
@@ -60,6 +64,11 @@ class CachedPlan:
     # request able to wait for the exact solve (cache poisoning);
     # ``lookup`` withholds it unless the probe opts in.
     status: str = "exact"
+    # which replica solved it: "local", or the publishing replica's id
+    # for entries that arrived over the cluster's shared-cache tier —
+    # a hit on a non-local entry is a cross-replica hit (one replica's
+    # DPconv solve answering another replica's traffic)
+    origin: str = "local"
 
 
 class PlanCache:
@@ -109,6 +118,8 @@ class PlanCache:
         if request_perm is not None and \
                 tuple(request_perm) != tuple(entry.inserted_perm):
             self.stats.relabel_hits += 1
+        if entry.origin != "local":
+            self.stats.cross_hits += 1
         return entry
 
     def peek(self, key: tuple) -> "CachedPlan | None":
@@ -118,6 +129,8 @@ class PlanCache:
         return self._entries.get(key)
 
     def insert(self, key: tuple, plan: CachedPlan) -> None:
+        if plan.origin != "local":
+            self.stats.remote_inserts += 1
         if key in self._entries:
             self._entries.move_to_end(key)
         self._entries[key] = plan

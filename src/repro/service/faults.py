@@ -99,6 +99,21 @@ class ShedError(PlanError):
     code = "shed"
 
 
+class NetworkError(PlanError):
+    """A cluster network operation failed (partition, connect refusal,
+    frame-level corruption).  The cluster client treats it as
+    retriable: failover to the hash ring's next replica."""
+
+    code = "net"
+
+
+class ReplicaDeadError(NetworkError):
+    """A replica process died (or was injected dead) — permanently
+    routed around until the cluster restarts it."""
+
+    code = "replica_dead"
+
+
 def as_plan_error(exc: BaseException) -> PlanError:
     """Wrap an arbitrary failure into the typed taxonomy (idempotent)."""
     if isinstance(exc, PlanError):
@@ -109,7 +124,7 @@ def as_plan_error(exc: BaseException) -> PlanError:
 
 
 # ---------------------------------------------------------- fault injection
-SEAMS = ("dispatch", "compile", "cache", "worker")
+SEAMS = ("dispatch", "compile", "cache", "worker", "net", "replica")
 KINDS = ("raise", "hang", "garbage")
 
 

@@ -41,10 +41,17 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
+import zipfile
 
 import numpy as np
 
 from repro.service.canon import subset_expand, subset_signature
+
+# on-disk fragment-store format version (``save``/``load``): bump on any
+# layout change — ``load`` ignores files whose version doesn't match
+# (a stale store is a cold start, never a crash or a wrong seed)
+STORE_VERSION = 1
 
 
 @dataclasses.dataclass
@@ -58,6 +65,7 @@ class LayerCacheStats:
     seeded_solves: int = 0      # solves dispatched with >= 1 seed attached
     seeded_sets: int = 0        # lattice sets covered by value seeds
     evictions: int = 0
+    admission_skips: int = 0    # inserts skipped for one-off topologies
 
     @property
     def search_hit_rate(self) -> float:
@@ -80,7 +88,8 @@ class LayerCacheStats:
                 "value_hit_rate": round(self.value_hit_rate, 4),
                 "seeded_solves": self.seeded_solves,
                 "seeded_sets": self.seeded_sets,
-                "evictions": self.evictions}
+                "evictions": self.evictions,
+                "admission_skips": self.admission_skips}
 
 
 def _perm_masks(perm) -> np.ndarray:
@@ -111,13 +120,24 @@ class LayerCache:
     """
 
     def __init__(self, search_capacity: int = 8192,
-                 value_capacity: int = 512, max_n: int = 16):
+                 value_capacity: int = 512, max_n: int = 16,
+                 admission_min_probes: int = 16,
+                 admission_floor: float = 0.05):
         if search_capacity < 1 or value_capacity < 1:
             raise ValueError("capacities must be >= 1")
         self.search_capacity = search_capacity
         self.value_capacity = value_capacity
         self.max_n = max_n          # value fragments past this n are not
         #                             worth the 2^n probe/scatter work
+        # fragment-admission heuristic: per-topology-signature hit
+        # history.  A signature whose probes have seen fewer than
+        # ``admission_floor`` hits after ``admission_min_probes`` probes
+        # is a one-off shape (clique-heavy ad-hoc traffic): its solves
+        # stop inserting, so they can't evict fragments that DO repay
+        # (``admission_min_probes <= 0`` disables the gate).
+        self.admission_min_probes = admission_min_probes
+        self.admission_floor = admission_floor
+        self._topo: dict = {}       # signature -> [probes, hits]
         self.stats = LayerCacheStats()
         self._search: "collections.OrderedDict[str, float]" = \
             collections.OrderedDict()
@@ -159,6 +179,7 @@ class LayerCache:
             payload, deltas = memo[1], memo[2]
             for field, d in deltas:
                 setattr(self.stats, field, getattr(self.stats, field) + d)
+            self._topo_observe(form.signature, payload is not None)
             return payload
         before = dataclasses.asdict(self.stats)
         payload = self._probe(form, cost)
@@ -168,7 +189,29 @@ class LayerCache:
         if len(self._probe_memo) > 8192:
             self._probe_memo.clear()
         self._probe_memo[(form.key, lane)] = (self._gen, payload, deltas)
+        self._topo_observe(form.signature, payload is not None)
         return payload
+
+    # ------------------------------------------------- admission heuristic
+    def _topo_observe(self, signature: str, hit: bool) -> None:
+        t = self._topo.get(signature)
+        if t is None:
+            t = self._topo[signature] = [0, 0]
+        t[0] += 1
+        if hit:
+            t[1] += 1
+
+    def _admit(self, signature: str) -> bool:
+        """Should a solve of this topology signature insert fragments?
+        Yes until the signature has a probe history; after
+        ``admission_min_probes`` probes, only if its hit rate clears
+        ``admission_floor`` — one-off shapes stop polluting the LRU."""
+        if self.admission_min_probes <= 0:
+            return True
+        t = self._topo.get(signature)
+        if t is None or t[0] < self.admission_min_probes:
+            return True
+        return t[1] / t[0] >= self.admission_floor
 
     def _probe(self, form, cost: str) -> "dict | None":
         if cost in ("max", "cap"):
@@ -227,7 +270,13 @@ class LayerCache:
         * ``out``: ``dp`` is the solved ``(2^n,)`` connected-C_out value
           table in the query's canonical label space; the full set and
           every leave-one-out subset become value fragments.
+
+        One-off topologies (probe history below the admission floor)
+        are skipped entirely — see ``_admit``.
         """
+        if not self._admit(form.signature):
+            self.stats.admission_skips += 1
+            return
         if cost == "max" and np.isfinite(cost_v):
             self._insert_search(form.key, float(cost_v))
             return
@@ -286,3 +335,73 @@ class LayerCache:
         self._probe_memo.clear()
         self._observed.clear()
         self._gen += 1
+
+    # -------------------------------------------------------- persistence
+    def save(self, path: str) -> int:
+        """Write both stores to ``path`` (npz, ``STORE_VERSION``-stamped).
+
+        Keys are hex sha256 strings — stored as fixed-width unicode
+        arrays; value fragments are concatenated f64 with an offsets
+        array (they have heterogeneous ``2^r`` lengths).  The write is
+        atomic (tmp + ``os.replace``) so a crashed replica never leaves
+        a truncated store for the next prewarm to trip on.  Returns the
+        number of entries written."""
+        skeys = np.array(list(self._search.keys()), dtype="U64")
+        svals = np.array(list(self._search.values()), np.float64)
+        vkeys = np.array(list(self._values.keys()), dtype="U64")
+        frags = list(self._values.values())
+        offsets = np.zeros(len(frags) + 1, np.int64)
+        for i, f in enumerate(frags):
+            offsets[i + 1] = offsets[i] + f.shape[0]
+        vdata = (np.concatenate(frags) if frags
+                 else np.zeros(0, np.float64))
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "wb") as fh:
+            np.savez_compressed(
+                fh, version=np.int64(STORE_VERSION),
+                search_keys=skeys, search_vals=svals,
+                value_keys=vkeys, value_data=vdata,
+                value_offsets=offsets)
+        os.replace(tmp, path)
+        return len(skeys) + len(vkeys)
+
+    def load(self, path: str) -> int:
+        """Restore entries saved by ``save``; returns how many loaded.
+
+        Strictly best-effort: a missing file, a version mismatch, or a
+        corrupt archive loads nothing (returns 0) — the store is a
+        performance hint, so a cold start is always acceptable.  Entries
+        load in saved (LRU) order and respect the current capacities."""
+        try:
+            with np.load(path) as z:
+                if int(z["version"]) != STORE_VERSION:
+                    return 0
+                skeys = [str(k) for k in z["search_keys"]]
+                svals = np.asarray(z["search_vals"], np.float64)
+                vkeys = [str(k) for k in z["value_keys"]]
+                vdata = np.asarray(z["value_data"], np.float64)
+                offsets = np.asarray(z["value_offsets"], np.int64)
+        except (OSError, KeyError, ValueError, zipfile.BadZipFile):
+            # a truncated write surfaces as BadZipFile, not OSError
+            return 0
+        if len(skeys) != svals.shape[0] \
+                or offsets.shape[0] != len(vkeys) + 1:
+            return 0
+        loaded = 0
+        for k, v in zip(skeys, svals):
+            if k not in self._search:
+                loaded += 1
+            self._search[k] = float(v)
+            self._search.move_to_end(k)
+        while len(self._search) > self.search_capacity:
+            self._search.popitem(last=False)
+        for i, k in enumerate(vkeys):
+            frag = vdata[offsets[i]:offsets[i + 1]].copy()
+            if k not in self._values:
+                loaded += 1
+            self._values[k] = frag
+            self._values.move_to_end(k)
+        while len(self._values) > self.value_capacity:
+            self._values.popitem(last=False)
+        self._gen += 1                  # invalidate probe/observe memos
+        return loaded

@@ -78,10 +78,11 @@ import numpy as np
 
 from repro.core import engine as engine_mod
 from repro.obs.recorder import FlightRecorder
-from repro.obs.trace import Tracer
+from repro.obs.trace import NULL_SPAN, Tracer
 from repro.service.cache import PlanCache
 from repro.service import faults as faults_mod
 from repro.service import router as router_mod
+from repro.service import tenancy as tenancy_mod
 from repro.service.canon import canonicalize
 
 
@@ -165,6 +166,12 @@ class RuntimeConfig:
     deadline_safety: float = 2.0     # price estimates with this margin
     max_pending: int = 1 << 20       # backpressure: refuse misses past it
     trace: bool = True               # per-request span trees (repro.obs)
+    trace_sample: float = 1.0        # span head-sampling rate (1.0 = all;
+    # incident capture — shed/error/deadline-miss — is unconditional
+    # regardless of sampling, see obs.trace.Tracer)
+    # per-tenant SLO quotas: {tenant: tenancy.TenantQuota}.  None/empty
+    # disables tenant metering (every tenant unmetered).
+    tenant_quotas: "dict | None" = None
     slo_classes: dict = dataclasses.field(
         default_factory=default_slo_classes)
     # --- resilience (repro.service.faults).  Retries are per solve
@@ -436,13 +443,22 @@ class ServingRuntime:
         self.tracer = Tracer(self.clock,
                              registry=getattr(server, "registry", None),
                              recorder=self.recorder,
-                             enabled=self.config.trace)
+                             enabled=self.config.trace,
+                             sample_rate=self.config.trace_sample)
+        # per-tenant SLO quotas (repro.service.tenancy): None when no
+        # quotas are configured — the submit ladder skips the gate
+        self.quotas = None
+        if self.config.tenant_quotas:
+            self.quotas = tenancy_mod.QuotaBoard(self.clock,
+                                                 self.config.tenant_quotas)
         reg = getattr(server, "registry", None)
         if reg is not None:
             reg.register_provider("runtime", self.stats.as_dict)
             reg.register_provider("tracer", self.tracer.stats)
             reg.register_provider("recorder", self.recorder.snapshot)
             reg.register_provider("faults", self._faults_snapshot)
+            if self.quotas is not None:
+                reg.register_provider("tenancy", self.quotas.snapshot)
         self._buckets: dict = {}         # (n, lane_cost) -> _Bucket
         self._by_key: dict = {}          # cache key -> _Entry (pending+flight)
         self._inflight: list = []        # _Work being executed / in window
@@ -617,15 +633,44 @@ class ServingRuntime:
                 raise ValueError(f"unknown SLO class {req.slo!r}")
         ticket = Ticket(request=req, form=form, submitted=now,
                         slo=slo.name if slo else "default")
+        span_attrs = {}
+        tenant = getattr(req, "tenant", None)
+        if tenant is not None:
+            span_attrs["tenant"] = tenant
+        replica = getattr(srv, "replica_id", "")
+        if replica:
+            span_attrs["replica"] = replica
         ticket.span = self.tracer.request(
             at=now, req_id=req.req_id, slo=ticket.slo, cost=req.cost,
-            n=form.q.n)
+            n=form.q.n, **span_attrs)
         ticket.spans["admit"] = ticket.span.child("admit", at=now)
         budget = req.latency_budget
         if budget is None and slo is not None:
             budget = slo.budget_s
         if budget is not None:
             ticket.deadline = now + budget
+
+        # ---- per-tenant SLO quota gate (repro.service.tenancy): one
+        # token per admission.  "shed" refuses before any solve work;
+        # "downgrade" is applied below as a forced best-effort route (a
+        # cache hit still answers — it costs the cluster nothing);
+        # "promote" is priority aging — a starved batch-class request
+        # adopts the standard class's deadline so the deadline-priority
+        # machinery serves it.
+        quota_downgrade = False
+        if self.quotas is not None and tenant is not None:
+            decision = self.quotas.admit(tenant)
+            if decision == "shed":
+                return self._refuse(
+                    ticket, f"tenant {tenant!r} over quota")
+            if decision == "promote":
+                if budget is None:
+                    std = self.config.slo_classes.get("standard")
+                    if std is not None and std.budget_s is not None:
+                        budget = std.budget_s
+                        ticket.deadline = now + budget
+            elif decision == "downgrade":
+                quota_downgrade = True
 
         # ---- the shared admission ladder (same helpers as _process, so
         # the sync/async bit-parity contract has ONE implementation):
@@ -667,9 +712,17 @@ class ServingRuntime:
                 kind="quarantine")
 
         # ---- deadline-aware routing (the PR-1 degrade ladder, plus the
-        # runtime's backlog-aware pricing on top)
+        # runtime's backlog-aware pricing on top).  A quota downgrade
+        # preempts it: the tenant's overflow rides the GOO best-effort
+        # lane regardless of its deadline headroom.
         route = primary
-        if budget is not None:
+        if quota_downgrade:
+            route = srv.router.failure_fallback(
+                req.cost, f"tenant {tenant!r} over quota")
+            ticket.downgraded = True
+            self.stats.downgraded += 1
+            self.stats.klass(ticket.slo).downgraded += 1
+        elif budget is not None:
             route, resp = srv._budget_reroute(req, form, budget, primary)
             if "deadline" not in route.reason and route.lane == "batch":
                 # the router prices the solve alone; the runtime also
@@ -780,10 +833,17 @@ class ServingRuntime:
                                                           refused=True))
         # always-on incident capture, traced or not (recorder tentpole d)
         self.recorder.incident(
-            "shed", root if self.tracer.enabled else None,
+            "shed", self._live_span(root),
             reason=reason, req_id=ticket.request.req_id, slo=ticket.slo,
             backpressure=backpressure, at=ticket.completed_at)
         return ticket
+
+    def _live_span(self, root):
+        """The span to attach to an incident: None when tracing is off
+        OR the request was head-sampled out (NULL_SPAN carries no tree)
+        — the incident itself is still recorded unconditionally."""
+        return root if (self.tracer.enabled and root is not None
+                        and root is not NULL_SPAN) else None
 
     def _fail_ticket(self, ticket: Ticket, err: BaseException,
                      kind: str = "error") -> Ticket:
@@ -810,7 +870,7 @@ class ServingRuntime:
                 root, expected_spans=self._expected_spans(ticket,
                                                           refused=True))
         self.recorder.incident(
-            kind, root if self.tracer.enabled else None,
+            kind, self._live_span(root),
             reason=ticket.refuse_reason, req_id=ticket.request.req_id,
             slo=ticket.slo, at=ticket.completed_at)
         return ticket
@@ -1462,6 +1522,10 @@ class ServingRuntime:
         cs.served += 1
         cs.latency.record(ticket.latency)
         self.stats.served += 1
+        if self.quotas is not None:
+            tenant = getattr(ticket.request, "tenant", None)
+            if tenant is not None:
+                self.quotas.record_served(tenant)
         missed = (ticket.deadline is not None and not ticket.downgraded
                   and ticket.completed_at > ticket.deadline)
         if missed:
@@ -1472,7 +1536,7 @@ class ServingRuntime:
         root.child("respond", latency_s=ticket.latency).close()
         self.tracer.finish(
             root, expected_spans=self._expected_spans(ticket, fast=fast))
-        live = root if self.tracer.enabled else None
+        live = self._live_span(root)
         if missed:
             self.recorder.incident(
                 "deadline_miss", live, req_id=ticket.request.req_id,

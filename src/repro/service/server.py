@@ -69,6 +69,10 @@ class PlanRequest:
     # lane taken, degradation steps, cache key, coalesce group and the
     # EWMA price vs the actual latency
     explain: bool = False
+    # tenant id for per-tenant SLO quotas (service.tenancy): None is
+    # unmetered.  The runtime's QuotaBoard meters admission per tenant;
+    # the cluster client's AdmissionCeilings pre-shed on it.
+    tenant: "str | None" = None
 
 
 @dataclasses.dataclass
@@ -160,8 +164,17 @@ class PlanServer:
                  enable_layer_cache: bool = True,
                  registry: "MetricsRegistry | None" = None,
                  trace: bool = True,
-                 lanes: int = 1):
+                 lanes: int = 1,
+                 replica_id: str = ""):
         self.cache = PlanCache(cache_capacity)
+        # cluster identity: stamped on published cache entries and on
+        # flight-recorder dumps; "" for a standalone server
+        self.replica_id = replica_id
+        # the compiled-bucket list of the last prewarm (list of
+        # {"n", "cost", "max_batch", "backend"}): the cluster ships THIS
+        # to peer replicas (``prewarm_from_manifest``) so they compile
+        # the same buckets without re-deriving the gating logic
+        self.prewarm_manifest: "list[dict]" = []
         # the layer-granular fragment tier (cross-request incremental
         # planning) — independent of the whole-plan cache, so a bench
         # can measure pure fragment reuse with the plan cache off
@@ -230,13 +243,19 @@ class PlanServer:
         arrives — kills the cold-bucket p99 spike of the first seconds
         of serving (serve_bench's cold-latency row).  Respects the
         router's lane ceilings (tiny-``n`` and past-ceiling requests
-        never reach the fused engine).  No-op for a host-engine server.
+        never reach the fused engine).  No-op for a host-engine server
+        (but the manifest still records the requested buckets, so a
+        host replica can hand a fused peer a meaningful manifest).
+
+        Every call appends the bucket list it covered to
+        ``self.prewarm_manifest`` (dedup by ``(n, cost)``) — the
+        cluster's cross-replica prewarm ships that manifest, not the
+        compile work.
         """
         pol = self.solver.policy
-        if pol.engine != "fused":
-            return {"compiled": 0, "seconds": 0.0}
         cfg = self.router.config
         total = {"compiled": 0, "seconds": 0.0}
+        seen = {(e["n"], e["cost"]) for e in self.prewarm_manifest}
         for cost in costs:
             for n in sorted(set(ns)):
                 if n < 2:
@@ -264,6 +283,13 @@ class PlanServer:
                 backend = "pallas" if (cost == "max"
                                        and self.solver._use_pallas(n)) \
                     else "xla"
+                if (n, cost) not in seen:
+                    seen.add((n, cost))
+                    self.prewarm_manifest.append(
+                        {"n": int(n), "cost": cost,
+                         "max_batch": int(max_b), "backend": backend})
+                if pol.engine != "fused":
+                    continue                  # manifest only, no compile
                 warm_costs = (cost,)
                 if self.enable_layer_cache and cost in ("max", "cap"):
                     # the layer cache routes seed-carrying solves onto
@@ -279,6 +305,22 @@ class PlanServer:
                                        shards=self.solver._shards(n))
                 total["compiled"] += r["compiled"]
                 total["seconds"] += r["seconds"]
+        return total
+
+    def prewarm_from_manifest(self, manifest: "list[dict]") -> dict:
+        """Prewarm from a peer replica's ``prewarm_manifest``: group the
+        shipped buckets by cost and replay them through ``prewarm`` (the
+        local policy re-derives batch sizes/backends, so a manifest from
+        a differently-configured peer still warms the buckets THIS
+        server would use)."""
+        by_cost: "dict[str, list[int]]" = {}
+        for e in manifest:
+            by_cost.setdefault(str(e["cost"]), []).append(int(e["n"]))
+        total = {"compiled": 0, "seconds": 0.0}
+        for cost, ns in sorted(by_cost.items()):
+            r = self.prewarm(ns, costs=(cost,))
+            total["compiled"] += r["compiled"]
+            total["seconds"] += r["seconds"]
         return total
 
     # ------------------------------------------------------- single entry
@@ -398,19 +440,30 @@ class PlanServer:
     async def plan_async(self, q: QueryGraph, card: np.ndarray,
                          cost: str = "max",
                          latency_budget: "float | None" = None,
-                         slo: "str | None" = None) -> PlanResponse:
+                         slo: "str | None" = None,
+                         connected: bool = False,
+                         explain: bool = False,
+                         tenant: "str | None" = None,
+                         req_id: int = 0) -> PlanResponse:
         """Awaitable single-request entry over the async runtime.
         Concurrent callers share the scheduler: their misses batch
         together, duplicates coalesce, and cache hits overtake in-flight
         solves.  Raises a typed ``faults.PlanError`` (``ShedError``,
         ``QuarantinedError``, ``EngineError``...) if the request cannot
         be answered."""
+        req = PlanRequest(q=q, card=np.asarray(card, np.float64),
+                          cost=cost, latency_budget=latency_budget,
+                          slo=slo, connected=connected, explain=explain,
+                          tenant=tenant, req_id=req_id)
+        return await self.plan_request_async(req)
+
+    async def plan_request_async(self, req: PlanRequest) -> PlanResponse:
+        """``plan_async`` over an already-built ``PlanRequest`` (the
+        network front end decodes one off the wire and submits it
+        verbatim, ``req_id``/``tenant`` included)."""
         import asyncio
 
         rt = self.async_runtime()
-        req = PlanRequest(q=q, card=np.asarray(card, np.float64),
-                          cost=cost, latency_budget=latency_budget,
-                          slo=slo)
         ticket = rt.submit(req)
         while not ticket.done:
             rt.poll()

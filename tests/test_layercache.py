@@ -32,6 +32,7 @@ from repro.core.querygraph import (chain, clique, make_cardinalities,
 from repro.service import (PlanRequest, PlanServer, RuntimeConfig,
                            VirtualClock, WorkloadSpec, make_workload)
 from repro.service import faults
+from repro.service import layercache as layercache_mod
 from repro.service.batch import BatchPolicy
 from repro.service.canon import canonicalize
 from repro.service.layercache import LayerCache
@@ -326,3 +327,150 @@ def test_quarantine_ttl_boundary_half_open():
     assert qt.expired == 1
     assert not qt.active("k")                 # and the entry is gone
     assert qt.snapshot()["live"] == 0
+
+
+# ---------------------------------------------- persistence (save/load)
+def _populated_cache():
+    """A cache holding one search fragment and chain(6)'s n+1 value
+    fragments — both store kinds, heterogeneous fragment lengths."""
+    lc = LayerCache()
+    qm = clique(6)
+    card_m = make_cardinalities(qm, seed=21)
+    form_m = canonicalize(qm, card_m)
+    cold_m = _solve(form_m.q, form_m.card, "max")
+    lc.observe(form_m, "max", cold_m.cost, cold_m.meta)
+    qo = chain(6)
+    card_o = make_cardinalities(qo, seed=22)
+    form_o = canonicalize(qo, card_o)
+    cold_o = _solve(form_o.q, form_o.card, "out")
+    lc.observe(form_o, "out", cold_o.cost, cold_o.meta,
+               dp=cold_o.meta["dp_table"])
+    return lc, form_m, form_o
+
+
+def test_save_load_roundtrip_replays_both_fragment_kinds(tmp_path):
+    lc, form_m, form_o = _populated_cache()
+    path = str(tmp_path / "layers.npz")
+    saved = lc.save(path)
+    assert saved == len(lc) > 1
+
+    lc2 = LayerCache()
+    assert lc2.load(path) == saved
+    assert len(lc2) == len(lc)
+    # search fragments replay exactly
+    assert lc2.seed_for(form_m, "max") == lc.seed_for(form_m, "max")
+    # value fragments replay bitwise, heterogeneous lengths intact
+    a = lc.seed_for(form_o, "out")
+    b = lc2.seed_for(form_o, "out")
+    assert a is not None and b is not None
+    assert np.array_equal(a["ok"], b["ok"])
+    assert a["vals"][a["ok"]].tobytes() == b["vals"][b["ok"]].tobytes()
+    # loading on top of live entries counts only NEW keys
+    assert lc.load(path) == 0
+
+
+def test_load_is_best_effort_on_missing_version_and_corruption(tmp_path):
+    lc, _, _ = _populated_cache()
+    path = str(tmp_path / "layers.npz")
+    lc.save(path)
+
+    assert LayerCache().load(str(tmp_path / "nope.npz")) == 0
+    # version mismatch: well-formed archive, wrong stamp
+    with np.load(path) as z:
+        stale = {k: z[k] for k in z.files}
+    stale["version"] = np.int64(layercache_mod.STORE_VERSION + 1)
+    vpath = str(tmp_path / "stale.npz")
+    np.savez_compressed(vpath, **stale)
+    assert LayerCache().load(vpath) == 0
+    # truncated/garbage file
+    cpath = tmp_path / "corrupt.npz"
+    cpath.write_bytes(open(path, "rb").read()[:40])
+    assert LayerCache().load(str(cpath)) == 0
+    (tmp_path / "text.npz").write_text("not an archive")
+    assert LayerCache().load(str(tmp_path / "text.npz")) == 0
+    # inconsistent internal shapes (search keys/vals disagree)
+    bad = dict(stale)
+    bad["version"] = np.int64(layercache_mod.STORE_VERSION)
+    bad["search_vals"] = np.zeros(len(bad["search_keys"]) + 3)
+    bpath = str(tmp_path / "bad.npz")
+    np.savez_compressed(bpath, **bad)
+    assert LayerCache().load(bpath) == 0
+
+
+def test_load_respects_configured_capacities(tmp_path):
+    lc = LayerCache()
+    for s in range(3):
+        q = chain(6)
+        card = make_cardinalities(q, seed=300 + s)
+        form = canonicalize(q, card)
+        cold = _solve(form.q, form.card, "out")
+        lc.observe(form, "out", cold.cost, cold.meta,
+                   dp=cold.meta["dp_table"])
+    path = str(tmp_path / "layers.npz")
+    saved = lc.save(path)
+    assert saved > 4
+    small = LayerCache(value_capacity=4)
+    small.load(path)
+    assert len(small._values) == 4
+
+
+# ------------------------------------------------- admission heuristic
+def test_admission_gate_stops_one_off_topologies():
+    """A signature whose probes never hit stops inserting after
+    ``admission_min_probes`` — ad-hoc shapes can't churn the LRU."""
+    lc = LayerCache(admission_min_probes=4, admission_floor=0.5)
+    forms = []
+    for s in range(5):
+        q = clique(5)
+        card = make_cardinalities(q, seed=400 + s)
+        forms.append(canonicalize(q, card))
+    sig = forms[0].signature
+    assert all(f.signature == sig for f in forms)   # one topology class
+    # 3 probes, all misses: history below min_probes still admits
+    for f in forms[:3]:
+        assert lc.seed_for(f, "max") is None
+    cold = _solve(forms[0].q, forms[0].card, "max")
+    lc.observe(forms[0], "max", cold.cost, cold.meta)
+    assert lc.stats.search_inserts == 1
+    assert lc.stats.admission_skips == 0
+    # the 4th all-miss probe crosses min_probes at hit rate 1/4 < 0.5:
+    # the gate closes
+    assert lc.seed_for(forms[3], "max") is None
+    before = lc.stats.search_inserts
+    cold4 = _solve(forms[3].q, forms[3].card, "max")
+    lc.observe(forms[3], "max", cold4.cost, cold4.meta)
+    assert lc.stats.search_inserts == before        # nothing inserted
+    assert lc.stats.admission_skips == 1
+    assert lc.seed_for(forms[4], "max") is None     # and nothing leaks
+
+
+def test_admission_gate_keeps_paying_topologies_and_can_be_disabled():
+    lc = LayerCache(admission_min_probes=4, admission_floor=0.5)
+    q = chain(6)
+    card = make_cardinalities(q, seed=500)
+    form = canonicalize(q, card)
+    assert lc.seed_for(form, "max") is None
+    cold = _solve(form.q, form.card, "max")
+    lc.observe(form, "max", cold.cost, cold.meta)
+    # repeats hit: the signature's history is 1 miss + 5 hits, so the
+    # gate stays open past min_probes and later inserts still land
+    for _ in range(5):
+        assert lc.seed_for(form, "max") is not None
+    card2 = make_cardinalities(q, seed=501)
+    form2 = canonicalize(q, card2)
+    assert form2.signature == form.signature
+    cold2 = _solve(form2.q, form2.card, "max")
+    lc.observe(form2, "max", cold2.cost, cold2.meta)
+    assert lc.stats.search_inserts == 2
+    assert lc.stats.admission_skips == 0
+    # admission_min_probes <= 0 disables the gate outright
+    off = LayerCache(admission_min_probes=0, admission_floor=0.5)
+    for s in range(6):
+        qq = clique(5)
+        cc = make_cardinalities(qq, seed=600 + s)
+        ff = canonicalize(qq, cc)
+        assert off.seed_for(ff, "max") is None
+        sol = _solve(ff.q, ff.card, "max")
+        off.observe(ff, "max", sol.cost, sol.meta)
+    assert off.stats.search_inserts == 6
+    assert off.stats.admission_skips == 0

@@ -1,0 +1,294 @@
+"""Wire-protocol tests (``repro.service.net``).
+
+The codec contract is **bit-exactness**: every ``PlanRequest`` /
+``PlanResponse`` / ``PlanError`` survives encode -> json -> decode with
+identical bytes in every float, ndarray, tree and route — the cluster's
+cross-replica parity gate diffs plan costs across replicas, so the
+codec must never launder a double through decimal.  Also covered: the
+``ReplicaState`` op dispatch (including the shared-cache tier's
+``cache_put`` coherence rules) and a real asyncio ``NetFrontend`` /
+``NetClient`` socket round trip.
+"""
+import dataclasses
+import json
+import math
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.jointree import JoinTree
+from repro.core.querygraph import chain, make_cardinalities, star
+from repro.service import PlanServer, faults
+from repro.service import net as net_mod
+from repro.service.batch import BatchPolicy
+from repro.service.cache import CachedPlan, PlanCache
+from repro.service.canon import canonicalize
+from repro.service.net import (NetClient, NetFrontend, ReplicaState,
+                               decode_request, decode_response,
+                               encode_request, encode_response)
+from repro.service.router import Route
+from repro.service.server import PlanRequest, PlanResponse
+
+
+def _host_server() -> PlanServer:
+    return PlanServer(enable_batch=False,
+                      batch_policy=BatchPolicy(engine="host"))
+
+
+def _json(v):
+    """The actual wire boundary: through the JSON text format."""
+    return json.loads(json.dumps(v))
+
+
+# ----------------------------------------------------------------- codec
+@settings(max_examples=200, deadline=None)
+@given(st.floats(min_value=-1e300, max_value=1e300))
+def test_codec_floats_bit_exact(x):
+    y = net_mod._dec(_json(net_mod._enc(x)))
+    assert isinstance(y, float)
+    assert x.hex() == y.hex()           # bitwise
+
+
+def test_codec_float_special_values_bit_exact():
+    for x in (float("inf"), float("-inf"), -0.0, 0.0, 5e-324,
+              2.2250738585072014e-308, 1.7976931348623157e308,
+              1 / 3, -1e-17):
+        y = net_mod._dec(_json(net_mod._enc(x)))
+        assert x.hex() == y.hex(), x
+    nan = net_mod._dec(_json(net_mod._enc(float("nan"))))
+    assert isinstance(nan, float) and math.isnan(nan)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 40), st.integers(0, 2 ** 32 - 1),
+       st.sampled_from(["float64", "float32", "int32", "uint64"]))
+def test_codec_ndarray_bit_exact(size, seed, dtype):
+    rng = np.random.default_rng(seed)
+    scale = 1e18 if np.dtype(dtype).kind == "f" else 2e9
+    a = (rng.random(size) * scale).astype(dtype)
+    b = net_mod._dec(_json(net_mod._enc(a)))
+    assert b.dtype == a.dtype and b.shape == a.shape
+    assert a.tobytes() == b.tobytes()
+
+
+def test_codec_containers_trees_graphs_routes():
+    q = chain(5)
+    tree = JoinTree(0b11111, JoinTree(0b00111, JoinTree(0b011),
+                                      JoinTree(0b100)), JoinTree(0b11000))
+    route = Route(cost="max", method="dpconv", lane="batch",
+                  params=(("engine", "host"),), reason="test")
+    v = {"t": (1, 2.5, "x"), "tree": tree, "q": q, "route": route,
+         "nested": {"inf": float("inf"), "neg0": -0.0},
+         "list": [1, (2, 3)]}
+    out = net_mod._dec(_json(net_mod._enc(v)))
+    assert out["t"] == (1, 2.5, "x") and isinstance(out["t"], tuple)
+    assert out["tree"] == tree
+    assert out["q"] == q
+    assert out["route"] == route
+    assert out["nested"]["inf"] == float("inf")
+    assert math.copysign(1.0, out["nested"]["neg0"]) == -1.0
+    assert out["list"] == [1, (2, 3)]
+
+
+def test_codec_nonstring_and_dunder_keys_round_trip():
+    v = {(6, "max"): 3, 1: "one"}
+    out = net_mod._dec(_json(net_mod._enc(v)))
+    assert out == v
+    dunder = {"__f__": "not-a-float"}
+    assert net_mod._dec(_json(net_mod._enc(dunder))) == dunder
+
+
+def test_codec_unencodable_raises():
+    with pytest.raises(TypeError):
+        net_mod._enc(object())
+
+
+def test_error_taxonomy_round_trips_every_subclass():
+    reg = net_mod._error_registry()
+    assert len(reg) >= 8          # the seeded taxonomy + the net errors
+    assert "net" in reg and "replica_dead" in reg
+    for code, cls in reg.items():
+        err = cls("boom", detail=(1, 2.5), arr=np.arange(3.0))
+        back = net_mod.decode_error(_json(net_mod.encode_error(err)))
+        assert type(back) is cls
+        assert back.code == code and "boom" in str(back)
+        assert back.context["detail"] == (1, 2.5)
+        assert back.context["arr"].tobytes() == np.arange(3.0).tobytes()
+
+
+def test_request_round_trip_bit_exact():
+    q = star(6)
+    card = make_cardinalities(q, seed=3)
+    req = PlanRequest(q=q, card=card, cost="cap", latency_budget=0.25,
+                      arrival=1.5, req_id=42, slo="interactive",
+                      connected=True, explain=True, tenant="acme")
+    back = decode_request(_json(encode_request(req)))
+    for f in dataclasses.fields(PlanRequest):
+        a, b = getattr(req, f.name), getattr(back, f.name)
+        if f.name == "card":
+            assert a.tobytes() == b.tobytes() and a.dtype == b.dtype
+        else:
+            assert a == b, f.name
+
+
+def test_response_round_trip_including_error_payload():
+    srv = _host_server()
+    q = chain(6)
+    card = make_cardinalities(q, seed=1)
+    resp = srv.plan_one(q, card, cost="max", explain=True)
+    back = decode_response(_json(encode_response(resp)))
+    assert float(back.cost).hex() == float(resp.cost).hex()
+    assert back.tree == resp.tree
+    assert back.route == resp.route
+    assert back.status == resp.status == "exact"
+    assert back.explain["lane"] == resp.explain["lane"]
+    # typed-error responses carry the error through the codec
+    err_resp = PlanResponse(req_id=7, cost=float("inf"), tree=None,
+                            meta={"shed": "over quota"}, route=None,
+                            cache_hit=False, status="error",
+                            error=faults.ShedError("over quota",
+                                                   tenant="acme"))
+    back = decode_response(_json(encode_response(err_resp)))
+    assert isinstance(back.error, faults.ShedError)
+    assert back.error.context["tenant"] == "acme"
+    assert back.cost == float("inf") and back.status == "error"
+
+
+# --------------------------------------------------------- replica state
+def test_replica_state_ping_stats_manifest_and_unknown_op():
+    srv = _host_server()
+    state = ReplicaState(srv, replica_id="rA")
+    assert state.handle({"op": "ping"}) == {"ok": True, "replica": "rA"}
+    srv.prewarm([6], costs=("max",))
+    out = state.handle({"op": "manifest"})
+    assert out["ok"] and out["manifest"] == srv.prewarm_manifest
+    assert state.handle({"op": "stats"})["ok"]
+    bad = state.handle({"op": "no_such_op"})
+    assert not bad["ok"]
+    assert isinstance(net_mod.decode_error(bad["error"]),
+                      faults.PlanError)
+
+
+def test_cache_put_coherence_rules():
+    """Only exact plans enter; an existing exact entry never gets
+    clobbered; local-origin publishes are re-tagged with the sender."""
+    srv = _host_server()
+    state = ReplicaState(srv, replica_id="rA")
+    q = chain(6)
+    card = make_cardinalities(q, seed=2)
+    form = canonicalize(q, card)
+    solver = _host_server()
+    resp = solver.plan_one(q, card, cost="max")
+    frame = net_mod.cache_put_frame(form, "max", resp, sender="rB")
+    key = tuple(net_mod._dec(frame["key"]))
+
+    out = state.handle(_json(frame))
+    assert out["ok"] and out["inserted"]
+    entry = srv.cache.peek(key)
+    assert entry is not None and entry.origin == "rB"
+    assert entry.status == "exact"
+    assert float(entry.cost).hex() == float(resp.cost).hex()
+    # second publish: first-solve-wins, the exact entry stays
+    out = state.handle(_json(frame))
+    assert out["ok"] and not out["inserted"]
+    # a degraded plan is refused outright
+    degraded = dataclasses.replace(resp, status="degraded")
+    assert net_mod.cache_put_frame(form, "max", degraded,
+                                   sender="rB") is None
+    bad = _json(frame)
+    bad["plan"]["status"] = "degraded"
+    out = state.handle(bad)
+    assert out["ok"] and not out["inserted"]
+    # the publish is a genuine cluster-wide hit: any isomorph hits it
+    again = srv.plan_one(q, card, cost="max")
+    assert again.cache_hit
+    assert srv.cache.stats.cross_hits >= 1
+
+
+def test_cache_get_round_trips_published_plan():
+    srv = _host_server()
+    state = ReplicaState(srv, replica_id="rA")
+    q = chain(6)
+    card = make_cardinalities(q, seed=4)
+    form = canonicalize(q, card)
+    resp = _host_server().plan_one(q, card, cost="max")
+    frame = net_mod.cache_put_frame(form, "max", resp, sender="rB")
+    state.handle(_json(frame))
+    out = state.handle(_json({"op": "cache_get", "key": frame["key"]}))
+    plan = net_mod.decode_plan(out["plan"])
+    assert isinstance(plan, CachedPlan)
+    assert float(plan.cost).hex() == float(resp.cost).hex()
+    miss_key = net_mod._enc(tuple(PlanCache.make_key("nope", "max",
+                                                     "dpconv")))
+    out = state.handle(_json({"op": "cache_get", "key": miss_key}))
+    assert out["ok"] and out["plan"] is None
+
+
+def test_layer_store_ops_round_trip(tmp_path):
+    srv = _host_server()
+    # populate the fragment store through a real solve
+    q = chain(7)
+    srv.plan_one(q, make_cardinalities(q, seed=5), cost="max")
+    state = ReplicaState(srv, replica_id="rA")
+    path = str(tmp_path / "layers.npz")
+    out = state.handle({"op": "save_layers", "path": path})
+    assert out["ok"] and out["saved"] >= 1
+    srv2 = _host_server()
+    out2 = ReplicaState(srv2).handle({"op": "load_layers", "path": path})
+    assert out2["ok"] and out2["loaded"] == out["saved"]
+
+
+# ------------------------------------------------- asyncio socket round trip
+def _serve_in_thread(srv):
+    """Run a NetFrontend on an ephemeral port in a daemon thread."""
+    import asyncio
+
+    fe = NetFrontend(srv, replica_id="rT")
+    started = threading.Event()
+    box = {}
+
+    def run():
+        async def main():
+            box["port"] = await fe.start()
+            started.set()
+            await fe.serve_forever()
+
+        asyncio.run(main())
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    assert started.wait(30)
+    return fe, box["port"], t
+
+
+def test_net_frontend_client_plan_and_shutdown():
+    srv = _host_server()
+    fe, port, t = _serve_in_thread(srv)
+    client = NetClient("127.0.0.1", port, timeout_s=30.0)
+    try:
+        assert client.ping()["replica"] == "rT"
+        q = chain(6)
+        card = make_cardinalities(q, seed=6)
+        req = PlanRequest(q=q, card=card, cost="max", req_id=9)
+        resp = client.plan(req)
+        ref = _host_server().plan_one(q, card, cost="max")
+        assert float(resp.cost).hex() == float(ref.cost).hex()
+        assert resp.tree == ref.tree and resp.status == "exact"
+        # malformed frames answer an error frame, not a dropped socket
+        with client._lock:
+            client._sock.sendall(b"this is not json\n")
+            line = client._file.readline()
+        out = json.loads(line)
+        assert not out["ok"]
+        assert isinstance(net_mod.decode_error(out["error"]),
+                          faults.NetworkError)
+        # the connection still serves after the bad frame
+        assert client.ping()["replica"] == "rT"
+    finally:
+        client.call({"op": "shutdown"})
+        client.close()
+        t.join(timeout=30)
+    assert not t.is_alive()

@@ -394,3 +394,167 @@ def test_connected_cap_runtime_bucket_separation():
     assert float(t_conn.response.cost) >= float(t_plain.response.cost)
     dc = t_conn.span.find("dispatch")
     assert dc.attrs["engine_tag"].endswith("cap_conn")
+
+
+# ---------------------------------------------- head sampling (tracer)
+def test_tracer_sample_rate_validation():
+    with pytest.raises(ValueError):
+        Tracer(VirtualClock(), sample_rate=1.5)
+    with pytest.raises(ValueError):
+        Tracer(VirtualClock(), sample_rate=-0.1)
+
+
+def test_tracer_head_sampling_deterministic_even_spread():
+    """sample_rate=f traces exactly floor(k*f) of the first k requests,
+    counter-based — two tracers agree bit-for-bit, no RNG."""
+
+    def pattern(rate, n):
+        tr = Tracer(VirtualClock(), sample_rate=rate)
+        picks = []
+        for _ in range(n):
+            root = tr.request()
+            picks.append(root is not NULL_SPAN)
+            tr.finish(root)
+        return tr, picks
+
+    tr, picks = pattern(0.25, 100)
+    assert sum(picks) == 25
+    assert tr.sampled == 25 and tr.sampled_out == 75
+    assert tr.stats()["sampled"] == 25
+    assert tr.stats()["sampled_out"] == 75
+    assert tr.open_spans == 0 and tr.unclosed_spans == 0
+    assert picks == pattern(0.25, 100)[1]       # deterministic replay
+    # rate 1.0 never samples out; rate 0.0 never traces
+    tr_all, picks_all = pattern(1.0, 20)
+    assert all(picks_all) and tr_all.sampled_out == 0
+    tr_none, picks_none = pattern(0.0, 20)
+    assert not any(picks_none) and tr_none.sampled == 0
+    assert tr_none.spans_opened == 0
+
+
+def test_runtime_sampling_keeps_incident_capture_unconditional():
+    """trace_sample=0 hands every request NULL_SPAN, yet sheds still
+    land on the flight recorder — sampling can never hide incidents."""
+    srv = PlanServer()
+    clk = VirtualClock()
+    cfg = RuntimeConfig(trace_sample=0.0, slo_classes={
+        "strict": SLOClass("strict", 1e-9, "refuse")})
+    rt = srv.make_runtime(clock=clk, config=cfg, duration_fn=_dur)
+    reqs = _reqs()
+    served = shed = 0
+    for r in reqs[:8]:
+        strict = r.__class__(**{**r.__dict__, "slo": "strict"})
+        t = rt.submit(strict)
+        shed += 1 if t.refused else 0
+        assert t.span is NULL_SPAN
+    rt.drain()
+    assert shed > 0
+    assert rt.tracer.sampled == 0
+    assert rt.tracer.sampled_out == 8
+    assert rt.tracer.spans_opened == 0
+    assert rt.recorder.counts["shed"] == shed
+    # sampled-out incidents carry no span payload, but full info
+    assert all(i["span"] is None for i in rt.recorder.incidents)
+    assert all(i["info"] for i in rt.recorder.incidents)
+
+
+def test_runtime_sampling_traces_exact_fraction():
+    srv, clk, rt = _mk(trace_sample=0.5)
+    for r in _reqs()[:12]:
+        rt.submit(r)
+    rt.drain()
+    st = rt.tracer.stats()
+    assert st["requests"] == 12
+    assert st["sampled"] == 6 and st["sampled_out"] == 6
+    assert st["open_spans"] == 0 and st["unclosed_spans"] == 0
+    # the recorder sees exactly the traced completions
+    assert rt.recorder.counts["completed"] == 6
+
+
+# -------------------------------------------------- obs_tail CLI (merge)
+def _obs_tail():
+    import importlib.util
+    import os
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "scripts", "obs_tail.py")
+    spec = importlib.util.spec_from_file_location("obs_tail", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _dump_replica(tmp_path, rid, t0, n_completed, n_shed):
+    clk = VirtualClock()
+    clk.advance(t0)
+    rec = FlightRecorder()
+    tr = Tracer(clk, recorder=rec)
+    for i in range(n_completed):
+        clk.advance(0.5)
+        root = tr.request(req_id=f"{rid}-{i}")
+        child = root.child("solve")
+        clk.advance(0.010)
+        child.close()
+        tr.finish(root)
+    bare = Tracer(clk)                   # spans for incidents only:
+    for i in range(n_shed):              # no recorder, so no double
+        clk.advance(0.5)                 # "completed" counting
+        root = bare.request(req_id=f"{rid}-shed-{i}")
+        root.close()
+        rec.incident("shed", root, req_id=f"{rid}-shed-{i}",
+                     tenant="noisy")
+    path = tmp_path / f"flight_{rid}.jsonl"
+    rec.dump_jsonl(str(path), replica=rid)
+    return str(path)
+
+
+def test_obs_tail_merges_tags_and_orders_multi_replica_dumps(tmp_path):
+    ot = _obs_tail()
+    p0 = _dump_replica(tmp_path, "r0", t0=0.00, n_completed=3, n_shed=1)
+    p1 = _dump_replica(tmp_path, "r1", t0=0.25, n_completed=2, n_shed=2)
+    recs = ot.merge_records([p0, p1])
+    assert len(recs) == 8
+    assert {r["replica"] for r in recs} == {"r0", "r1"}
+    # global timestamp order, interleaved across replicas
+
+    def at(r):
+        return r.get("at") if r.get("at") is not None \
+            else r["span"]["t0"]
+
+    assert [at(r) for r in recs] == sorted(at(r) for r in recs)
+    assert {r["replica"] for r in recs[:2]} == {"r0", "r1"}
+    summary = ot.summarize(recs)
+    assert summary["records"] == 8
+    assert summary["kinds"] == {"completed": 5, "shed": 3}
+    assert summary["replicas"]["r0"] == {"completed": 3, "shed": 1}
+    assert summary["replicas"]["r1"] == {"completed": 2, "shed": 2}
+    assert summary["phases"]["solve"]["count"] == 5
+    assert summary["phases"]["solve"]["p50_ms"] == pytest.approx(
+        10.0, rel=1e-6)
+    line = ot.format_line(recs[-1])
+    assert "shed" in line and "tenant=noisy" in line and "t=" in line
+
+
+def test_obs_tail_untagged_dump_falls_back_to_filename_stem(tmp_path):
+    ot = _obs_tail()
+    rec = FlightRecorder()
+    rec.incident("error", None, req_id="x")
+    path = tmp_path / "flight_r9.jsonl"
+    rec.dump_jsonl(str(path))               # no replica tag
+    (tmp_path / "flight_bad.jsonl").write_text(
+        "not json\n\n" + "\n".join(rec.dump_jsonl()) + "\n")
+    recs = ot.load_records(str(path))
+    assert recs and all(r["replica"] == "r9" for r in recs)
+    # malformed lines are skipped, valid ones still load
+    bad = ot.load_records(str(tmp_path / "flight_bad.jsonl"))
+    assert len(bad) == 1 and bad[0]["replica"] == "bad"
+
+
+def test_obs_tail_main_kind_filter_and_summary(tmp_path, capsys):
+    ot = _obs_tail()
+    p0 = _dump_replica(tmp_path, "r0", t0=0.0, n_completed=2, n_shed=2)
+    assert ot.main([p0, "--kinds", "shed"]) == 0
+    out = capsys.readouterr().out.strip().splitlines()
+    assert len(out) == 2 and all("shed" in ln for ln in out)
+    assert ot.main([p0, "--summary"]) == 0
+    summary = json.loads(capsys.readouterr().out)
+    assert summary["kinds"] == {"completed": 2, "shed": 2}

@@ -1,0 +1,262 @@
+"""Tenant SLO-quota tests (``repro.service.tenancy``).
+
+Both halves of the isolation layer are deterministic by construction —
+token refill and priority aging read the injected ``Clock`` only, and
+the client-side ceilings use an arithmetic (counter-based) rate
+limiter — so every test here replays bit-identically.  Covers: quota
+validation, bucket spend/refill/burst-cap, shed-vs-downgrade policy,
+one-promotion-per-aging-window starvation relief, the deny-rate EWMA
+that feeds the client ceilings, ``AdmissionCeilings`` clamping and
+even-spread pass decisions, and the runtime integration: an over-quota
+tenant is shed/downgraded while an in-quota tenant's promised-deadline
+traffic stays unharmed on the same stream.
+"""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.querygraph import chain, make_cardinalities
+from repro.service import (PlanServer, ReplicaState, RuntimeConfig,
+                           SLOClass, VirtualClock, faults)
+from repro.service.batch import BatchPolicy
+from repro.service.server import PlanRequest
+from repro.service.tenancy import (AdmissionCeilings, QuotaBoard,
+                                   TenantQuota)
+
+
+# ------------------------------------------------------------- quotas
+def test_quota_validation():
+    q = TenantQuota("t", rate=2.0)
+    assert q.burst == 8.0 and q.on_exceed == "shed" and q.aging_s is None
+    with pytest.raises(ValueError):
+        TenantQuota("t", rate=0.0)
+    with pytest.raises(ValueError):
+        TenantQuota("t", rate=1.0, burst=0.5)
+    with pytest.raises(ValueError):
+        TenantQuota("t", rate=1.0, on_exceed="throttle")
+    with pytest.raises(ValueError):
+        TenantQuota("t", rate=1.0, aging_s=0.0)
+
+
+def test_bucket_spends_burst_then_sheds():
+    clk = VirtualClock()
+    board = QuotaBoard(clk, {"t": TenantQuota("t", rate=1.0, burst=3.0)})
+    assert [board.admit("t") for _ in range(5)] \
+        == ["admit"] * 3 + ["shed"] * 2
+    st_ = board.stats["t"]
+    assert st_.admitted == 3 and st_.shed == 2 and st_.decisions == 5
+
+
+def test_bucket_refills_at_rate_and_caps_at_burst():
+    clk = VirtualClock()
+    board = QuotaBoard(clk, {"t": TenantQuota("t", rate=2.0, burst=4.0)})
+    for _ in range(4):
+        board.admit("t")
+    assert board.admit("t") == "shed"
+    clk.advance(1.0)                       # refill 2.0 tokens
+    assert [board.admit("t") for _ in range(3)] \
+        == ["admit", "admit", "shed"]
+    clk.advance(1000.0)                    # refill clamps at burst
+    assert [board.admit("t") for _ in range(5)] \
+        == ["admit"] * 4 + ["shed"]
+
+
+def test_downgrade_policy_and_unmetered_tenants():
+    clk = VirtualClock()
+    board = QuotaBoard(clk, {"t": TenantQuota("t", rate=1.0, burst=1.0,
+                                              on_exceed="downgrade")})
+    assert board.admit("t") == "admit"
+    assert board.admit("t") == "downgrade"
+    assert board.stats["t"].downgraded == 1
+    # tenants without a quota are unmetered: always admitted, untracked
+    assert all(board.admit("free-rider") == "admit" for _ in range(50))
+    assert board.deny_rate("free-rider") == 0.0
+
+
+def test_aging_promotes_exactly_one_request_per_window():
+    clk = VirtualClock()
+    # rate low enough that the aging window cannot refill a token
+    board = QuotaBoard(clk, {"t": TenantQuota("t", rate=0.01, burst=1.0,
+                                              aging_s=5.0)})
+    assert board.admit("t") == "admit"
+    assert board.admit("t") == "shed"      # starvation clock starts
+    clk.advance(5.0)
+    assert board.admit("t") == "promote"   # aged past the empty bucket
+    # the window restarts: the backlog does NOT flood through
+    assert board.admit("t") == "shed"
+    clk.advance(5.0)
+    assert board.admit("t") == "promote"
+    st_ = board.stats["t"]
+    assert st_.promoted == 2 and st_.shed == 2 and st_.admitted == 1
+    # an ordinary admit resets the starvation clock entirely
+    clk.advance(200.0)
+    assert board.admit("t") == "admit"
+    clk.advance(4.0)
+    board.admit("t")
+    clk.advance(4.0)                       # 8s denied total, but the
+    assert board.admit("t") != "promote"   # window restarted on admit
+
+
+def test_deny_ewma_feeds_snapshot():
+    clk = VirtualClock()
+    board = QuotaBoard(clk, {"t": TenantQuota("t", rate=1.0, burst=1.0)},
+                       ewma_alpha=0.2)
+    board.admit("t")                       # admit: ewma 0.0
+    assert board.deny_rate("t") == 0.0
+    board.admit("t")                       # deny:  0.8*0 + 0.2
+    assert board.deny_rate("t") == pytest.approx(0.2)
+    board.admit("t")                       # deny:  0.8*0.2 + 0.2
+    assert board.deny_rate("t") == pytest.approx(0.36)
+    board.record_served("t")
+    snap = board.snapshot()
+    assert snap["tenants"]["t"]["deny_rate"] == pytest.approx(0.36)
+    assert snap["tenants"]["t"]["served"] == 1
+    assert snap["quotas"]["t"]["rate"] == 1.0
+
+
+@settings(max_examples=25)
+@given(st.integers(1, 6), st.integers(1, 30), st.integers(0, 2 ** 20))
+def test_quota_board_decisions_replay_bit_identical(rate, n, salt):
+    """Same quota + same clock script -> the same decision stream."""
+
+    def run():
+        clk = VirtualClock()
+        board = QuotaBoard(clk, {"t": TenantQuota(
+            "t", rate=float(rate), burst=2.0, aging_s=3.0)})
+        out = []
+        for i in range(n):
+            clk.advance(((salt >> (i % 16)) & 3) * 0.25)
+            out.append(board.admit("t"))
+        return out, board.snapshot()
+
+    assert run() == run()
+
+
+# ----------------------------------------------------------- ceilings
+def test_ceiling_floor_validation_and_clamping():
+    with pytest.raises(ValueError):
+        AdmissionCeilings(floor=0.0)
+    with pytest.raises(ValueError):
+        AdmissionCeilings(floor=1.5)
+    c = AdmissionCeilings(floor=0.25)
+    assert c.ceiling("t") == 1.0           # unknown tenant: wide open
+    c.update("t", 1.7)                     # deny rate clamps to 1.0
+    assert c.ceiling("t") == 0.25          # ... then floors
+    c.update("t", -0.3)                    # clamps to 0.0
+    assert c.ceiling("t") == 1.0
+
+
+def test_ceiling_half_passes_every_other_request():
+    c = AdmissionCeilings()
+    c.update("t", 0.5)
+    assert [c.admit("t") for _ in range(8)] \
+        == [False, True, False, True, False, True, False, True]
+    assert c.client_shed == 4
+    assert c.snapshot() == {"ceilings": {"t": 0.5}, "client_shed": 4}
+
+
+def test_ceiling_none_and_full_open_consume_no_counters():
+    c = AdmissionCeilings()
+    assert all(c.admit(None) for _ in range(10))
+    c.update("open", 0.0)
+    assert all(c.admit("open") for _ in range(10))
+    assert c.client_shed == 0 and c._seen == {}
+
+
+@settings(max_examples=50)
+@given(st.integers(1, 99), st.integers(1, 200))
+def test_ceiling_pass_rate_matches_fraction_exactly(pct, n):
+    """The counter-based limiter admits exactly floor(n * f) of the
+    first n requests — the even-spread arithmetic never drifts."""
+    f = pct / 100.0
+    c = AdmissionCeilings(floor=0.01)
+    c.update("t", 1.0 - f)
+    passed = sum(c.admit("t") for _ in range(n))
+    assert passed == int(n * max(0.01, f))
+
+
+# ------------------------------------------------- runtime integration
+def _tenant_runtime(quotas, slo_classes=None):
+    clk = VirtualClock()
+    srv = PlanServer(enable_batch=False,
+                     batch_policy=BatchPolicy(engine="host"))
+    rt = srv.make_runtime(
+        clock=clk,
+        config=RuntimeConfig(max_batch=1, slo_classes=slo_classes or {},
+                             tenant_quotas=quotas),
+        duration_fn=lambda kind, info: 1e-3)
+    return clk, srv, ReplicaState(srv, replica_id="t0", runtime=rt), rt
+
+
+def test_runtime_isolates_in_quota_tenant_from_noisy_neighbors():
+    """The bench's tenant gate in miniature: one shedding and one
+    downgrading over-quota tenant hammer the runtime while a paid
+    tenant's promised-deadline traffic rides along — the paid tenant
+    must lose nothing."""
+    quotas = {"free": TenantQuota("free", rate=2.0, burst=2.0),
+              "trial": TenantQuota("trial", rate=2.0, burst=2.0,
+                                   on_exceed="downgrade")}
+    clk, srv, state, rt = _tenant_runtime(
+        quotas, {"interactive": SLOClass("interactive", 1.0)})
+    outcomes = {"free": [], "trial": [], "paid": []}
+    for i in range(30):
+        clk.advance(0.05)
+        tenant = ("free", "trial", "paid")[i % 3]
+        q = chain(5)
+        # unique cardinalities per request: a cache hit answers exactly
+        # even for a downgrade decision (it costs the cluster nothing),
+        # so repeats would mask the best-effort path this test asserts
+        req = PlanRequest(
+            q=q, card=make_cardinalities(q, seed=100 + i), cost="max",
+            req_id=i, tenant=tenant, arrival=clk.now(),
+            slo="interactive" if tenant == "paid" else None)
+        resp = state.plan_sync(req)
+        outcomes[tenant].append(resp)
+    free = outcomes["free"]
+    shed = [r for r in free if r.status == "error"]
+    assert shed and all(isinstance(r.error, faults.ShedError)
+                        for r in shed)
+    trial = outcomes["trial"]
+    assert any(r.status == "degraded" for r in trial)
+    assert all(r.status != "error" for r in trial)   # served, best-effort
+    paid = outcomes["paid"]
+    assert all(r.status == "exact" for r in paid)
+    klass = rt.stats.per_class.get("interactive")
+    assert klass is not None and klass.served == len(paid)
+    assert klass.deadline_misses == 0
+    assert klass.shed == 0
+    # the board's deny rates surface through the runtime snapshot the
+    # cluster client's refresh_ceilings consumes
+    assert rt.quotas.deny_rate("free") > 0.0
+    assert rt.quotas.deny_rate("paid") == 0.0
+
+
+def test_runtime_promotes_starved_tenant_via_aging():
+    quotas = {"slow": TenantQuota("slow", rate=0.01, burst=1.0,
+                                  aging_s=1.0)}
+    clk, srv, state, rt = _tenant_runtime(
+        quotas, {"standard": SLOClass("standard", 10.0)})
+    q = chain(5)
+    card = make_cardinalities(q, seed=0)
+
+    def ask(i):
+        return state.plan_sync(PlanRequest(
+            q=q, card=card, cost="max", req_id=i, tenant="slow",
+            arrival=clk.now()))
+
+    assert ask(0).status == "exact"        # spends the only token
+    clk.advance(0.01)
+    assert ask(1).status == "error"        # bucket empty -> shed
+    clk.advance(1.5)                       # starve past aging_s
+    promoted = ask(2)
+    assert promoted.status == "exact"      # aged past the empty bucket
+    assert rt.quotas.stats["slow"].promoted == 1
+    # the promoted request adopted a deadline (the standard class's)
+    # and the deadline machinery served it without a miss
+    assert rt.stats.deadline_misses == 0
+    # one promotion per aging window: the next request sheds again
+    clk.advance(0.01)
+    assert ask(3).status == "error"
+    assert rt.quotas.stats["slow"].promoted == 1
